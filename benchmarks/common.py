@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time in microseconds (after one warmup)."""
+    fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,64 @@
+"""§Roofline report generator: reads results/dryrun_*.json and prints the
+per-(arch x shape) table with the three roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio, and a what-would-move-it-down note."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+NOTES = {
+    "compute": "more chips or lower-precision matmuls; compute-bound is the "
+               "good end state",
+    "memory": "fuse/attend in VMEM (flash), shard activations (seq-parallel),"
+              " cut optimizer bytes (bf16 moments already on)",
+    "collective": "matching-gossip schedule instead of all-gather, chunked "
+                  "coupling, coupling every k steps, bf16 wire dtype",
+}
+
+
+def load(path="results/dryrun_1pod.json"):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records, file=sys.stdout):
+    w = file.write
+    w("arch,shape,devices,compute_s,memory_s,collective_s,dominant,"
+      "model_gflops,hlo_gflops_total,useful_ratio,fits_hbm\n")
+    for r in sorted(records, key=lambda r: (r.get("arch", ""),
+                                            r.get("shape", ""))):
+        if not r.get("ok"):
+            w(f"{r.get('arch')},{r.get('shape')},,,,,FAILED:"
+              f"{r.get('error','?')},,,,\n")
+            continue
+        if "roofline" not in r:   # compile-proof-only record (multi-pod)
+            gb = (r.get("argument_size_in_bytes", 0)
+                  + r.get("temp_size_in_bytes", 0)) / 1e9
+            w(f"{r.get('arch')},{r.get('shape')},{r.get('n_devices')},"
+              f",,,compile-ok,,,,{'yes' if gb <= 16 else f'NO({gb:.1f}GB)'}\n")
+            continue
+        roof = r["roofline"]
+        hbm_need = (r.get("argument_size_in_bytes", 0)
+                    + r.get("temp_size_in_bytes", 0)) / 1e9
+        fits = "yes" if hbm_need <= 16.0 else f"NO({hbm_need:.1f}GB)"
+        w(f"{r['arch']},{r['shape']},{r['n_devices']},"
+          f"{roof['compute_s']:.4f},{roof['memory_s']:.4f},"
+          f"{roof['collective_s']:.4f},{roof['dominant']},"
+          f"{r.get('model_flops', 0)/1e9:.0f},"
+          f"{r.get('cost_flops', 0)*r['n_devices']/1e9:.0f},"
+          f"{r.get('useful_flop_ratio', 0):.3f},{fits}\n")
+
+
+def main(fast: bool = True):
+    for path in ("results/dryrun_1pod.json", "results/dryrun_2pod.json"):
+        if os.path.exists(path):
+            print(f"== {path} ==")
+            table(load(path))
+        else:
+            print(f"roofline,{path},missing (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main(fast=False)

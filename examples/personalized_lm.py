@@ -1,0 +1,92 @@
+"""End-to-end driver (deliverable b): train personalized ~100M-param LMs for
+a few hundred steps with graph coupling, comparing coupling modes.
+
+8 agents on a random geometric graph; each agent's data comes from its own
+2-gram token process (neighbors share structure). The run shows the paper's
+central claim at LM scale: MP/CL coupling beats solitary training, while a
+consensus model underfits the personalized distributions.
+
+Run (CPU, ~10-20 min full / ~2 min with --tiny):
+  PYTHONPATH=src python examples/personalized_lm.py [--tiny] [--steps N]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import random_geometric_graph
+from repro.coupling import CouplingConfig, make_state
+from repro.data import PersonalizedLMConfig, personalized_token_stream
+from repro.models import Model, ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, train_loop, save_checkpoint
+
+
+def model_config(tiny: bool) -> ModelConfig:
+    if tiny:
+        return ModelConfig(name="plm-tiny", family="dense", n_layers=2,
+                           d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                           vocab_size=256, attn_impl="ref", remat=False)
+    # ~100M params: 12L x 512 with 32k vocab
+    return ModelConfig(name="plm-100m", family="dense", n_layers=12,
+                       d_model=512, n_heads=8, n_kv_heads=4, d_ff=1536,
+                       vocab_size=32768, attn_impl="ref", remat=False)
+
+
+def run(mode: str, args, graph, batches, model):
+    tcfg = TrainConfig(
+        n_agents=args.agents, steps=args.steps,
+        optimizer=AdamWConfig(lr=1e-3, weight_decay=0.01),
+        coupling=CouplingConfig(mode=mode, alpha=0.995, mu=0.02, every=4),
+        log_every=max(args.steps // 10, 1))
+    cstate = make_state(graph, np.ones(args.agents), tcfg.coupling.alpha)
+    t0 = time.time()
+    state, hist = train_loop(model, tcfg, cstate, batches,
+                             log=lambda s: print(f"  [{mode}] {s}"))
+    if args.ckpt:
+        save_checkpoint(state, f"{args.ckpt}/{mode}", args.steps)
+    return hist[-1]["loss"], time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--modes", default="none,consensus,mp,cl")
+    args = ap.parse_args()
+    if args.tiny:
+        args.steps = min(args.steps, 40)
+
+    cfg = model_config(args.tiny)
+    model = Model(cfg)
+    print(f"model: {cfg.name} ({model.param_count()/1e6:.1f}M params), "
+          f"{args.agents} agents, {args.steps} steps")
+    graph = random_geometric_graph(args.agents, k=3, seed=0)
+    lm = PersonalizedLMConfig(vocab_size=cfg.vocab_size,
+                              n_agents=args.agents, seq_len=args.seq,
+                              batch_per_agent=args.batch, seed=0)
+    stream = personalized_token_stream(lm, graph)
+    raw = [next(stream) for _ in range(args.steps)]
+    B = args.agents * args.batch
+    batches = [{"tokens": b[..., :-1].reshape(B, args.seq),
+                "labels": b[..., 1:].reshape(B, args.seq)} for b in raw]
+
+    results = {}
+    for mode in args.modes.split(","):
+        loss, dt = run(mode, args, graph, batches, model)
+        results[mode] = loss
+        print(f"{mode:10s} final loss {loss:.4f}  ({dt:.0f}s)")
+    print("\nsummary (lower = better personalization):")
+    for mode, loss in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"  {mode:10s} {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving demo: batched decode with slot-based continuous batching.
+
+Trains nothing — initializes a small model, submits a mixed batch of
+variable-length prompts, and decodes with the split-KV cache engine.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.models import Model, ModelConfig
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=512, attn_impl="ref", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {model.param_count()/1e6:.2f}M params")
+
+    eng = Engine(model, params,
+                 ServeConfig(batch_size=4, cache_len=128, max_new_tokens=24,
+                             temperature=0.7, seed=0))
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = [eng.submit(rng.integers(0, cfg.vocab_size, (l,)))
+            for l in (9, 17, 5, 30, 12, 3, 21, 8)]
+    print(f"submitted {len(rids)} requests into 4 slots")
+    results = eng.run()
+    dt = time.time() - t0
+    total_toks = sum(len(v) for v in results.values())
+    for rid in rids:
+        toks = results[rid]
+        print(f" req {rid}: {len(toks)} tokens -> {toks[:10]}...")
+    print(f"{total_toks} tokens in {dt:.1f}s "
+          f"({total_toks/dt:.1f} tok/s, CPU, batched)")
+
+
+if __name__ == "__main__":
+    main()

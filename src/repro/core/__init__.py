@@ -1,0 +1,15 @@
+"""Core: the paper's algorithms (model propagation + collaborative ADMM)."""
+
+from .graph import (Graph, gaussian_kernel_graph, angular_kernel_graph,
+                    knn_graph_from_similarity, two_moons, ring_graph,
+                    random_geometric_graph)
+from .losses import (AgentData, pad_datasets, quadratic_loss, hinge_loss,
+                     logistic_loss, solitary_mean, solitary_gd,
+                     confidences_from_counts, total_loss, LOSSES)
+from .model_propagation import (closed_form, synchronous, async_gossip,
+                                mp_objective, label_propagation, AsyncTrace)
+from .collaborative import (cl_objective, direct_minimize, init_state,
+                            async_admm, sync_admm, ADMMState, CLTrace)
+from .consensus import consensus_model, consensus_mean
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,312 @@
+"""Collaborative Learning via decentralized ADMM (paper §4 + App. D).
+
+Objective:
+    Q_CL(Theta) = sum_{i<j} W_ij ||theta_i - theta_j||^2
+                  + mu * sum_i D_ii L_i(theta_i)
+
+Partial-consensus reformulation (paper Eq. 8): each agent i keeps local
+copies Theta_tilde_i of its own and its neighbors' models; per edge
+e = (i, j) there are 4 secondary variables and 4 duals.
+
+Data layout (dense, mask = W > 0):
+    T[i, j]      = Theta_tilde_i^j   — agent i's copy of model j  (n, n, p);
+                   live entries: j in N_i u {i}
+    Z_own[i, j]  = Z_{e i}^{i}  — agent i's secondary var for ITS OWN model
+                   on edge (i,j)
+    Z_nbr[i, j]  = Z_{e i}^{j}  — agent i's secondary var for j's model
+    L_own[i, j]  = Lambda_{e i}^{i},   L_nbr[i, j] = Lambda_{e i}^{j}
+
+The constraint set C_E (Z_{ei}^i = Z_{ej}^i etc.) reads
+    Z_own[i, j] == Z_nbr[j, i]  for every edge — maintained by construction
+by the Z update (paper step 2).
+
+Primal step (paper step 1): exact closed form for the quadratic loss
+(block elimination — see ``_primal_quadratic``), K subgradient steps for
+hinge (§4.2: "ADMM is typically robust to approximate solutions").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .losses import AgentData, LOSSES
+
+
+def cl_objective(theta, W, mu, loss_fn, data: AgentData):
+    """Q_CL for per-agent models theta (n, p)."""
+    W = jnp.asarray(W)
+    diff = theta[:, None, :] - theta[None, :, :]
+    smooth = 0.5 * jnp.sum(W * jnp.sum(diff * diff, axis=-1))  # sum_{i<j}
+    D = jnp.sum(W, axis=1)
+    per_agent = jax.vmap(loss_fn)(theta, data.x, data.y, data.mask)
+    return smooth + mu * jnp.sum(D * per_agent)
+
+
+def direct_minimize(graph: Graph, data: AgentData, mu: float, loss: str,
+                    steps: int = 2000, lr: float = None) -> jnp.ndarray:
+    """Centralized gradient descent on Q_CL — oracle for tests/benchmarks."""
+    loss_fn = LOSSES[loss]
+    W = jnp.asarray(graph.W, jnp.float32)
+    n, _, p = data.x.shape
+    if lr is None:
+        # conservative: smoothness term has Lipschitz ~ 4 max_i D_ii
+        lr = 0.5 / float(4.0 * graph.degrees.max() * max(mu, 1.0) + 1.0)
+    obj = lambda th: cl_objective(th, W, mu, loss_fn, data)
+    grad = jax.grad(obj)
+
+    def step(th, _):
+        return th - lr * grad(th), None
+
+    theta, _ = jax.lax.scan(step, jnp.zeros((n, p)), None, length=steps)
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# ADMM state
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ADMMState:
+    T: jnp.ndarray       # (n, n, p)
+    Z_own: jnp.ndarray   # (n, n, p)
+    Z_nbr: jnp.ndarray   # (n, n, p)
+    L_own: jnp.ndarray   # (n, n, p)
+    L_nbr: jnp.ndarray   # (n, n, p)
+
+    def models(self) -> jnp.ndarray:
+        n = self.T.shape[0]
+        return self.T[jnp.arange(n), jnp.arange(n)]
+
+
+def init_state(graph: Graph, theta_sol) -> ADMMState:
+    """Warm start (paper §4.2): share solitary models with neighbors."""
+    n = graph.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    p = theta_sol.shape[1]
+    adj = jnp.asarray((graph.W > 0) | np.eye(n, dtype=bool))
+    T = jnp.where(adj[:, :, None], jnp.broadcast_to(theta_sol[None], (n, n, p)),
+                  0.0).astype(jnp.float32)
+    edge = jnp.asarray(graph.W > 0)
+    Z_own = jnp.where(edge[:, :, None],
+                      jnp.broadcast_to(theta_sol[:, None], (n, n, p)), 0.0)
+    Z_nbr = jnp.where(edge[:, :, None],
+                      jnp.broadcast_to(theta_sol[None], (n, n, p)), 0.0)
+    zeros = jnp.zeros((n, n, p), jnp.float32)
+    return ADMMState(T, Z_own.astype(jnp.float32), Z_nbr.astype(jnp.float32),
+                     zeros, zeros)
+
+
+# ---------------------------------------------------------------------------
+# Primal updates
+# ---------------------------------------------------------------------------
+
+
+def _primal_quadratic(state: ADMMState, l, W, D, mask, mu, rho, data: AgentData):
+    """Exact argmin of L_rho^l for the quadratic loss, by block elimination.
+
+    Stationarity for neighbor blocks j in N_l:
+        (W_lj + rho) T^j  =  W_lj T^l + rho Z_nbr[l,j] - L_nbr[l,j]
+    Substituting into the self block gives a scalar equation per coordinate.
+    L_l(theta) = sum_k ||theta - x_k||^2  =>  grad = 2 (m_l theta - sum_k x_k).
+    """
+    w = W[l] * mask[l]                             # (n,)
+    b = rho * state.Z_nbr[l] - state.L_nbr[l]      # (n, p)
+    m_l = jnp.sum(data.mask[l])
+    sx = jnp.sum(data.x[l] * data.mask[l][:, None], axis=0)   # (p,)
+    denom_j = jnp.where(mask[l], w + rho, 1.0)
+    n_nbrs = jnp.sum(mask[l])
+    a = (D[l] + 2.0 * mu * D[l] * m_l + rho * n_nbrs
+         - jnp.sum(jnp.where(mask[l], w * w / denom_j, 0.0)))
+    rhs = (2.0 * mu * D[l] * sx
+           + jnp.sum(jnp.where(mask[l][:, None],
+                               rho * state.Z_own[l] - state.L_own[l], 0.0), axis=0)
+           + jnp.sum(jnp.where(mask[l][:, None], (w[:, None] * b) / denom_j[:, None],
+                               0.0), axis=0))
+    theta_l = rhs / a
+    theta_js = (w[:, None] * theta_l[None, :] + b) / denom_j[:, None]
+    new_row = jnp.where(mask[l][:, None], theta_js, state.T[l])
+    new_row = new_row.at[l].set(theta_l)
+    return state.T.at[l].set(new_row)
+
+
+def _primal_subgrad(state: ADMMState, l, W, D, mask, mu, rho,
+                    data: AgentData, loss: str, k_steps: int, lr: float):
+    """K (sub)gradient steps on L_rho^l over the row T[l] (hinge etc.)."""
+    loss_fn = LOSSES[loss]
+    w = W[l] * mask[l]
+    mrow = mask[l][:, None]
+
+    def lagrangian(row):
+        theta_l = row[l]
+        smooth = 0.5 * jnp.sum(w * jnp.sum((theta_l[None] - row) ** 2, axis=-1))
+        local = mu * D[l] * loss_fn(theta_l, data.x[l], data.y[l], data.mask[l])
+        lin = jnp.sum(mrow * (state.L_own[l] * (theta_l[None] - state.Z_own[l])
+                              + state.L_nbr[l] * (row - state.Z_nbr[l])))
+        quad = 0.5 * rho * jnp.sum(
+            mrow * ((theta_l[None] - state.Z_own[l]) ** 2
+                    + (row - state.Z_nbr[l]) ** 2))
+        return smooth + local + lin + quad
+
+    grad = jax.grad(lagrangian)
+
+    def gd(row, _):
+        return row - lr * grad(row), None
+
+    row, _ = jax.lax.scan(gd, state.T[l], None, length=k_steps)
+    # keep non-live entries untouched
+    live = mask[l][:, None] | (jnp.arange(row.shape[0]) == l)[:, None]
+    row = jnp.where(live, row, state.T[l])
+    return state.T.at[l].set(row)
+
+
+# ---------------------------------------------------------------------------
+# Z / Lambda updates for one edge (paper steps 2-3), both endpoints
+# ---------------------------------------------------------------------------
+
+
+def _edge_zl_update(state: ADMMState, i, j, rho) -> ADMMState:
+    T, Z_own, Z_nbr, L_own, L_nbr = (state.T, state.Z_own, state.Z_nbr,
+                                     state.L_own, state.L_nbr)
+    # Z for model i on edge e: owned by i as Z_own[i,j], by j as Z_nbr[j,i]
+    z_i = 0.5 * ((L_own[i, j] + L_nbr[j, i]) / rho + T[i, i] + T[j, i])
+    # Z for model j on edge e: owned by j as Z_own[j,i], by i as Z_nbr[i,j]
+    z_j = 0.5 * ((L_own[j, i] + L_nbr[i, j]) / rho + T[j, j] + T[i, j])
+    Z_own = Z_own.at[i, j].set(z_i).at[j, i].set(z_j)
+    Z_nbr = Z_nbr.at[i, j].set(z_j).at[j, i].set(z_i)
+    # dual updates
+    L_own = L_own.at[i, j].add(rho * (T[i, i] - z_i))
+    L_own = L_own.at[j, i].add(rho * (T[j, j] - z_j))
+    L_nbr = L_nbr.at[i, j].add(rho * (T[i, j] - z_j))
+    L_nbr = L_nbr.at[j, i].add(rho * (T[j, i] - z_i))
+    return ADMMState(T, Z_own, Z_nbr, L_own, L_nbr)
+
+
+def _all_zl_update(state: ADMMState, mask, rho) -> ADMMState:
+    """Synchronous Z + dual update for ALL edges at once (App. D steps 2-3)."""
+    T, Z_own, Z_nbr, L_own, L_nbr = (state.T, state.Z_own, state.Z_nbr,
+                                     state.L_own, state.L_nbr)
+    n = T.shape[0]
+    diag = T[jnp.arange(n), jnp.arange(n)]                    # (n, p) own models
+    # For ordered pair (i, j): z_own_new[i,j] = Z for model i on edge (i,j)
+    #   = 1/2 [ (L_own[i,j] + L_nbr[j,i]) / rho + T[i,i] + T[j,i] ]
+    z_own_new = 0.5 * ((L_own + jnp.swapaxes(L_nbr, 0, 1)) / rho
+                       + diag[:, None, :] + jnp.swapaxes(T, 0, 1))
+    z_nbr_new = jnp.swapaxes(z_own_new, 0, 1)
+    m3 = mask[:, :, None]
+    Z_own_n = jnp.where(m3, z_own_new, Z_own)
+    Z_nbr_n = jnp.where(m3, z_nbr_new, Z_nbr)
+    L_own_n = jnp.where(m3, L_own + rho * (diag[:, None, :] - Z_own_n), L_own)
+    L_nbr_n = jnp.where(m3, L_nbr + rho * (T - Z_nbr_n), L_nbr)
+    return ADMMState(T, Z_own_n, Z_nbr_n, L_own_n, L_nbr_n)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CLTrace:
+    theta_hist: np.ndarray   # (n_records, n, p)
+    comms_hist: np.ndarray   # cumulative pairwise communications
+    final: "ADMMState"
+
+
+def _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr):
+    if loss == "quadratic":
+        return lambda st, l: _primal_quadratic(st, l, W, D, mask, mu, rho, data)
+    return lambda st, l: _primal_subgrad(st, l, W, D, mask, mu, rho, data,
+                                         loss, k_steps, lr)
+
+
+def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
+               loss: str = "quadratic", steps: int = 1000, seed: int = 0,
+               record_every: int = 50, k_steps: int = 10, lr: float = 0.05,
+               theta_sol=None, state: Optional[ADMMState] = None) -> CLTrace:
+    """Asynchronous decentralized ADMM (paper §4.2).
+
+    One scan step = one wake-up: agent i (uniform) picks neighbor j ~ pi_i
+    (uniform over N_i), both primal-update, edge (i,j)'s Z and duals update.
+    = 2 pairwise communications per step (i->j and j->i messages).
+    """
+    n = graph.n
+    W = jnp.asarray(graph.W, jnp.float32)
+    D = jnp.asarray(graph.degrees, jnp.float32)
+    mask = jnp.asarray(graph.W > 0)
+    pi_cdf = jnp.cumsum(jnp.asarray(graph.neighbor_distribution(), jnp.float32),
+                        axis=1)
+    if state is None:
+        if theta_sol is None:
+            raise ValueError("need theta_sol (warm start) or explicit state")
+        state = init_state(graph, theta_sol)
+    primal = _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr)
+
+    def tick(st: ADMMState, key):
+        ki, kj = jax.random.split(key)
+        i = jax.random.randint(ki, (), 0, n)
+        u = jax.random.uniform(kj)
+        j = jnp.clip(jnp.searchsorted(pi_cdf[i], u, side="right"), 0, n - 1)
+        T = primal(st, i)
+        st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
+        T = primal(st, j)
+        st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
+        return _edge_zl_update(st, i, j, rho)
+
+    n_rec = max(1, steps // record_every)
+
+    @jax.jit
+    def run(state, key):
+        def outer(st, key):
+            keys = jax.random.split(key, record_every)
+            st = jax.lax.scan(lambda s, k: (tick(s, k), None), st, keys)[0]
+            return st, st.models()
+        keys = jax.random.split(key, n_rec)
+        return jax.lax.scan(outer, state, keys)
+
+    final, hist = run(state, jax.random.PRNGKey(seed))
+    comms = 2 * record_every * (np.arange(n_rec) + 1)
+    return CLTrace(np.asarray(hist), comms, final)
+
+
+def sync_admm(graph: Graph, data: AgentData, mu: float, rho: float,
+              loss: str = "quadratic", steps: int = 100,
+              k_steps: int = 10, lr: float = 0.05,
+              theta_sol=None, state: Optional[ADMMState] = None) -> CLTrace:
+    """Synchronous decentralized ADMM (paper App. D).
+
+    One iteration = every agent primal-updates, then all Z/dual updates;
+    costs 2|E| pairwise communications.
+    """
+    n = graph.n
+    W = jnp.asarray(graph.W, jnp.float32)
+    D = jnp.asarray(graph.degrees, jnp.float32)
+    mask = jnp.asarray(graph.W > 0)
+    if state is None:
+        if theta_sol is None:
+            raise ValueError("need theta_sol (warm start) or explicit state")
+        state = init_state(graph, theta_sol)
+    primal = _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr)
+
+    @jax.jit
+    def run(state):
+        def it(st, _):
+            def body(l, s):
+                T = primal(s, l)
+                return ADMMState(T, s.Z_own, s.Z_nbr, s.L_own, s.L_nbr)
+            st = jax.lax.fori_loop(0, n, body, st)
+            st = _all_zl_update(st, mask, rho)
+            return st, st.models()
+        return jax.lax.scan(it, state, None, length=steps)
+
+    final, hist = run(state)
+    comms = 2 * len(graph.edges()) * (np.arange(steps) + 1)
+    return CLTrace(np.asarray(hist), comms, final)

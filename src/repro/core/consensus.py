@@ -1,0 +1,45 @@
+"""Global consensus baseline (paper Eq. 2): one model for everyone.
+
+This is the objective solved by classic decentralized optimization
+(Nedic & Ozdaglar 2009, Duchi et al. 2012, ...) and — at TPU scale — by
+standard data-parallel training with gradient all-reduce. The paper's §5.2
+shows it performs very poorly when agents have heterogeneous objectives;
+we reproduce that, and the framework exposes it as ``coupling="consensus"``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .losses import AgentData, LOSSES
+
+
+@partial(jax.jit, static_argnames=("loss", "steps"))
+def consensus_model(data: AgentData, loss: str = "hinge", steps: int = 500,
+                    lr: float = 0.05, l2: float = 1e-4) -> jnp.ndarray:
+    """Minimize sum_i L_i(theta) over a single shared theta."""
+    loss_fn = LOSSES[loss]
+    n, _, p = data.x.shape
+    total = jnp.maximum(jnp.sum(data.mask), 1.0)
+
+    def obj(theta):
+        per_agent = jax.vmap(lambda x, y, m: loss_fn(theta, x, y, m))(
+            data.x, data.y, data.mask)
+        return jnp.sum(per_agent) / total + 0.5 * l2 * jnp.sum(theta * theta)
+
+    grad = jax.grad(obj)
+
+    def step(theta, _):
+        return theta - lr * grad(theta), None
+
+    theta, _ = jax.lax.scan(step, jnp.zeros(p), None, length=steps)
+    return theta
+
+
+def consensus_mean(data: AgentData) -> jnp.ndarray:
+    """Closed form for the quadratic loss: the global mean of all samples."""
+    s = jnp.sum(data.x * data.mask[..., None], axis=(0, 1))
+    return s / jnp.maximum(jnp.sum(data.mask), 1.0)

@@ -1,0 +1,219 @@
+"""Similarity graphs over agents (paper §2.1, §5).
+
+A graph is represented by its dense symmetric nonnegative weight matrix
+``W`` (n x n, zero diagonal). Derived quantities:
+
+* ``D`` (degree diagonal), ``P = D^{-1} W`` (stochastic similarity matrix),
+* neighbor sets / uniform neighbor-selection distributions ``pi_i``,
+* greedy edge-colorings into *matchings* — the structured-gossip schedule
+  used by the TPU-scale coupling layer (DESIGN.md §2).
+
+Everything here is plain numpy/jnp; graphs are small (n = #agents).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Weighted undirected graph over ``n`` agents."""
+
+    W: np.ndarray  # (n, n) symmetric, nonnegative, zero diagonal
+
+    def __post_init__(self):
+        W = np.asarray(self.W, dtype=np.float64)
+        if W.ndim != 2 or W.shape[0] != W.shape[1]:
+            raise ValueError(f"W must be square, got {W.shape}")
+        if not np.allclose(W, W.T):
+            raise ValueError("W must be symmetric")
+        if (W < 0).any():
+            raise ValueError("W must be nonnegative")
+        object.__setattr__(self, "W", W * (1.0 - np.eye(W.shape[0])))
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.W.sum(axis=1)
+
+    @property
+    def D(self) -> np.ndarray:
+        return np.diag(self.degrees)
+
+    @property
+    def P(self) -> np.ndarray:
+        """Stochastic similarity matrix P = D^{-1} W (paper Prop. 1)."""
+        d = self.degrees
+        if (d <= 0).any():
+            raise ValueError("graph has an isolated agent (zero degree)")
+        return self.W / d[:, None]
+
+    @property
+    def laplacian(self) -> np.ndarray:
+        return self.D - self.W
+
+    def edges(self) -> List[Tuple[int, int]]:
+        """Undirected edges (i < j) with positive weight."""
+        iu, ju = np.nonzero(np.triu(self.W, k=1))
+        return list(zip(iu.tolist(), ju.tolist()))
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.W[i])[0]
+
+    def neighbor_distribution(self) -> np.ndarray:
+        """Uniform neighbor-selection distributions pi_i (paper §3.2).
+
+        Returns (n, n) row-stochastic matrix with pi[i, j] > 0 iff j in N_i.
+        """
+        A = (self.W > 0).astype(np.float64)
+        deg = A.sum(axis=1)
+        if (deg <= 0).any():
+            raise ValueError("graph has an isolated agent")
+        return A / deg[:, None]
+
+    def is_connected(self) -> bool:
+        n = self.n
+        seen = np.zeros(n, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            i = stack.pop()
+            for j in self.neighbors(i):
+                if not seen[j]:
+                    seen[j] = True
+                    stack.append(int(j))
+        return bool(seen.all())
+
+    def edge_coloring(self) -> List[List[Tuple[int, int]]]:
+        """Greedy proper edge coloring -> list of matchings covering E.
+
+        Each matching is a set of vertex-disjoint edges: the agent pairs that
+        can gossip *simultaneously* without conflicts. Misra–Gries would give
+        <= Delta+1 colors; greedy gives <= 2*Delta-1 which is fine here
+        (n = #agents is small, and only coverage/disjointness matter).
+        """
+        matchings: List[List[Tuple[int, int]]] = []
+        # sort for determinism: heaviest edges first
+        es = sorted(self.edges(), key=lambda e: -self.W[e[0], e[1]])
+        used: List[set] = []
+        for (i, j) in es:
+            placed = False
+            for color, busy in enumerate(used):
+                if i not in busy and j not in busy:
+                    matchings[color].append((i, j))
+                    busy.add(i)
+                    busy.add(j)
+                    placed = True
+                    break
+            if not placed:
+                matchings.append([(i, j)])
+                used.append({i, j})
+        return matchings
+
+
+# ---------------------------------------------------------------------------
+# Graph constructors used by the paper's experiments
+# ---------------------------------------------------------------------------
+
+
+def gaussian_kernel_graph(points: np.ndarray, sigma: float = 0.1,
+                          threshold: float = 0.0) -> Graph:
+    """Complete graph with W_ij = exp(-||v_i - v_j||^2 / (2 sigma^2)).
+
+    Used in the mean-estimation task (paper §5.1) over 2-D auxiliary vectors.
+    ``threshold`` zeroes negligible weights (paper §5.2 'edges with negligible
+    weights are ignored').
+    """
+    v = np.asarray(points, dtype=np.float64)
+    sq = ((v[:, None, :] - v[None, :, :]) ** 2).sum(-1)
+    W = np.exp(-sq / (2.0 * sigma ** 2))
+    np.fill_diagonal(W, 0.0)
+    if threshold > 0:
+        W = np.where(W >= threshold, W, 0.0)
+    return Graph(W)
+
+
+def angular_kernel_graph(models: np.ndarray, sigma: float = 0.1,
+                         threshold: float = 1e-3) -> Graph:
+    """W_ij = exp((cos(phi_ij) - 1)/sigma) over target-model angles (§5.2)."""
+    m = np.asarray(models, dtype=np.float64)
+    norms = np.linalg.norm(m, axis=1, keepdims=True)
+    norms = np.where(norms == 0, 1.0, norms)
+    u = m / norms
+    cos = np.clip(u @ u.T, -1.0, 1.0)
+    W = np.exp((cos - 1.0) / sigma)
+    np.fill_diagonal(W, 0.0)
+    W = np.where(W >= threshold, W, 0.0)
+    # symmetrize exactly (cos is symmetric but thresholding keeps it so)
+    return Graph(np.maximum(W, W.T))
+
+
+def knn_graph_from_similarity(sim: np.ndarray, k: int) -> Graph:
+    """k-nearest-neighbor graph with 0/1 weights (paper App. E).
+
+    Agent i is linked to the k agents with largest similarity; the result is
+    symmetrized (an edge exists if either endpoint selects the other),
+    matching the usual kNN-graph construction.
+    """
+    s = np.asarray(sim, dtype=np.float64).copy()
+    np.fill_diagonal(s, -np.inf)
+    n = s.shape[0]
+    W = np.zeros((n, n))
+    idx = np.argsort(-s, axis=1)[:, :k]
+    rows = np.repeat(np.arange(n), k)
+    W[rows, idx.ravel()] = 1.0
+    W = np.maximum(W, W.T)
+    return Graph(W)
+
+
+def two_moons(n: int, noise: float = 0.05, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Two intertwining moons in R^2 (paper §5.1 / Zhou et al. 2004).
+
+    Returns (points (n,2), labels (n,) in {0,1}) — label 0 = upper moon
+    (mean +1), label 1 = lower moon (mean -1).
+    """
+    rng = np.random.default_rng(seed)
+    n0 = n // 2
+    n1 = n - n0
+    t0 = rng.uniform(0.0, np.pi, n0)
+    t1 = rng.uniform(0.0, np.pi, n1)
+    upper = np.stack([np.cos(t0), np.sin(t0)], axis=1)
+    lower = np.stack([1.0 - np.cos(t1), 0.5 - np.sin(t1)], axis=1)
+    pts = np.concatenate([upper, lower], axis=0)
+    pts += noise * rng.standard_normal(pts.shape)
+    labels = np.concatenate([np.zeros(n0, dtype=int), np.ones(n1, dtype=int)])
+    perm = rng.permutation(n)
+    return pts[perm], labels[perm]
+
+
+def ring_graph(n: int, weight: float = 1.0) -> Graph:
+    """Ring over n agents — default small-agent-count graph at TPU scale."""
+    W = np.zeros((n, n))
+    for i in range(n):
+        W[i, (i + 1) % n] = weight
+        W[(i + 1) % n, i] = weight
+    return Graph(W)
+
+
+def random_geometric_graph(n: int, k: int = 3, seed: int = 0) -> Graph:
+    """kNN graph over random 2-D positions — agent topology generator."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(n, 2))
+    sq = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    return knn_graph_from_similarity(-sq, k)
+
+
+def as_jnp(graph: Graph, dtype=jnp.float32):
+    """(W, P, degrees) as jnp arrays for use inside jitted code."""
+    return (jnp.asarray(graph.W, dtype),
+            jnp.asarray(graph.P, dtype),
+            jnp.asarray(graph.degrees, dtype))

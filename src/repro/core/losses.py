@@ -1,0 +1,146 @@
+"""Convex losses + solitary-model training (paper Eq. 1).
+
+Datasets are padded to a common max size with a boolean mask so that the
+whole agent population can be processed with vmap/scan (agents have widely
+varying m_i by design — that unbalancedness is central to the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AgentData:
+    """Padded per-agent datasets.
+
+    x: (n, m_max, p)   features (for mean estimation p-dim 'features' = samples)
+    y: (n, m_max)      labels (+-1 for classification; unused for mean est.)
+    mask: (n, m_max)   1.0 for real examples, 0.0 for padding
+    """
+
+    x: jnp.ndarray
+    y: jnp.ndarray
+    mask: jnp.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def counts(self) -> jnp.ndarray:
+        return self.mask.sum(axis=1)
+
+
+def pad_datasets(xs, ys=None) -> AgentData:
+    """Stack variable-length per-agent datasets into an AgentData."""
+    n = len(xs)
+    m_max = max(1, max(len(x) for x in xs))
+    p = 1
+    for xi in xs:
+        a = np.asarray(xi)
+        if a.size:
+            p = a.shape[1] if a.ndim > 1 else 1
+            break
+    x = np.zeros((n, m_max, p))
+    y = np.zeros((n, m_max))
+    mask = np.zeros((n, m_max))
+    for i, xi in enumerate(xs):
+        m = len(xi)
+        if m:
+            x[i, :m] = np.asarray(xi, dtype=np.float64).reshape(m, -1)
+            mask[i, :m] = 1.0
+            if ys is not None:
+                y[i, :m] = np.asarray(ys[i], dtype=np.float64)
+    return AgentData(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+                     jnp.asarray(mask, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Losses  l(theta; x, y).  All return the SUM over the local dataset
+# (paper Eq. 1: L_i(theta) = sum_j l(theta; x_j, y_j)).
+# ---------------------------------------------------------------------------
+
+
+def quadratic_loss(theta, x, y, mask):
+    """Mean estimation: l(theta; x) = ||theta - x||^2 (paper §5.1)."""
+    r = theta[None, :] - x
+    return jnp.sum(mask * jnp.sum(r * r, axis=-1))
+
+
+def hinge_loss(theta, x, y, mask):
+    """l(theta; (x,y)) = max(0, 1 - y theta^T x) (paper §5.2)."""
+    margins = 1.0 - y * (x @ theta)
+    return jnp.sum(mask * jnp.maximum(0.0, margins))
+
+
+def logistic_loss(theta, x, y, mask):
+    """log(1 + exp(-y theta^T x)) — extra loss beyond the paper's two."""
+    z = y * (x @ theta)
+    return jnp.sum(mask * jnp.logaddexp(0.0, -z))
+
+
+LOSSES = {"quadratic": quadratic_loss, "hinge": hinge_loss,
+          "logistic": logistic_loss}
+
+
+def total_loss(loss_fn, theta_all, data: AgentData):
+    """Sum_i L_i(theta_i) for per-agent parameters theta_all (n, p)."""
+    per_agent = jax.vmap(loss_fn)(theta_all, data.x, data.y, data.mask)
+    return jnp.sum(per_agent)
+
+
+# ---------------------------------------------------------------------------
+# Solitary models (paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def solitary_mean(data: AgentData) -> jnp.ndarray:
+    """Closed-form solitary model for the quadratic loss: the local mean.
+
+    Agents with m_i = 0 get theta = 0 (their confidence will be ~0, so the
+    value is irrelevant — it is fully overridden by propagation).
+    """
+    cnt = data.counts[:, None]
+    s = jnp.sum(data.x * data.mask[..., None], axis=1)
+    return jnp.where(cnt > 0, s / jnp.maximum(cnt, 1.0), 0.0)
+
+
+@partial(jax.jit, static_argnames=("loss", "steps"))
+def solitary_gd(data: AgentData, loss: str = "hinge", steps: int = 200,
+                lr: float = 0.05, l2: float = 1e-3) -> jnp.ndarray:
+    """Solitary models by (sub)gradient descent on the local loss.
+
+    A small L2 term makes the hinge problem well-posed for tiny m_i
+    (some agents have a single example).
+    """
+    loss_fn = LOSSES[loss]
+    n, _, p = data.x.shape
+
+    def agent_obj(theta, x, y, mask):
+        m = jnp.maximum(jnp.sum(mask), 1.0)
+        return loss_fn(theta, x, y, mask) / m + 0.5 * l2 * jnp.sum(theta * theta)
+
+    grad = jax.grad(agent_obj)
+
+    def step(thetas, _):
+        g = jax.vmap(grad)(thetas, data.x, data.y, data.mask)
+        return thetas - lr * g, None
+
+    theta0 = jnp.zeros((n, p))
+    thetas, _ = jax.lax.scan(step, theta0, None, length=steps)
+    return thetas
+
+
+def confidences_from_counts(counts, floor: float = 1e-3) -> jnp.ndarray:
+    """c_i = m_i / max_j m_j (+ small constant when m_i = 0) — paper §3.1."""
+    counts = jnp.asarray(counts, jnp.float32)
+    c = counts / jnp.maximum(jnp.max(counts), 1.0)
+    return jnp.clip(c, floor, 1.0)

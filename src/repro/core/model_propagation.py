@@ -1,0 +1,177 @@
+"""Model Propagation (paper §3).
+
+Three equivalent solvers for  Q_MP(Theta) =
+    1/2 ( sum_{i<j} W_ij ||theta_i - theta_j||^2
+          + mu sum_i D_ii c_i ||theta_i - theta_i^sol||^2 ):
+
+* ``closed_form``   — Prop. 1:  Theta* = abar (I - abar(I-C) - a P)^{-1} C Theta_sol
+* ``synchronous``   — fixed-point iteration Eq. (5)
+* ``async_gossip``  — the paper's asynchronous gossip algorithm (§3.2),
+                      simulated exactly: uniform agent wake-up, one random
+                      neighbor, communication + update steps, full
+                      Theta_tilde in R^{n x n x p} state (row i = agent i's
+                      knowledge of everyone; only N_i u {i} entries are live).
+
+Convergence of async_gossip in expectation to Theta* is Theorem 1; it is
+validated in tests/test_model_propagation.py and exercised at scale in
+benchmarks/bench_mp_comm.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+
+
+def mp_objective(theta, theta_sol, W, c, mu):
+    """Q_MP — used by tests to verify optimality of the closed form."""
+    W = jnp.asarray(W)
+    diff = theta[:, None, :] - theta[None, :, :]
+    # sum_{i<j} W_ij ||.||^2 == 1/2 sum_{i,j} W_ij ||.||^2 for symmetric W,
+    # and Q_MP carries an outer 1/2 -> 0.25 overall.
+    smooth = 0.25 * jnp.sum(W * jnp.sum(diff * diff, axis=-1))
+    D = jnp.sum(W, axis=1)
+    anchor = 0.5 * mu * jnp.sum(D * c * jnp.sum((theta - theta_sol) ** 2, axis=-1))
+    return smooth + anchor
+
+
+def closed_form(graph: Graph, theta_sol, c, alpha: float) -> jnp.ndarray:
+    """Prop. 1:  Theta* = abar (I - abar(I - C) - alpha P)^{-1} C Theta_sol."""
+    n = graph.n
+    ftype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    P = jnp.asarray(graph.P, ftype)
+    theta_sol = jnp.asarray(theta_sol, ftype).reshape(n, -1)
+    c = jnp.asarray(c, ftype)
+    abar = 1.0 - alpha
+    A = jnp.eye(n) - abar * (jnp.eye(n) - jnp.diag(c)) - alpha * P
+    return abar * jnp.linalg.solve(A, c[:, None] * theta_sol)
+
+
+def synchronous(graph: Graph, theta_sol, c, alpha: float, steps: int,
+                theta0=None) -> jnp.ndarray:
+    """Fixed-point iteration Eq. (5); converges to Theta* for any init."""
+    n = graph.n
+    P = jnp.asarray(graph.P, jnp.float32)
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    c = jnp.asarray(c, jnp.float32)
+    abar = 1.0 - alpha
+    denom = (alpha + abar * c)[:, None]
+    theta = theta_sol if theta0 is None else jnp.asarray(theta0, jnp.float32)
+
+    def step(theta, _):
+        theta = (alpha * (P @ theta) + abar * c[:, None] * theta_sol) / denom
+        return theta, None
+
+    theta, _ = jax.lax.scan(step, theta, None, length=steps)
+    return theta
+
+
+@dataclasses.dataclass
+class AsyncTrace:
+    """Result of the async gossip simulation.
+
+    theta_hist: (n_records, n, p) — each agent's OWN model over time
+    comms_hist: (n_records,)      — cumulative pairwise communications
+    final_knowledge: (n, n, p)    — full Theta_tilde at the end
+    """
+
+    theta_hist: np.ndarray
+    comms_hist: np.ndarray
+    final_knowledge: np.ndarray
+
+
+@partial(jax.jit, static_argnames=("steps", "record_every"))
+def _async_scan(P, pi_cdf, theta_sol, c, alpha, key, steps, record_every,
+                T0):
+    """Exact async gossip (§3.2) as a lax.scan.
+
+    T is (n, n, p): T[i, j] = agent i's knowledge of agent j's model.
+    One scan step = one clock tick = 2 pairwise communications (i->j, j->i).
+    """
+    n, _, p = T0.shape
+    abar = 1.0 - alpha
+
+    def local_update(T, l):
+        """Update step Eq. (6) for agent l using its own knowledge row."""
+        w = P[l]                                  # W_lk / D_ll
+        agg = w @ T[l]                            # (p,)
+        new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
+        return T.at[l, l].set(new)
+
+    def step(carry, key):
+        T = carry
+        ki, kj = jax.random.split(key)
+        i = jax.random.randint(ki, (), 0, n)
+        u = jax.random.uniform(kj)
+        j = jnp.searchsorted(pi_cdf[i], u, side="right").astype(jnp.int32)
+        j = jnp.clip(j, 0, n - 1)
+        # communication step: exchange current self-models
+        T = T.at[i, j].set(T[j, j])
+        T = T.at[j, i].set(T[i, i])
+        # update step for both endpoints
+        T = local_update(T, i)
+        T = local_update(T, j)
+        return T, T[jnp.arange(n), jnp.arange(n)] if record_every == 1 else None
+
+    if record_every == 1:
+        keys = jax.random.split(key, steps)
+        T, hist = jax.lax.scan(step, T0, keys)
+        return T, hist
+
+    # chunked recording: scan over outer records, inner fori over ticks
+    n_rec = steps // record_every
+
+    def outer(T, key):
+        keys = jax.random.split(key, record_every)
+        T, _ = jax.lax.scan(lambda c, k: (step(c, k)[0], None), T, keys)
+        return T, T[jnp.arange(n), jnp.arange(n)]
+
+    keys = jax.random.split(key, n_rec)
+    T, hist = jax.lax.scan(outer, T0, keys)
+    return T, hist
+
+
+def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
+                 seed: int = 0, record_every: int = 100,
+                 theta0=None) -> AsyncTrace:
+    """Run the asynchronous gossip MP algorithm (paper §3.2).
+
+    ``steps`` clock ticks; each tick = 2 pairwise communications.
+    Neighbor selection pi_i is uniform over N_i (as in the paper's §5).
+    """
+    n = graph.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    p = theta_sol.shape[1]
+    P = jnp.asarray(graph.P, jnp.float32)
+    pi = jnp.asarray(graph.neighbor_distribution(), jnp.float32)
+    pi_cdf = jnp.cumsum(pi, axis=1)
+    c = jnp.asarray(c, jnp.float32)
+
+    if theta0 is None:
+        # warm start with solitary models everywhere the agent has knowledge
+        T0 = jnp.where(((graph.W > 0) | np.eye(n, dtype=bool))[:, :, None],
+                       jnp.broadcast_to(theta_sol[None], (n, n, p)), 0.0)
+        T0 = jnp.asarray(T0, jnp.float32)
+    else:
+        T0 = jnp.asarray(theta0, jnp.float32)
+
+    key = jax.random.PRNGKey(seed)
+    T, hist = _async_scan(P, pi_cdf, theta_sol, c, alpha, key, steps,
+                          record_every, T0)
+    n_rec = hist.shape[0]
+    every = 1 if record_every == 1 else record_every
+    comms = 2 * every * (np.arange(n_rec) + 1)
+    return AsyncTrace(np.asarray(hist), comms, np.asarray(T))
+
+
+def label_propagation(graph: Graph, labels, alpha: float) -> jnp.ndarray:
+    """Zhou et al. (2004) — the C = I special case (paper §3.1 remark)."""
+    n = graph.n
+    return closed_form(graph, labels, np.ones(n), alpha)

@@ -1,0 +1,10 @@
+"""Coupling: the paper's algorithms as cross-agent distribution strategies."""
+
+from .strategies import (CouplingConfig, CouplingState, make_coupling,
+                         make_state, mp_matrices, dense_mix_tree,
+                         gossip_mix_tree, consensus_mean_tree,
+                         laplacian_pull_tree)
+
+__all__ = ["CouplingConfig", "CouplingState", "make_coupling", "make_state",
+           "mp_matrices", "dense_mix_tree", "gossip_mix_tree",
+           "consensus_mean_tree", "laplacian_pull_tree"]

@@ -1,0 +1,11 @@
+"""Data pipelines: per-agent synthetic LM streams + the paper's generators."""
+
+from .synthetic import (PersonalizedLMConfig, personalized_token_stream,
+                        make_lm_batches, mean_estimation_problem,
+                        linear_classification_problem, accuracy,
+                        delay_pattern, undelay_pattern)
+
+__all__ = ["PersonalizedLMConfig", "personalized_token_stream",
+           "make_lm_batches", "mean_estimation_problem",
+           "linear_classification_problem", "accuracy", "delay_pattern",
+           "undelay_pattern"]

@@ -1,0 +1,194 @@
+"""Synthetic data generators.
+
+Two tiers (DESIGN.md §3):
+
+* Paper experiments — ``mean_estimation_problem`` (§5.1: two moons auxiliary
+  info, N(+-1, 40) sample streams, c_i ~ U(1/2 +- eps/2), m_i = round(100 c_i))
+  and ``linear_classification_problem`` (§5.2: target models in a 2-D
+  subspace of R^p, angular-kernel graph, m_i ~ U{1..20}, 5% label flips).
+
+* Personalized LM streams — each agent draws tokens from its own 2-gram
+  process; neighboring agents (on the given graph) share most of their
+  transition structure, so graph-coupled training has signal to exploit.
+  This feeds the end-to-end driver (examples/personalized_lm.py).
+
+Also: MusicGen codebook delay pattern utilities (audio arch support).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph, two_moons, gaussian_kernel_graph, \
+    angular_kernel_graph
+from repro.core.losses import AgentData, pad_datasets
+
+
+# ---------------------------------------------------------------------------
+# Paper §5.1 — collaborative mean estimation
+# ---------------------------------------------------------------------------
+
+
+def mean_estimation_problem(n: int = 300, eps: float = 1.0, sigma: float = 0.1,
+                            var: float = 40.0, max_samples: int = 100,
+                            seed: int = 0):
+    """Returns (graph, data, targets, confidences)."""
+    rng = np.random.default_rng(seed)
+    pts, labels = two_moons(n, seed=seed)
+    graph = gaussian_kernel_graph(pts, sigma=sigma)
+    targets = np.where(labels == 0, 1.0, -1.0)
+    c = rng.uniform(0.5 - eps / 2.0, 0.5 + eps / 2.0, n)
+    m = np.maximum(np.rint(c * max_samples).astype(int), 0)
+    xs = [targets[i] + np.sqrt(var) * rng.standard_normal((m[i], 1))
+          for i in range(n)]
+    data = pad_datasets(xs)
+    return graph, data, targets, c
+
+
+# ---------------------------------------------------------------------------
+# Paper §5.2 — collaborative linear classification
+# ---------------------------------------------------------------------------
+
+
+def linear_classification_problem(n: int = 100, p: int = 50,
+                                  sigma: float = 0.1, label_noise: float = 0.05,
+                                  max_train: int = 20, n_test: int = 100,
+                                  seed: int = 0, knn: Optional[int] = None):
+    """Returns (graph, train AgentData, test AgentData, target models)."""
+    rng = np.random.default_rng(seed)
+    targets = np.zeros((n, p))
+    targets[:, :2] = rng.standard_normal((n, 2))
+    if knn is None:
+        graph = angular_kernel_graph(targets, sigma=sigma, threshold=1e-2)
+    else:
+        u = targets / np.linalg.norm(targets, axis=1, keepdims=True)
+        from repro.core.graph import knn_graph_from_similarity
+        graph = knn_graph_from_similarity(u @ u.T, knn)
+
+    def gen(m_per_agent):
+        xs, ys = [], []
+        for i in range(n):
+            m = m_per_agent[i]
+            x = rng.uniform(-1, 1, (m, p))
+            y = np.sign(x @ targets[i])
+            y[y == 0] = 1.0
+            flip = rng.uniform(size=m) < label_noise
+            y = np.where(flip, -y, y)
+            xs.append(x)
+            ys.append(y)
+        return pad_datasets(xs, ys)
+
+    m_train = rng.integers(1, max_train + 1, n)
+    train = gen(m_train)
+    test = gen(np.full(n, n_test))
+    return graph, train, test, targets
+
+
+def accuracy(theta_all, data: AgentData) -> np.ndarray:
+    """Per-agent accuracy of linear models on (padded) datasets."""
+    import jax.numpy as jnp
+    pred = np.sign(np.einsum("nmp,np->nm", np.asarray(data.x),
+                             np.asarray(theta_all)))
+    correct = (pred == np.asarray(data.y)) * np.asarray(data.mask)
+    return correct.sum(1) / np.maximum(np.asarray(data.mask).sum(1), 1)
+
+
+# ---------------------------------------------------------------------------
+# Personalized LM streams
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PersonalizedLMConfig:
+    vocab_size: int
+    n_agents: int
+    seq_len: int
+    batch_per_agent: int
+    share: float = 0.9          # fraction of transition mass shared with neighbors
+    concentration: float = 0.3  # Dirichlet concentration of private structure
+    seed: int = 0
+
+
+def _agent_bigrams(cfg: PersonalizedLMConfig, graph: Graph) -> np.ndarray:
+    """Per-agent 2-gram transition matrices (n_agents, V, V).
+
+    Base = shared global structure; each agent blends in a *cluster* tilt
+    derived from its graph community (spectral sign of the Fiedler vector) and
+    a small private tilt — neighbors end up statistically similar.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    V = cfg.vocab_size
+    base = rng.dirichlet(np.full(V, 1.0), size=V)
+    # community split via the sign pattern of the Laplacian's Fiedler vector
+    lap = graph.laplacian
+    _, vecs = np.linalg.eigh(lap)
+    fiedler = vecs[:, 1] if lap.shape[0] > 1 else np.zeros(1)
+    tilts = {s: rng.dirichlet(np.full(V, cfg.concentration), size=V)
+             for s in (-1, 1)}
+    out = np.empty((cfg.n_agents, V, V))
+    for a in range(cfg.n_agents):
+        s = 1 if fiedler[a] >= 0 else -1
+        private = rng.dirichlet(np.full(V, cfg.concentration), size=V)
+        out[a] = (cfg.share * base + (1 - cfg.share) *
+                  (0.8 * tilts[s] + 0.2 * private))
+    return out / out.sum(-1, keepdims=True)
+
+
+def personalized_token_stream(cfg: PersonalizedLMConfig, graph: Graph
+                              ) -> Iterator[np.ndarray]:
+    """Yields batches (n_agents, batch_per_agent, seq_len + 1) of token ids.
+
+    tokens = batch[..., :-1], labels = batch[..., 1:].
+    """
+    trans = _agent_bigrams(cfg, graph)
+    cum = np.cumsum(trans, axis=-1)
+    rng = np.random.default_rng(cfg.seed + 1)
+    A, b, S = cfg.n_agents, cfg.batch_per_agent, cfg.seq_len + 1
+    agent_idx = np.arange(A)[:, None]                      # (A, 1)
+    while True:
+        out = np.empty((A, b, S), np.int32)
+        state = rng.integers(0, cfg.vocab_size, (A, b))
+        out[..., 0] = state
+        u = rng.uniform(size=(A, b, S - 1))
+        for t in range(1, S):
+            rows = cum[agent_idx, state]                   # (A, b, V)
+            state = (rows >= u[..., t - 1:t]).argmax(-1)
+            state = np.minimum(state, cfg.vocab_size - 1)
+            out[..., t] = state
+        yield out
+
+
+def make_lm_batches(cfg: PersonalizedLMConfig, graph: Graph, n_batches: int):
+    """Materialize a finite list of batches (for tests / examples)."""
+    it = personalized_token_stream(cfg, graph)
+    return [next(it) for _ in range(n_batches)]
+
+
+# ---------------------------------------------------------------------------
+# MusicGen delay pattern (audio arch)
+# ---------------------------------------------------------------------------
+
+
+def delay_pattern(tokens: np.ndarray, pad_id: int) -> np.ndarray:
+    """Apply the MusicGen codebook delay: codebook k is shifted right by k.
+
+    tokens: (B, K, S) -> (B, K, S + K - 1) padded with pad_id.
+    """
+    B, K, S = tokens.shape
+    out = np.full((B, K, S + K - 1), pad_id, tokens.dtype)
+    for k in range(K):
+        out[:, k, k:k + S] = tokens[:, k]
+    return out
+
+
+def undelay_pattern(tokens: np.ndarray) -> np.ndarray:
+    """Inverse of delay_pattern. tokens: (B, K, S + K - 1) -> (B, K, S)."""
+    B, K, Sp = tokens.shape
+    S = Sp - K + 1
+    out = np.empty((B, K, S), tokens.dtype)
+    for k in range(K):
+        out[:, k] = tokens[:, k, k:k + S]
+    return out

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU) + jnp oracles."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

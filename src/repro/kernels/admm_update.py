@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused CL-ADMM edge update (paper §4.2 steps 2-3).
+
+For a batch of edges the Z update and all four dual updates are pure
+elementwise arithmetic over (E, p) slabs; unfused this is 6 reads + 6 writes
+of every operand through HBM. The kernel fuses everything into one pass:
+8 input tiles in, 6 output tiles out, zero intermediate traffic — a pure
+memory-roofline win for large p (deep-model coupling, DESIGN.md §3).
+
+Grid: (num_edge_blocks, num_p_blocks); tiles (bE, bP) in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tii, tji, tjj, tij, loi, lnj, loj, lni, zi, zj, loi_o, lnj_o,
+            loj_o, lni_o, *, rho: float):
+    inv = 1.0 / rho
+    t_ii = tii[...].astype(jnp.float32)
+    t_ji = tji[...].astype(jnp.float32)
+    t_jj = tjj[...].astype(jnp.float32)
+    t_ij = tij[...].astype(jnp.float32)
+    l_oi = loi[...].astype(jnp.float32)
+    l_nj = lnj[...].astype(jnp.float32)
+    l_oj = loj[...].astype(jnp.float32)
+    l_ni = lni[...].astype(jnp.float32)
+    z_i = 0.5 * ((l_oi + l_ni) * inv + t_ii + t_ji)
+    z_j = 0.5 * ((l_oj + l_nj) * inv + t_jj + t_ij)
+    zi[...] = z_i.astype(zi.dtype)
+    zj[...] = z_j.astype(zj.dtype)
+    loi_o[...] = (l_oi + rho * (t_ii - z_i)).astype(loi_o.dtype)
+    lnj_o[...] = (l_nj + rho * (t_ij - z_j)).astype(lnj_o.dtype)
+    loj_o[...] = (l_oj + rho * (t_jj - z_j)).astype(loj_o.dtype)
+    lni_o[...] = (l_ni + rho * (t_ji - z_i)).astype(lni_o.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block_e", "block_p",
+                                             "interpret"))
+def admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i, l_own_j,
+                     l_nbr_i_of_j, *, rho: float, block_e: int = 8,
+                     block_p: int = 512, interpret: bool = True):
+    """All inputs (E, p). Returns (z_i, z_j, 4 updated duals) like ref.py."""
+    E, p = t_ii.shape
+    block_e = min(block_e, E)
+    block_p = min(block_p, max(p, 1))
+    Ep = pl.cdiv(E, block_e) * block_e
+    pp = pl.cdiv(p, block_p) * block_p
+    args = (t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i, l_own_j,
+            l_nbr_i_of_j)
+    if (Ep, pp) != (E, p):
+        args = tuple(jnp.pad(a, ((0, Ep - E), (0, pp - p))) for a in args)
+    grid = (Ep // block_e, pp // block_p)
+    spec = pl.BlockSpec((block_e, block_p), lambda i, j: (i, j))
+    dtype = t_ii.dtype
+    outs = pl.pallas_call(
+        functools.partial(_kernel, rho=rho),
+        grid=grid,
+        in_specs=[spec] * 8,
+        out_specs=[spec] * 6,
+        out_shape=[jax.ShapeDtypeStruct((Ep, pp), dtype)] * 6,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:E, :p] for o in outs)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run with interpret=True; on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check) to
+compile natively. GQA head expansion for flash_attention happens here so the
+kernel sees equal head counts.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import graph_mix as _gm
+from . import flash_attention as _fa
+from . import admm_update as _au
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def graph_mix(theta, theta_sol, A, b, *, block_d: int = _gm.DEFAULT_BLOCK_D):
+    return _gm.graph_mix(theta, theta_sol, A, b, block_d=block_d,
+                         interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, window: Optional[int] = None,
+                    block_q: int = 256, block_k: int = 256):
+    """q: (B, S, H, hd); k, v: (B, S, K, hd) with K | H (GQA)."""
+    H, K = q.shape[2], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def admm_edge_update(*args, rho: float, block_e: int = 8, block_p: int = 512):
+    return _au.admm_edge_update(*args, rho=rho, block_e=block_e,
+                                block_p=block_p, interpret=_interpret())

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def graph_mix(theta, theta_sol, A, b):
+    """Fused model-propagation step over stacked agent models.
+
+    theta, theta_sol: (n, D)  — one row per agent, D = flattened param block
+    A: (n, n) mixing matrix (e.g. diag(alpha/(alpha+abar c)) @ P)
+    b: (n,)  anchor coefficients (abar c / (alpha + abar c))
+    returns A @ theta + b[:, None] * theta_sol
+    """
+    return (A @ theta.astype(jnp.float32)
+            + b[:, None] * theta_sol.astype(jnp.float32)).astype(theta.dtype)
+
+
+def flash_attention(q, k, v, *, window: Optional[int] = None):
+    """Causal (optionally sliding-window) attention oracle.
+
+    q, k, v: (B, S, H, hd) with equal head counts (GQA expansion happens in
+    ops.py before the kernel). Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(S)
+    m = qp[None, :] <= qp[:, None]
+    if window is not None:
+        m &= qp[None, :] > qp[:, None] - window
+    logits = jnp.where(m[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
+                     l_own_j, l_nbr_i_of_j, rho: float):
+    """Fused CL-ADMM Z + dual update for a batch of edges (paper steps 2-3).
+
+    Inputs are (E, p) slices: for each edge e=(i,j),
+      t_ii = Theta_i^i, t_ji = Theta_j^i, t_jj = Theta_j^j, t_ij = Theta_i^j
+      l_own_i = Lambda_{ei}^i,  l_nbr_j_of_i = Lambda_{ei}^j   (agent i's duals)
+      l_own_j = Lambda_{ej}^j,  l_nbr_i_of_j = Lambda_{ej}^i   (agent j's duals)
+    Returns (z_i, z_j, and the four updated duals).
+    """
+    dtype = t_ii.dtype
+    f = jnp.float32
+    t_ii, t_ji, t_jj, t_ij = (a.astype(f) for a in (t_ii, t_ji, t_jj, t_ij))
+    l_own_i, l_nbr_j_of_i, l_own_j, l_nbr_i_of_j = (
+        a.astype(f) for a in (l_own_i, l_nbr_j_of_i, l_own_j, l_nbr_i_of_j))
+    z_i = 0.5 * ((l_own_i + l_nbr_i_of_j) / rho + t_ii + t_ji)
+    z_j = 0.5 * ((l_own_j + l_nbr_j_of_i) / rho + t_jj + t_ij)
+    l_own_i_new = l_own_i + rho * (t_ii - z_i)
+    l_nbr_j_of_i_new = l_nbr_j_of_i + rho * (t_ij - z_j)
+    l_own_j_new = l_own_j + rho * (t_jj - z_j)
+    l_nbr_i_of_j_new = l_nbr_i_of_j + rho * (t_ji - z_i)
+    return tuple(a.astype(dtype) for a in
+                 (z_i, z_j, l_own_i_new, l_nbr_j_of_i_new, l_own_j_new,
+                  l_nbr_i_of_j_new))

@@ -1,0 +1,1 @@
+"""Launch: production meshes, dry-run lowering, train/serve CLI drivers."""

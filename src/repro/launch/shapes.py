@@ -1,0 +1,63 @@
+"""Assigned input shapes and the per-(arch, shape) lowering plan.
+
+Decode shapes lower ``serve_step`` (one token against a seq_len-deep cache /
+recurrent state); train/prefill shapes lower ``train_step`` / ``prefill``.
+
+long_500k policy (DESIGN.md §5): recurrent/hybrid archs decode natively with
+O(1) state; attention archs use their sliding window (native for starcoder2 /
+recurrentgemma, the ``long_ctx_window`` variant otherwise), so the KV ring
+buffer is window-sized — full O(S) caches at 524k would be dishonest for a
+windowed model and full O(S^2) attention is excluded by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                     # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """How an (arch, decode-shape) pair is served."""
+    cache_len: int
+    ring: bool
+    window: Optional[int]         # attention window override ("auto" = cfg)
+
+
+def plan_decode(cfg: ModelConfig, shape: InputShape) -> ServePlan:
+    assert shape.mode == "decode"
+    # native window (starcoder2, recurrentgemma local attn) bounds the cache
+    native_w = cfg.window
+    if shape.seq_len > 65536:
+        # long-context: attention archs switch to their sliding-window variant
+        w = native_w if native_w is not None else cfg.long_ctx_window
+        has_attn = any(k.startswith("attn") for k in cfg.layer_kinds)
+        if not has_attn:
+            return ServePlan(cache_len=1, ring=False, window=None)
+        return ServePlan(cache_len=min(shape.seq_len, w), ring=True, window=w)
+    if native_w is not None and native_w < shape.seq_len:
+        return ServePlan(cache_len=native_w, ring=True, window=native_w)
+    return ServePlan(cache_len=shape.seq_len, ring=False, window=native_w)
+
+
+def train_seq_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Total sequence (incl. media/cond prefix) equals the assigned seq_len."""
+    return shape.seq_len

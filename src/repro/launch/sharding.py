@@ -1,0 +1,80 @@
+"""Sharding spec assembly for the dry-run / production launchers.
+
+All base model specs are written against the multi-pod axis universe
+("pod", "data", "model"); helpers here (a) prepend the agent axis for
+agent-stacked trees, (b) neutralize the batch/agent slot where a dim is
+vmapped instead, and (c) filter axes absent from the actual mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import Model
+from repro.models.common import adapt_pspec
+
+AGENT_SLOT = ("pod", "data")
+
+
+def agent_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in AGENT_SLOT if a in mesh.axis_names)
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+def _map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def resolve(spec: P, mesh, batch_to=None) -> P:
+    """Adapt one base spec: agent slot -> ``batch_to`` (or the mesh's agent
+    axes), then drop axes the mesh doesn't have."""
+    agent = agent_axes_of(mesh) if batch_to is None else batch_to
+    out = []
+    for entry in spec:
+        if isinstance(entry, tuple) and entry == AGENT_SLOT:
+            out.append(agent if agent else None)
+        else:
+            out.append(entry)
+    return adapt_pspec(P(*out), tuple(mesh.axis_names))
+
+
+def stacked_param_specs(model: Model, mesh):
+    """Agent-stacked params: prepend the agent axes to every base leaf."""
+    agent = agent_axes_of(mesh)
+    return _map_specs(
+        lambda s: adapt_pspec(P(agent, *s), tuple(mesh.axis_names)),
+        model.param_pspecs())
+
+
+def batch_specs(model: Model, mesh, mode: str = "train"):
+    """Global-batch input specs (batch dim sharded over the agent axes)."""
+    return _map_specs(lambda s: resolve(s, mesh), model.batch_pspecs(mode))
+
+
+def stacked_cache_specs(model: Model, mesh):
+    """Per-agent vmapped cache: (A, reps, b, ...) leaves.
+
+    Base cache specs are (reps, batch@agents, ...); under per-agent vmap the
+    batch slot is agent-local (None) and the new leading dim carries agents.
+    """
+    agent = agent_axes_of(mesh)
+
+    def f(s: P) -> P:
+        body = resolve(s, mesh, batch_to=())      # null the batch slot
+        return adapt_pspec(P(agent, *body), tuple(mesh.axis_names))
+
+    base = model.cache_pspecs()
+    layers = _map_specs(f, base["layers"])
+    pos = adapt_pspec(P(agent, None), tuple(mesh.axis_names))
+    return {"layers": layers, "pos": pos}
+
+
+def named(tree, mesh):
+    return _map_specs(lambda s: NamedSharding(mesh, s), tree)

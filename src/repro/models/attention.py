@@ -1,0 +1,139 @@
+"""Attention implementations.
+
+* ``ref_attention``     — dense einsum softmax attention (small shapes, oracle)
+* ``chunked_attention`` — lax.scan over KV blocks with online softmax
+                          (flash-style in pure JAX): O(S) memory, small HLO.
+                          Default for training/prefill and for the dry-run.
+* ``decode_attention``  — one query token against a (possibly ring-buffered)
+                          KV cache; with the cache sequence dim sharded over
+                          the "model" mesh axis this lowers to split-KV
+                          (flash-decoding) with an all-reduce combine.
+
+All support GQA (n_kv_heads <= n_heads) and optional sliding windows.
+The Pallas TPU kernel lives in repro.kernels.flash_attention; it is validated
+against ``ref_attention`` (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, n_heads: int):
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head H/K times."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def _mask(q_pos, k_pos, window: Optional[int]):
+    """Causal (+ optional sliding window) mask: True = attend."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def ref_attention(q, k, v, *, q_pos=None, k_pos=None,
+                  window: Optional[int] = None, causal: bool = True):
+    """q: (B, Sq, H, hd), k/v: (B, Sk, K, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal or window is not None:
+        qp = jnp.arange(Sq) if q_pos is None else q_pos
+        kp = jnp.arange(Sk) if k_pos is None else k_pos
+        m = _mask(qp, kp, window) if causal else (
+            kp[None, :] > qp[:, None] - window)
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, window: Optional[int] = None,
+                      chunk: int = 512):
+    """Causal attention via online softmax over KV chunks (self-attention).
+
+    Equivalent to ref_attention(causal=True); memory O(Sq * chunk) instead of
+    O(Sq * Sk). Both the training path and the dry-run use this.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[-2]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if S % chunk != 0:
+        return ref_attention(q, k, v, window=window)
+    scale = hd ** -0.5
+    n_chunks = S // chunk
+    kc = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def body(carry, xs):
+        o, m, l = carry                       # (B,S,H,hd), (B,H,S), (B,H,S)
+        kb, vb, idx = xs                      # (B,chunk,H,hd), ..., scalar
+        k_pos = idx * chunk + jnp.arange(chunk)
+        logits = (jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                             preferred_element_type=jnp.float32)
+                  * scale).astype(jnp.float32)
+        msk = _mask(q_pos, k_pos, window)     # (S, chunk)
+        logits = jnp.where(msk[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = (o * alpha.transpose(0, 2, 1)[..., None]
+                 + jnp.einsum("bhqk,bkhd->bqhd", p.astype(vb.dtype), vb))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros_like(q, dtype=jnp.float32)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0),
+                                (kc, vc, jnp.arange(n_chunks)))
+    l = jnp.maximum(l, 1e-20)
+    return (o / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     window: Optional[int] = None, ring: bool = False):
+    """One-token decode: q (B, H, hd) vs cache (B, Sc, K, hd).
+
+    ``pos`` is the (scalar or (B,)) absolute position of the new token.
+    ``ring=True``: the cache is a ring buffer of size Sc holding the last Sc
+    tokens — slot s currently stores absolute position p where
+    p = pos - ((pos - s) mod Sc); valid if p >= 0 and p > pos - window.
+
+    With the cache's Sc dim sharded over "model", GSPMD lowers the reductions
+    here to partial-softmax + all-reduce == split-KV flash decoding.
+    """
+    B, Sc, K, hd = k_cache.shape
+    H = q.shape[1]
+    kc = _expand_kv(k_cache, H)
+    vc = _expand_kv(v_cache, H)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bhd,bshd->bhs", q, kc,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.asarray(pos)
+    pos_b = jnp.broadcast_to(pos, (B,))[:, None]                # (B,1)
+    slots = jnp.arange(Sc)[None, :]                             # (1,Sc)
+    if ring:
+        abs_pos = pos_b - jnp.mod(pos_b - slots, Sc)
+    else:
+        abs_pos = slots * jnp.ones_like(pos_b)
+    valid = (abs_pos >= 0) & (abs_pos <= pos_b)
+    if window is not None:
+        valid &= abs_pos > pos_b - window
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w.astype(vc.dtype), vc)

@@ -1,0 +1,645 @@
+"""Transformer / recurrent block zoo.
+
+Every block kind exposes three functions with a common signature so the model
+engine (model.py) can scan over heterogeneous stacks:
+
+    defs(cfg, kind)                       -> nested dict of ParamDef
+    apply_seq(cfg, kind, p, x, ctx)       -> (x, cache_entry)   full-sequence
+    apply_dec(cfg, kind, p, x, cache, ctx)-> (x, cache)         one-token decode
+
+``ctx`` carries positions / mrope ids / window overrides / cache_len.
+Kinds: attn | attn_local | attn_moe | mlstm | slstm | rglru.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (ModelConfig, ParamDef, rms_norm, swiglu, gelu_glu,
+                     apply_rope, apply_mrope, constrain)
+from .attention import (ref_attention, chunked_attention, decode_attention,
+                        _expand_kv)
+
+
+class Ctx(NamedTuple):
+    positions: Any = None        # (B, S) int32 (seq mode) or (B,) (decode)
+    positions3: Any = None       # (3, B, S) for M-RoPE (vlm)
+    window: Any = None           # per-call window override ("auto" = cfg)
+    cache_len: int = 0           # 0 => no cache wanted (pure training)
+    ring: bool = False           # decode cache is a ring buffer
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.ffn_kind == "gelu":
+        return {"w_up": ParamDef((d, f), P(None, "model")),
+                "w_down": ParamDef((f, d), P("model", None))}
+    return {"w_gate": ParamDef((d, f), P(None, "model")),
+            "w_up": ParamDef((d, f), P(None, "model")),
+            "w_down": ParamDef((f, d), P("model", None))}
+
+
+def ffn_apply(cfg: ModelConfig, p: Dict, x):
+    if cfg.ffn_kind == "gelu":
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    if cfg.ffn_kind == "geglu":
+        return gelu_glu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (token-choice top-k with capacity, scatter/gather dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ModelConfig) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {"router": ParamDef((d, E), P(None, None), scale=0.02),
+            "w_gate": ParamDef((E, d, f), P("model", None, None)),
+            "w_up": ParamDef((E, d, f), P("model", None, None)),
+            "w_down": ParamDef((E, f, d), P("model", None, None))}
+
+
+def moe_apply(cfg: ModelConfig, p: Dict, x):
+    """x: (B, S, d) -> (y, aux_loss). Token-choice top-k routing.
+
+    Dispatch by scatter into an (E, C, d) buffer (capacity
+    C = ceil(T k / E * cf)); tokens over capacity are dropped (standard).
+    Expert weights are sharded over "model" => expert-parallel compute.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                     # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(T * k / E * cfg.capacity_factor))
+    C = min(C, T)
+    # position of each (token, choice) within its expert, in token order
+    onehot = jax.nn.one_hot(topi.reshape(-1), E, dtype=jnp.int32)  # (T*k, E)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - onehot)               # exclusive
+    pos = jnp.take_along_axis(pos_flat, topi.reshape(-1, 1),
+                              axis=1).reshape(T, k)
+    keep = pos < C
+    slot = topi * C + jnp.minimum(pos, C - 1)                      # (T, k)
+
+    if cfg.moe_impl == "gather":
+        # scatter only indices (E*C int32 — KBs, stays replicated), then
+        # gather tokens from the replicated activation: shard-local dispatch.
+        src = jnp.full((E * C + 1,), T, jnp.int32)  # T = "no token" sentinel
+        write_slot = jnp.where(keep, slot, E * C)   # dropped -> spill slot
+        src = src.at[write_slot.reshape(-1)].set(jnp.arange(T * k) // k)
+        src = src[:E * C]
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
+        buf = xt_pad[src]                           # (E*C, d) local gather
+    else:
+        buf = jnp.zeros((E * C, d), x.dtype)
+        contrib = keep.astype(x.dtype)                             # (T, k)
+        buf = buf.at[slot.reshape(-1)].add(
+            (xt[:, None, :] * contrib[:, :, None]).reshape(T * k, d))
+    expert_in = constrain(buf.reshape(E, C, d), P("model", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    expert_out = constrain(expert_out, P("model", None, None))
+
+    gathered = expert_out.reshape(E * C, d)[slot.reshape(-1)].reshape(T, k, d)
+    y = jnp.sum(gathered * (topv * keep).astype(x.dtype)[..., None], axis=1)
+
+    # Switch-style load-balance auxiliary loss
+    me = gates.mean(axis=0)                                   # (E,)
+    ce = jax.nn.one_hot(topi[:, 0], E).mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention mixer
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {"wq": ParamDef((d, H * hd), P(None, "model")),
+            "wk": ParamDef((d, K * hd), P(None, "model")),
+            "wv": ParamDef((d, K * hd), P(None, "model")),
+            "wo": ParamDef((H * hd, d), P("model", None))}
+
+
+def _window_of(cfg: ModelConfig, kind: str, ctx: Ctx) -> Optional[int]:
+    if kind == "attn_local":
+        return cfg.local_window
+    if ctx.window != "auto":
+        return ctx.window
+    return cfg.window
+
+
+def _qkv(cfg: ModelConfig, p: Dict, x, ctx: Ctx, decode: bool):
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = 1 if decode else x.shape[1]
+    xq = (x @ p["wq"]).reshape(B, S, H, hd)
+    xk = (x @ p["wk"]).reshape(B, S, K, hd)
+    xv = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.family == "vlm" and ctx.positions3 is not None:
+        xq = apply_mrope(xq, ctx.positions3, cfg.rope_theta, cfg.mrope_sections)
+        xk = apply_mrope(xk, ctx.positions3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos = ctx.positions
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if decode:
+            pos = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]
+        xq = apply_rope(xq, pos, cfg.rope_theta)
+        xk = apply_rope(xk, pos, cfg.rope_theta)
+    return xq, xk, xv
+
+
+def attn_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
+    B, S, d = x.shape
+    window = _window_of(cfg, kind, ctx)
+    xq, xk, xv = _qkv(cfg, p, x, ctx, decode=False)
+    xq = constrain(xq, P(("pod", "data"), None, "model", None))
+    if cfg.attn_impl == "ref" or S % cfg.attn_chunk != 0:
+        o = ref_attention(xq, xk, xv, window=window)
+    elif cfg.attn_impl == "flash":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(xq, xk, xv, window=window)
+    else:
+        o = chunked_attention(xq, xk, xv, window=window, chunk=cfg.attn_chunk)
+    y = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    cache = None
+    if ctx.cache_len:
+        Sc = ctx.cache_len
+        K = cfg.n_kv_heads
+        kc = jnp.zeros((B, Sc, K, cfg.hd), x.dtype)
+        vc = jnp.zeros((B, Sc, K, cfg.hd), x.dtype)
+        take = min(S, Sc)
+        # token at absolute position p lives in slot p % Sc (ring semantics;
+        # identity when Sc >= S). Keep the last `take` tokens.
+        ps = jnp.arange(S - take, S)
+        kc = kc.at[:, ps % Sc].set(xk[:, S - take:])
+        vc = vc.at[:, ps % Sc].set(xv[:, S - take:])
+        cache = {"k": kc, "v": vc}
+    return y, cache
+
+
+def attn_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache: Dict,
+                   ctx: Ctx):
+    """x: (B, d) one token at position ctx.positions (B,) or scalar."""
+    B, d = x.shape
+    window = _window_of(cfg, kind, ctx)
+    xq, xk, xv = _qkv(cfg, p, x[:, None, :], ctx, decode=True)
+    Sc = cache["k"].shape[1]
+    pos = jnp.asarray(ctx.positions)
+    if pos.ndim == 0:
+        # lockstep fleet decode: all requests at the same position — a
+        # dynamic_update_slice, which GSPMD handles shard-locally even when
+        # the cache's S dim is sharded (split-KV). Scatter-at-(B,) indices
+        # would force the partitioner to regather the whole cache
+        # (EXPERIMENTS.md §Perf C1).
+        slot = (jnp.mod(pos, Sc) if ctx.ring else pos).astype(jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        kc = jax.lax.dynamic_update_slice(cache["k"], xk,
+                                          (zero, slot, zero, zero))
+        vc = jax.lax.dynamic_update_slice(cache["v"], xv,
+                                          (zero, slot, zero, zero))
+    else:
+        slot = jnp.mod(pos, Sc) if ctx.ring else pos
+        slot = jnp.broadcast_to(slot, (B,))
+        kc = cache["k"].at[jnp.arange(B), slot].set(xk[:, 0])
+        vc = cache["v"].at[jnp.arange(B), slot].set(xv[:, 0])
+    o = decode_attention(xq[:, 0], kc, vc, pos, window=window, ring=ctx.ring)
+    y = o.reshape(B, cfg.n_heads * cfg.hd) @ p["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+def attn_init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((B, cache_len, K, hd), dtype),
+            "v": jnp.zeros((B, cache_len, K, hd), dtype)}
+
+
+def attn_cache_pspecs(cfg: ModelConfig):
+    if cfg.kv_shard == "heads":
+        # head_dim over "model" (always divisible; kv-head counts in the
+        # pool go down to 1): cache writes are shard-local and attention
+        # computes partial q.k dots combined with a small logits psum.
+        s = P(("pod", "data"), None, None, "model")
+    else:
+        # batch over agents, sequence over "model" => split-KV (DESIGN §4)
+        s = P(("pod", "data"), "model", None, None)
+    return {"k": s, "v": s}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU mixer (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+def rglru_defs(cfg: ModelConfig) -> Dict:
+    d, r, cw = cfg.d_model, cfg.r_dim, cfg.conv_width
+    return {"w_x": ParamDef((d, r), P(None, "model")),
+            "w_gate": ParamDef((d, r), P(None, "model")),
+            "conv_w": ParamDef((cw, r), P(None, "model"), scale=1.0 / math.sqrt(cw)),
+            "lam": ParamDef((r,), P("model"), init="lru_lambda"),
+            "w_inp": ParamDef((r, r), P(None, "model")),
+            "w_rec": ParamDef((r, r), P(None, "model")),
+            "w_out": ParamDef((r, d), P("model", None))}
+
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(p, xb):
+    """a_t (log-space) and gated input for the linear recurrence."""
+    r_t = jax.nn.sigmoid(xb @ p["w_rec"])
+    i_t = jax.nn.sigmoid(xb @ p["w_inp"])
+    log_a = -_LRU_C * r_t * jax.nn.softplus(p["lam"])          # log a_t < 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_t * xb)
+    return a.astype(xb.dtype), b.astype(xb.dtype)
+
+
+def rglru_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
+    B, S, d = x.shape
+    xb = x @ p["w_x"]                                          # (B,S,r)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    # depthwise causal conv over time
+    pad = jnp.pad(xb, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(cfg.conv_width))
+    a, b = _rglru_gates(p, conv)
+    # linear recurrence h_t = a_t h_{t-1} + b_t via associative scan
+    def comb(l, r_):
+        return (l[0] * r_[0], r_[0] * l[1] + r_[1])
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    y = (h * gate) @ p["w_out"]
+    cache = None
+    if ctx.cache_len:
+        cache = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": pad[:, -(cfg.conv_width - 1):] if cfg.conv_width > 1
+                 else jnp.zeros((B, 0, cfg.r_dim), x.dtype)}
+    return y, cache
+
+
+def rglru_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache: Dict,
+                    ctx: Ctx):
+    B, d = x.shape
+    xb = x @ p["w_x"]                                          # (B,r)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    hist = jnp.concatenate([cache["conv"], xb[:, None]], axis=1)  # (B,cw,r)
+    conv = jnp.einsum("bcr,cr->br", hist, p["conv_w"])
+    a, b = _rglru_gates(p, conv)
+    h = a * cache["h"].astype(a.dtype) + b
+    y = (h * gate) @ p["w_out"]
+    return y, {"h": h.astype(jnp.float32), "conv": hist[:, 1:]}
+
+
+def rglru_init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype):
+    return {"h": jnp.zeros((B, cfg.r_dim), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.r_dim), dtype)}
+
+
+def rglru_cache_pspecs(cfg: ModelConfig):
+    return {"h": P(("pod", "data"), "model"),
+            "conv": P(("pod", "data"), None, "model")}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM mixer (xLSTM) — matrix memory, exact recurrent form
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict:
+    d, di, H = cfg.d_model, cfg.mlstm_inner, cfg.n_heads
+    hd = di // H
+    return {"w_up": ParamDef((d, 2 * di), P(None, "model")),
+            "wq": ParamDef((di, di), P(None, "model")),
+            "wk": ParamDef((di, di), P(None, "model")),
+            "wv": ParamDef((di, di), P(None, "model")),
+            "w_igate": ParamDef((di, H), P(None, None), scale=0.02),
+            "w_fgate": ParamDef((di, H), P(None, None), scale=0.02),
+            "skip_gamma": ParamDef((di,), P("model"), init="zeros"),
+            "w_down": ParamDef((di, d), P("model", None))}
+
+
+def _mlstm_cell(q, k, v, igate, fgate, state):
+    """One step. q/k/v: (B,H,hd); i/f gates: (B,H) pre-activations.
+
+    Stabilized exponential gating (xLSTM eq. 19-27):
+      m_t = max(f~ + m_{t-1}, i~);  f' = exp(f~ + m_{t-1} - m_t); i' = exp(i~ - m_t)
+      C_t = f' C_{t-1} + i' v k^T ;  n_t = f' n_{t-1} + i' k
+      h~  = C_t q / max(|n_t . q|, 1)
+    """
+    C, n, m = state
+    hd = q.shape[-1]
+    k = k / math.sqrt(hd)
+    m_new = jnp.maximum(fgate + m, igate)
+    fp = jnp.exp(fgate + m - m_new)
+    ip = jnp.exp(igate - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n_new = fp[..., None] * n + ip[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    h = jnp.einsum("bhde,bhe->bhd", C_new, q) / denom[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def _mlstm_state0(B, H, hd):
+    return (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+
+
+def _mlstm_parallel(q, k, v, ig, fg):
+    """Parallel (quadratic) mLSTM forward — EXACTLY equal to the scan form.
+
+    Uses the same running-max stabilizer: m_i = F_i + cummax_{j<=i}(i~_j - F_j)
+    where F is the cumulative log forget gate, matching the recurrent
+    m_t = max(f~_t + m_{t-1}, i~_t). Returns (h (B,S,H,hd), state at t=S-1).
+    """
+    B, S, H, hd = q.shape
+    k = k / math.sqrt(hd)
+    F = jnp.cumsum(fg, axis=1)                                 # (B,S,H)
+    a = ig - F                                                 # i~_j - F_j
+    # the zero initial state acts as a virtual j=-1 entry with i~=0, F_j=0:
+    # recurrent m_t = max(F_t, max_{j<=t}(F_t - F_j + i~_j))
+    m = F + jnp.maximum(jax.lax.cummax(a, axis=1), 0.0)        # (B,S,H)
+    # D[i,j] = exp(F_i - F_j + ig_j - m_i) for j<=i
+    logD = (F + 0)[:, :, None, :] - F[:, None, :, :] + ig[:, None, :, :] \
+        - m[:, :, None, :]                                     # (B,Si,Sj,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(causal[None, :, :, None], jnp.exp(logD), 0.0)
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) * D           # (B,Si,Sj,H)
+    denom = jnp.maximum(jnp.abs(scores.sum(axis=2)), 1.0)      # (B,S,H)
+    h = jnp.einsum("bijh,bjhd->bihd", scores, v) / denom[..., None]
+    # final recurrent state (for prefill -> decode handoff)
+    wC = jnp.exp(F[:, -1:, :] - F + ig - m[:, -1:, :])         # (B,S,H)
+    C = jnp.einsum("bjh,bjhd,bjhe->bhde", wC, v, k)
+    n = jnp.einsum("bjh,bjhd->bhd", wC, k)
+    state = (C, n, m[:, -1])
+    return h, state
+
+
+def mlstm_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
+    B, S, d = x.shape
+    di, H = cfg.mlstm_inner, cfg.n_heads
+    hd = di // H
+    up = x @ p["w_up"]
+    xb, z = jnp.split(up, 2, axis=-1)
+    q = (xb @ p["wq"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (xb @ p["wk"]).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (xb @ p["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    ig = (xb @ p["w_igate"]).astype(jnp.float32)               # (B,S,H)
+    fg = jax.nn.log_sigmoid((xb @ p["w_fgate"]).astype(jnp.float32))
+
+    if cfg.mlstm_impl == "parallel":
+        hs_bshd, state = _mlstm_parallel(q, k, v, ig, fg)
+        h = hs_bshd.reshape(B, S, di).astype(x.dtype)
+    else:
+        def step(state, t):
+            h, state = _mlstm_cell(q[:, t], k[:, t], v[:, t], ig[:, t],
+                                   fg[:, t], state)
+            return state, h
+
+        state, hs = jax.lax.scan(step, _mlstm_state0(B, H, hd),
+                                 jnp.arange(S))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = rms_norm(h, p["skip_gamma"]) + xb                      # skip
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    cache = None
+    if ctx.cache_len:
+        cache = {"C": state[0], "n": state[1], "m": state[2]}
+    return y, cache
+
+
+def mlstm_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache: Dict,
+                    ctx: Ctx):
+    B, d = x.shape
+    di, H = cfg.mlstm_inner, cfg.n_heads
+    hd = di // H
+    up = x @ p["w_up"]
+    xb, z = jnp.split(up, 2, axis=-1)
+    q = (xb @ p["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xb @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xb @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    ig = (xb @ p["w_igate"]).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid((xb @ p["w_fgate"]).astype(jnp.float32))
+    h, state = _mlstm_cell(q, k, v, ig, fg,
+                           (cache["C"], cache["n"], cache["m"]))
+    h = h.reshape(B, di).astype(x.dtype)
+    h = rms_norm(h, p["skip_gamma"]) + xb
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def mlstm_init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype):
+    H = cfg.n_heads
+    hd = cfg.mlstm_inner // H
+    C, n, m = _mlstm_state0(B, H, hd)
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_cache_pspecs(cfg: ModelConfig):
+    return {"C": P(("pod", "data"), None, "model", None),
+            "n": P(("pod", "data"), None, "model"),
+            "m": P(("pod", "data"), None)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM mixer (xLSTM) — scalar memory, head-block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    f = cfg.slstm_hidden
+    defs = {f"w_{g}": ParamDef((d, d), P(None, "model")) for g in
+            ("z", "i", "f", "o")}
+    defs.update({f"r_{g}": ParamDef((H, hd, hd), P(None, "model", None),
+                                    scale=1.0 / math.sqrt(hd))
+                 for g in ("z", "i", "f", "o")})
+    defs.update({"w_ff_gate": ParamDef((d, f), P(None, "model")),
+                 "w_ff_up": ParamDef((d, f), P(None, "model")),
+                 "w_ff_down": ParamDef((f, d), P("model", None)),
+                 "norm_ff": ParamDef((d,), P(None), init="zeros")})
+    return defs
+
+
+def _slstm_cell(p, xz, xi, xf, xo, state, H, hd):
+    """One step. x*: (B, d) gate pre-activations from the input."""
+    c, n, h, m = state
+    hh = h.reshape(h.shape[0], H, hd)
+    rz = jnp.einsum("bhd,hde->bhe", hh, p["r_z"]).reshape(h.shape)
+    ri = jnp.einsum("bhd,hde->bhe", hh, p["r_i"]).reshape(h.shape)
+    rf = jnp.einsum("bhd,hde->bhe", hh, p["r_f"]).reshape(h.shape)
+    ro = jnp.einsum("bhd,hde->bhe", hh, p["r_o"]).reshape(h.shape)
+    z = jnp.tanh(xz + rz)
+    o = jax.nn.sigmoid(xo + ro)
+    i_t = xi + ri
+    f_t = jax.nn.log_sigmoid(xf + rf)
+    m_new = jnp.maximum(f_t + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xz = (x @ p["w_z"]).astype(jnp.float32)
+    xi = (x @ p["w_i"]).astype(jnp.float32)
+    xf = (x @ p["w_f"]).astype(jnp.float32)
+    xo = (x @ p["w_o"]).astype(jnp.float32)
+    state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    def step(state, t):
+        h, state = _slstm_cell(p, xz[:, t], xi[:, t], xf[:, t], xo[:, t],
+                               state, H, hd)
+        return state, h
+
+    state, hs = jax.lax.scan(step, state0, jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,d)
+    y = h + gelu_glu(rms_norm(h, p["norm_ff"]), p["w_ff_gate"], p["w_ff_up"],
+                     p["w_ff_down"])
+    cache = None
+    if ctx.cache_len:
+        cache = {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    return y, cache
+
+
+def slstm_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache: Dict,
+                    ctx: Ctx):
+    B, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    xz = (x @ p["w_z"]).astype(jnp.float32)
+    xi = (x @ p["w_i"]).astype(jnp.float32)
+    xf = (x @ p["w_f"]).astype(jnp.float32)
+    xo = (x @ p["w_o"]).astype(jnp.float32)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, state = _slstm_cell(p, xz, xi, xf, xo, state, H, hd)
+    h = h.astype(x.dtype)
+    y = h + gelu_glu(rms_norm(h, p["norm_ff"]), p["w_ff_gate"], p["w_ff_up"],
+                     p["w_ff_down"])
+    return y, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+
+
+def slstm_init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_cache_pspecs(cfg: ModelConfig):
+    s = P(("pod", "data"), "model")
+    return {"c": s, "n": s, "h": s, "m": s}
+
+
+# ---------------------------------------------------------------------------
+# Block = norm -> mixer -> residual [-> norm -> ffn -> residual]
+# ---------------------------------------------------------------------------
+
+_MIXER = {
+    "attn": (attn_defs, attn_apply_seq, attn_apply_dec, attn_init_cache,
+             attn_cache_pspecs),
+    "attn_local": (attn_defs, attn_apply_seq, attn_apply_dec, attn_init_cache,
+                   attn_cache_pspecs),
+    "rglru": (rglru_defs, rglru_apply_seq, rglru_apply_dec, rglru_init_cache,
+              rglru_cache_pspecs),
+    "mlstm": (mlstm_defs, mlstm_apply_seq, mlstm_apply_dec, mlstm_init_cache,
+              mlstm_cache_pspecs),
+    "slstm": (slstm_defs, slstm_apply_seq, slstm_apply_dec, slstm_init_cache,
+              slstm_cache_pspecs),
+}
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    if cfg.family == "ssm":
+        return False                       # xLSTM blocks are self-contained
+    return True
+
+
+def _ffn_is_moe(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.n_experts > 0 and kind.startswith("attn")
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict:
+    mixer = kind if kind in _MIXER else "attn"
+    d = {"norm1": ParamDef((cfg.d_model,), P(None), init="zeros"),
+         "mixer": _MIXER[mixer][0](cfg)}
+    if _has_ffn(cfg, kind):
+        d["norm2"] = ParamDef((cfg.d_model,), P(None), init="zeros")
+        d["ffn"] = moe_defs(cfg) if _ffn_is_moe(cfg, kind) else ffn_defs(cfg)
+    return d
+
+
+_SEQ_SPEC = P(("pod", "data"), "model", None)   # residual stream (B, S, d)
+
+
+def block_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
+    """Returns (x, cache_entry, aux_loss)."""
+    if cfg.seq_shard:
+        x = constrain(x, _SEQ_SPEC)
+    mixer = kind if kind in _MIXER else "attn"
+    h, cache = _MIXER[mixer][1](cfg, mixer if kind == "attn_local" else kind,
+                                p["mixer"], rms_norm(x, p["norm1"]), ctx)
+    x = x + h
+    if cfg.seq_shard:
+        x = constrain(x, _SEQ_SPEC)
+    aux = jnp.zeros((), jnp.float32)
+    if _has_ffn(cfg, kind):
+        hin = rms_norm(x, p["norm2"])
+        if _ffn_is_moe(cfg, kind):
+            h2, aux = moe_apply(cfg, p["ffn"], hin)
+        else:
+            h2 = ffn_apply(cfg, p["ffn"], hin)
+        x = x + h2
+    return x, cache, aux
+
+
+def block_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache, ctx: Ctx):
+    mixer = kind if kind in _MIXER else "attn"
+    h, cache = _MIXER[mixer][2](cfg, mixer if kind == "attn_local" else kind,
+                                p["mixer"], rms_norm(x, p["norm1"]), cache, ctx)
+    x = x + h
+    if _has_ffn(cfg, kind):
+        hin = rms_norm(x, p["norm2"])
+        if _ffn_is_moe(cfg, kind):
+            h2, _ = moe_apply(cfg, p["ffn"], hin[:, None, :])
+            h2 = h2[:, 0]
+        else:
+            h2 = ffn_apply(cfg, p["ffn"], hin)
+        x = x + h2
+    return x, cache
+
+
+def block_init_cache(cfg: ModelConfig, kind: str, B: int, cache_len: int,
+                     dtype):
+    mixer = kind if kind in _MIXER else "attn"
+    return _MIXER[mixer][3](cfg, B, cache_len, dtype)
+
+
+def block_cache_pspecs(cfg: ModelConfig, kind: str):
+    mixer = kind if kind in _MIXER else "attn"
+    return _MIXER[mixer][4](cfg)

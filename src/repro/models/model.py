@@ -1,0 +1,320 @@
+"""Model engine: assembles block stacks into trainable/servable models.
+
+A ``Model`` wraps a ModelConfig and provides:
+
+    init(key)                -> params            (f32 master weights)
+    param_pspecs()           -> PartitionSpec tree (base, agent-free)
+    loss(params, batch)      -> (scalar, metrics) train objective (LM CE + aux)
+    forward(params, batch)   -> logits
+    prefill(params, batch, cache_len) -> (logits, cache)
+    decode_step(params, cache, batch) -> (logits, cache)   # serve_step body
+    init_cache(B, cache_len) / cache_pspecs() / input_specs(shape)
+
+Layer stacks are grouped into scan units (cfg.scan_groups()); parameters of a
+group are stacked over the repetition dim so the whole depth compiles to one
+``lax.scan`` body (constant HLO size in depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (ModelConfig, ParamDef, init_from_defs, pspecs_from_defs,
+                     abstract_from_defs, stack_defs, rms_norm, cross_entropy,
+                     constrain)
+from . import blocks as B
+
+AGENT_AXES = ("pod", "data")
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = cfg.scan_groups()
+
+    # -- parameters ---------------------------------------------------------
+
+    def defs(self) -> Dict:
+        cfg = self.cfg
+        dm, V = cfg.d_model, cfg.vocab_size
+        d: Dict[str, Any] = {
+            "final_norm": ParamDef((dm,), P(None), init="zeros")}
+        if cfg.family == "audio":
+            K = cfg.n_codebooks
+            d["embed"] = ParamDef((K, V, dm), P(None, "model", None), scale=0.02)
+            d["unembed"] = ParamDef((K, dm, V), P(None, None, "model"))
+        else:
+            d["embed"] = ParamDef((V, dm), P("model", None), scale=0.02)
+            d["unembed"] = ParamDef((dm, V), P(None, "model"))
+        d["groups"] = [
+            stack_defs({f"b{i}": B.block_defs(cfg, kind)
+                        for i, kind in enumerate(unit)}, reps)
+            for unit, reps in self.groups]
+        return d
+
+    def init(self, key) -> Dict:
+        return init_from_defs(self.defs(), key, self.cfg.param_dtype)
+
+    def param_pspecs(self) -> Dict:
+        return pspecs_from_defs(self.defs())
+
+    def abstract_params(self) -> Dict:
+        return abstract_from_defs(self.defs(), self.cfg.param_dtype)
+
+    def param_count(self) -> int:
+        import numpy as np
+        leaves = jax.tree_util.tree_leaves(
+            self.defs(), is_leaf=lambda x: isinstance(x, ParamDef))
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    # -- embedding / head per family ----------------------------------------
+
+    def _embed(self, params, batch):
+        """Returns (x (B,S,d), ctx kwargs, n_prefix)."""
+        cfg = self.cfg
+        cdt = cfg.compute_dtype
+        if cfg.family == "audio":
+            tok = batch["tokens"]                       # (B, K, S)
+            emb = params["embed"].astype(cdt)           # (K, V, d)
+            x = sum(emb[k][tok[:, k]] for k in range(cfg.n_codebooks))
+            cond = batch["cond_embeds"].astype(cdt)     # (B, n_cond, d)
+            x = jnp.concatenate([cond, x], axis=1)
+            return x, {}, cfg.n_cond_tokens
+        if cfg.family == "vlm":
+            tok = batch["tokens"]                       # (B, S_text)
+            x = params["embed"].astype(cdt)[tok]
+            patches = batch["patch_embeds"].astype(cdt)
+            x = jnp.concatenate([patches, x], axis=1)
+            return x, {"positions3": batch["positions3"]}, cfg.n_media_tokens
+        x = params["embed"].astype(self.cfg.compute_dtype)[batch["tokens"]]
+        return x, {}, 0
+
+    def _head(self, params, x, n_prefix):
+        cfg = self.cfg
+        x = x[:, n_prefix:]
+        if cfg.family == "audio":
+            return jnp.einsum("bsd,kdv->bksv", x,
+                              params["unembed"].astype(cfg.compute_dtype),
+                              preferred_element_type=jnp.float32)
+        return jnp.einsum("bsd,dv->bsv", x,
+                          params["unembed"].astype(cfg.compute_dtype),
+                          preferred_element_type=jnp.float32)
+
+    # -- sequence forward ----------------------------------------------------
+
+    def _run_groups_seq(self, params, x, ctx: B.Ctx):
+        """Apply all scan groups. Returns (x, caches per group, aux)."""
+        cfg = self.cfg
+        cdt = cfg.compute_dtype
+        caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for (unit, reps), gp in zip(self.groups, params["groups"]):
+            gp = jax.tree_util.tree_map(lambda a: a.astype(cdt)
+                                        if a.dtype == cfg.param_dtype else a, gp)
+
+            def unit_apply(x, pslice, unit=unit):
+                aux = jnp.zeros((), jnp.float32)
+                centry = {}
+                for i, kind in enumerate(unit):
+                    x, c, a = B.block_apply_seq(cfg, kind, pslice[f"b{i}"], x,
+                                                ctx)
+                    centry[f"b{i}"] = c
+                    aux = aux + a
+                return x, centry, aux
+
+            if cfg.remat:
+                unit_apply = jax.checkpoint(
+                    unit_apply, policy=jax.checkpoint_policies.nothing_saveable)
+
+            if cfg.scan_layers and reps > 1:
+                def body(carry, pslice):
+                    x, aux = carry
+                    x, centry, a = unit_apply(x, pslice)
+                    return (x, aux + a), centry
+                (x, aux_total), centries = jax.lax.scan(
+                    body, (x, aux_total), gp)
+                caches.append(centries)
+            else:
+                centries = []
+                for r in range(reps):
+                    pslice = jax.tree_util.tree_map(lambda a: a[r], gp)
+                    x, centry, a = unit_apply(x, pslice)
+                    aux_total = aux_total + a
+                    centries.append(centry)
+                caches.append(jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *centries)
+                    if ctx.cache_len else None)
+        return x, caches, aux_total
+
+    def forward(self, params, batch, *, window="auto"):
+        cfg = self.cfg
+        x, ctxkw, n_prefix = self._embed(params, batch)
+        x = constrain(x, P(AGENT_AXES, None, None))
+        Btot, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Btot, S))
+        ctx = B.Ctx(positions=positions, window=window, cache_len=0, **ctxkw)
+        x, _, aux = self._run_groups_seq(params, x, ctx)
+        x = rms_norm(x, params["final_norm"])
+        logits = self._head(params, x, n_prefix)
+        return logits, aux
+
+    def loss(self, params, batch, *, window="auto"):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, window=window)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + cfg.router_aux_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+
+    def init_cache(self, Btot: int, cache_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or cfg.compute_dtype
+        caches = []
+        for unit, reps in self.groups:
+            entry = {f"b{i}": B.block_init_cache(cfg, kind, Btot, cache_len,
+                                                 dtype)
+                     for i, kind in enumerate(unit)}
+            caches.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), entry))
+        return {"layers": caches, "pos": jnp.zeros((Btot,), jnp.int32)}
+
+    def cache_pspecs(self):
+        cfg = self.cfg
+        caches = []
+        for unit, reps in self.groups:
+            entry = {f"b{i}": B.block_cache_pspecs(cfg, kind)
+                     for i, kind in enumerate(unit)}
+            caches.append(jax.tree_util.tree_map(
+                lambda s: P(None, *s), entry,
+                is_leaf=lambda s: isinstance(s, P)))
+        return {"layers": caches, "pos": P(AGENT_AXES)}
+
+    def abstract_cache(self, Btot: int, cache_len: int, dtype=None):
+        dtype = dtype or self.cfg.compute_dtype
+        cache = jax.eval_shape(lambda: self.init_cache(Btot, cache_len, dtype))
+        return cache
+
+    def prefill(self, params, batch, cache_len: int, *, window="auto"):
+        cfg = self.cfg
+        x, ctxkw, n_prefix = self._embed(params, batch)
+        Btot, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Btot, S))
+        ctx = B.Ctx(positions=positions, window=window, cache_len=cache_len,
+                    ring=cache_len < S, **ctxkw)
+        x, caches, _ = self._run_groups_seq(params, x, ctx)
+        x = rms_norm(x, params["final_norm"])
+        logits = self._head(params, x[:, -1:], 0)
+        cache = {"layers": caches,
+                 "pos": jnp.full((Btot,), S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, batch, *, window="auto",
+                    ring: bool = False, lockstep: bool = False):
+        """One decode step. batch: {"token": (B,) or (B,K)} ; cache carries pos.
+
+        ``lockstep=True``: all requests share one position (fleet decode) —
+        cache writes become dynamic_update_slice, which stays shard-local
+        under split-KV sharding (see blocks.attn_apply_dec).
+        """
+        cfg = self.cfg
+        cdt = cfg.compute_dtype
+        tok = batch["token"]
+        if cfg.family == "audio":
+            emb = params["embed"].astype(cdt)
+            x = sum(emb[k][tok[:, k]] for k in range(cfg.n_codebooks))
+        else:
+            x = params["embed"].astype(cdt)[tok]
+        Btot = x.shape[0]
+        pos = cache["pos"]
+        ctx = B.Ctx(positions=pos[0] if lockstep else pos, window=window,
+                    ring=ring)
+        new_layer_caches = []
+        for (unit, reps), gp, gc in zip(self.groups, params["groups"],
+                                        cache["layers"]):
+            gp = jax.tree_util.tree_map(
+                lambda a: a.astype(cdt) if a.dtype == cfg.param_dtype else a, gp)
+
+            def body(x, slices, unit=unit):
+                pslice, cslice = slices
+                new_c = {}
+                for i, kind in enumerate(unit):
+                    x, c = B.block_apply_dec(cfg, kind, pslice[f"b{i}"], x,
+                                             cslice[f"b{i}"], ctx)
+                    new_c[f"b{i}"] = c
+                return x, new_c
+
+            if cfg.scan_layers and reps > 1:
+                x, new_gc = jax.lax.scan(body, x, (gp, gc))
+            else:
+                outs = []
+                for r in range(reps):
+                    sl = jax.tree_util.tree_map(lambda a: a[r], (gp, gc))
+                    x, c = body(x, sl)
+                    outs.append(c)
+                new_gc = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                                *outs)
+            new_layer_caches.append(new_gc)
+        x = rms_norm(x, params["final_norm"])
+        if cfg.family == "audio":
+            logits = jnp.einsum("bd,kdv->bkv", x,
+                                params["unembed"].astype(cdt),
+                                preferred_element_type=jnp.float32)
+        else:
+            logits = jnp.einsum("bd,dv->bv", x, params["unembed"].astype(cdt),
+                                preferred_element_type=jnp.float32)
+        return logits, {"layers": new_layer_caches, "pos": pos + 1}
+
+    # -- abstract inputs -----------------------------------------------------
+
+    def input_specs(self, batch_size: int, seq_len: int, mode: str = "train",
+                    cache_len: Optional[int] = None) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input (DESIGN §4).
+
+        mode "train"/"prefill": token batch. mode "decode": one token + cache.
+        """
+        cfg = self.cfg
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if mode == "decode":
+            tok_shape = ((batch_size, cfg.n_codebooks) if cfg.family == "audio"
+                         else (batch_size,))
+            batch = {"token": sds(tok_shape, i32)}
+            cache = self.abstract_cache(batch_size, cache_len or seq_len)
+            return {"batch": batch, "cache": cache}
+        if cfg.family == "audio":
+            S_a = seq_len - cfg.n_cond_tokens
+            return {"tokens": sds((batch_size, cfg.n_codebooks, S_a), i32),
+                    "labels": sds((batch_size, cfg.n_codebooks, S_a), i32),
+                    "cond_embeds": sds((batch_size, cfg.n_cond_tokens,
+                                        cfg.d_model), cfg.compute_dtype)}
+        if cfg.family == "vlm":
+            S_t = seq_len - cfg.n_media_tokens
+            return {"tokens": sds((batch_size, S_t), i32),
+                    "labels": sds((batch_size, S_t), i32),
+                    "patch_embeds": sds((batch_size, cfg.n_media_tokens,
+                                         cfg.d_model), cfg.compute_dtype),
+                    "positions3": sds((3, batch_size, seq_len), i32)}
+        return {"tokens": sds((batch_size, seq_len), i32),
+                "labels": sds((batch_size, seq_len), i32)}
+
+    def batch_pspecs(self, mode: str = "train") -> Dict:
+        cfg = self.cfg
+        a = AGENT_AXES
+        if mode == "decode":
+            return {"batch": {"token": P(a)}, "cache": self.cache_pspecs()}
+        if cfg.family == "audio":
+            return {"tokens": P(a, None, None), "labels": P(a, None, None),
+                    "cond_embeds": P(a, None, None)}
+        if cfg.family == "vlm":
+            return {"tokens": P(a, None), "labels": P(a, None),
+                    "patch_embeds": P(a, None, None),
+                    "positions3": P(None, a, None)}
+        return {"tokens": P(a, None), "labels": P(a, None)}

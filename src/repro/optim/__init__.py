@@ -1,0 +1,5 @@
+"""Optimizers (no external deps): AdamW with bf16 moments + schedules."""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule"]

@@ -1,0 +1,89 @@
+"""AdamW for personalized (agent-stacked) parameter trees.
+
+Memory plan (DESIGN.md §6): personalization removes the ZeRO option across
+the data axis (each agent's params are distinct), so optimizer state pays the
+full A-way cost; we compensate with bf16 first/second moments (update math in
+f32). Adam is elementwise, so agent-stacked leaves need no special handling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.bfloat16
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig,
+                 lr_scale=1.0):
+    count = opt_state["count"] + 1
+    if cfg.grad_clip:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        gn = jnp.zeros(())
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bias1 = 1.0 - b1 ** c
+    bias2 = 1.0 - b2 ** c
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * (g * g)
+        mhat = m32 / bias1
+        vhat = v32 / bias2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return (newp.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt_state["m"],
+                                 opt_state["v"])
+    treedef = jax.tree_util.tree_structure(params)
+    flat = jax.tree_util.tree_leaves(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gn
+
+
+def cosine_schedule(step, total_steps: int, warmup: int = 100,
+                    min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                    0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,5 @@
+"""Serving: batched decode engine with slot-based continuous batching."""
+
+from .engine import ServeConfig, Engine, sample_token
+
+__all__ = ["ServeConfig", "Engine", "sample_token"]

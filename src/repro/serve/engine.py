@@ -1,0 +1,154 @@
+"""Batched serving engine.
+
+Slot-based continuous batching over a fixed decode batch B:
+
+  * requests (prompts) queue up; free slots are filled by prefilling the
+    prompt and splicing its KV/recurrent state into the live batch cache;
+  * one jitted ``decode_step`` advances ALL slots a token per tick;
+  * finished slots (EOS or max_tokens) are harvested and recycled.
+
+The decode batch layout matches the decode dry-run shapes: cache sharded
+batch-over-agents and sequence-over-"model" (split-KV, DESIGN.md §4).
+On CPU this runs the reduced configs for the demo/examples/tests; on TPU the
+same engine drives the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 4
+    cache_len: int = 256
+    max_new_tokens: int = 64
+    temperature: float = 0.0       # 0 => greedy
+    eos_id: Optional[int] = None
+    ring: bool = False
+    seed: int = 0
+
+
+def sample_token(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+    active: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        B = cfg.batch_size
+        self.cache = model.init_cache(B, cfg.cache_len)
+        self.slots = [_Slot() for _ in range(B)]
+        self._results: Dict[int, List[int]] = {}
+        self._next_id = 0
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        # token fed to idle slots (content irrelevant — output discarded)
+        self._last_tok = np.zeros(self._tok_shape(B), np.int32)
+
+        @jax.jit
+        def _decode(params, cache, token, key):
+            logits, cache = model.decode_step(params, cache, {"token": token},
+                                              ring=cfg.ring)
+            nxt = sample_token(logits, key, cfg.temperature)
+            return logits, cache, nxt
+        self._decode = _decode
+
+        @partial(jax.jit, static_argnames=("prompt_len",))
+        def _prefill_one(params, tokens, prompt_len):
+            batch = {"tokens": tokens, "labels": tokens}
+            logits, cache = model.prefill(params, batch, cache_len=cfg.cache_len)
+            return logits, cache
+        self._prefill_one = _prefill_one
+
+    def _tok_shape(self, B):
+        if self.model.cfg.family == "audio":
+            return (B, self.model.cfg.n_codebooks)
+        return (B,)
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, prompt_tokens) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, np.asarray(prompt_tokens, np.int32)))
+        return rid
+
+    def result(self, rid: int) -> Optional[List[int]]:
+        return self._results.get(rid)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        """Drive until all submitted requests finish."""
+        ticks = 0
+        while (self._pending or any(s.active for s in self.slots)) \
+                and ticks < max_ticks:
+            self._fill_slots()
+            self._tick()
+            ticks += 1
+        return dict(self._results)
+
+    # -- internals -----------------------------------------------------------
+
+    def _fill_slots(self):
+        for b, slot in enumerate(self.slots):
+            if slot.active or not self._pending:
+                continue
+            rid, prompt = self._pending.pop(0)
+            tokens = jnp.asarray(prompt[None])          # (1, S_prompt)
+            logits, pcache = self._prefill_one(self.params, tokens,
+                                               prompt.shape[-1])
+            # splice this request's cache into slot b of the live batch:
+            # layer leaves are (reps, B, ...); pos is (B,)
+            new_layers = jax.tree_util.tree_map(
+                lambda live, new: live.at[:, b].set(new[:, 0]),
+                self.cache["layers"], pcache["layers"])
+            new_pos = self.cache["pos"].at[b].set(pcache["pos"][0])
+            self.cache = {"layers": new_layers, "pos": new_pos}
+            first = np.asarray(sample_token(logits[:, 0], self._split(),
+                                            self.cfg.temperature))[0]
+            self._last_tok[b] = first
+            slot.request_id = rid
+            slot.generated = [int(np.atleast_1d(first).ravel()[0])]
+            slot.remaining = self.cfg.max_new_tokens - 1
+            slot.active = True
+
+    def _split(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _tick(self):
+        tok = jnp.asarray(self._last_tok)
+        logits, self.cache, nxt = self._decode(self.params, self.cache, tok,
+                                               self._split())
+        nxt_np = np.asarray(nxt)
+        for b, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            t = int(np.atleast_1d(nxt_np[b]).ravel()[0])
+            slot.generated.append(t)
+            slot.remaining -= 1
+            self._last_tok[b] = nxt_np[b]
+            if slot.remaining <= 0 or (self.cfg.eos_id is not None
+                                       and t == self.cfg.eos_id):
+                self._results[slot.request_id] = slot.generated
+                slot.active = False

@@ -1,0 +1,7 @@
+"""Training loop, personalized train_step factory, checkpointing."""
+
+from .trainer import TrainConfig, TrainState, make_train_step, train_loop
+from .checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "train_loop",
+           "save_checkpoint", "load_checkpoint"]

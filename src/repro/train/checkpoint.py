@@ -1,0 +1,73 @@
+"""Checkpointing: npz shards + json manifest (no external deps).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+The manifest stores the flattened key paths + dtypes/shapes so restore can
+rebuild the exact pytree (including TrainState dataclasses).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(tree, directory: str, step: int) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    # bf16 is not a native npz dtype: store raw uint16 view + dtype tag
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            meta[k] = {"dtype": "bfloat16", "shape": list(v.shape)}
+        else:
+            arrays[k] = v
+            meta[k] = {"dtype": str(v.dtype), "shape": list(v.shape)}
+    np.savez_compressed(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": meta}, f, indent=1)
+    return path
+
+
+def load_checkpoint(tree_like, directory: str, step: int = -1):
+    """Restore into the structure of ``tree_like`` (values replaced)."""
+    if step < 0:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                       if d.startswith("step_"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+        step = steps[-1]
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {}
+    for k, meta in manifest["leaves"].items():
+        arr = data[k]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(arr)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path_t, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_t)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        leaves.append(flat[key].reshape(leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

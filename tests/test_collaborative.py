@@ -1,0 +1,136 @@
+"""Claims around §4: CL-ADMM (async + sync) reaches the minimizer of Q_CL."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Graph, gaussian_kernel_graph, pad_datasets,
+                        cl_objective, direct_minimize, async_admm, sync_admm,
+                        init_state, solitary_mean, solitary_gd, LOSSES,
+                        quadratic_loss)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def mean_problem(seed=0, n=10):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, 2)) * 0.5
+    g = gaussian_kernel_graph(pts, sigma=1.0)
+    targets = np.where(pts[:, 0] > 0, 1.0, -1.0)
+    xs, ys = [], []
+    for i in range(n):
+        m = rng.integers(1, 15)
+        xs.append(targets[i] + rng.standard_normal((m, 1)) * 2.0)
+        ys.append(np.zeros(m))
+    data = pad_datasets(xs, ys)
+    return g, data
+
+
+def hinge_problem(seed=0, n=8, p=5):
+    rng = np.random.default_rng(seed)
+    targets = np.zeros((n, p))
+    targets[:, :2] = rng.standard_normal((n, 2))
+    from repro.core import angular_kernel_graph
+    g = angular_kernel_graph(targets, sigma=0.5, threshold=1e-4)
+    xs, ys = [], []
+    for i in range(n):
+        m = rng.integers(3, 20)
+        x = rng.uniform(-1, 1, (m, p))
+        y = np.sign(x @ targets[i])
+        y[y == 0] = 1.0
+        xs.append(x)
+        ys.append(y)
+    return g, pad_datasets(xs, ys), targets
+
+
+class TestQuadraticADMM:
+    def test_sync_matches_direct(self):
+        g, data = mean_problem(0)
+        mu, rho = 0.1, 1.0
+        star = np.asarray(direct_minimize(g, data, mu, "quadratic", steps=4000))
+        sol = solitary_mean(data)
+        tr = sync_admm(g, data, mu, rho, "quadratic", steps=150, theta_sol=sol)
+        np.testing.assert_allclose(tr.theta_hist[-1], star, atol=2e-2)
+
+    def test_async_matches_direct(self):
+        g, data = mean_problem(1)
+        mu, rho = 0.1, 1.0
+        star = np.asarray(direct_minimize(g, data, mu, "quadratic", steps=4000))
+        sol = solitary_mean(data)
+        tr = async_admm(g, data, mu, rho, "quadratic", steps=4000,
+                        record_every=500, theta_sol=sol)
+        np.testing.assert_allclose(tr.theta_hist[-1], star, atol=5e-2)
+
+    def test_objective_decreases(self):
+        g, data = mean_problem(2)
+        mu, rho = 0.2, 1.0
+        sol = solitary_mean(data)
+        tr = sync_admm(g, data, mu, rho, "quadratic", steps=60, theta_sol=sol)
+        W = jnp.asarray(g.W, jnp.float32)
+        q = [float(cl_objective(jnp.asarray(t), W, mu, quadratic_loss, data))
+             for t in tr.theta_hist[::10]]
+        assert q[-1] <= q[0] + 1e-6
+
+    def test_cold_start_converges_too(self):
+        """Paper: any init with Z(0) in C_E works; zeros is the simple option."""
+        g, data = mean_problem(3)
+        mu, rho = 0.1, 1.0
+        star = np.asarray(direct_minimize(g, data, mu, "quadratic", steps=4000))
+        zeros = np.zeros((g.n, 1))
+        tr = sync_admm(g, data, mu, rho, "quadratic", steps=300, theta_sol=zeros)
+        np.testing.assert_allclose(tr.theta_hist[-1], star, atol=3e-2)
+
+
+class TestHingeADMM:
+    def test_sync_approaches_direct_objective(self):
+        g, data, _ = hinge_problem(0)
+        mu, rho = 0.05, 1.0
+        loss_fn = LOSSES["hinge"]
+        W = jnp.asarray(g.W, jnp.float32)
+        star = np.asarray(direct_minimize(g, data, mu, "hinge", steps=6000))
+        q_star = float(cl_objective(jnp.asarray(star), W, mu, loss_fn, data))
+        sol = solitary_gd(data, "hinge", steps=300)
+        tr = sync_admm(g, data, mu, rho, "hinge", steps=120, k_steps=15,
+                       lr=0.03, theta_sol=np.asarray(sol))
+        q_admm = float(cl_objective(jnp.asarray(tr.theta_hist[-1]), W, mu,
+                                    loss_fn, data))
+        q_sol = float(cl_objective(jnp.asarray(sol), W, mu, loss_fn, data))
+        # ADMM must close most of the gap between solitary init and optimum
+        assert q_admm < q_star + 0.25 * (q_sol - q_star), (q_admm, q_star, q_sol)
+
+    def test_async_improves_on_solitary(self):
+        g, data, targets = hinge_problem(1)
+        mu, rho = 0.05, 1.0
+        sol = np.asarray(solitary_gd(data, "hinge", steps=300))
+        tr = async_admm(g, data, mu, rho, "hinge", steps=2000, k_steps=10,
+                        lr=0.03, record_every=500, theta_sol=sol)
+        loss_fn = LOSSES["hinge"]
+        W = jnp.asarray(g.W, jnp.float32)
+        q_end = float(cl_objective(jnp.asarray(tr.theta_hist[-1]), W, mu,
+                                   loss_fn, data))
+        q_sol = float(cl_objective(jnp.asarray(sol), W, mu, loss_fn, data))
+        assert q_end < q_sol
+
+
+class TestPartialConsensus:
+    def test_z_stays_in_constraint_set(self):
+        """Z(t) in C_E by construction (paper step 2 maintains it)."""
+        g, data = mean_problem(4)
+        sol = solitary_mean(data)
+        tr = sync_admm(g, data, 0.1, 1.0, "quadratic", steps=20, theta_sol=sol)
+        st = tr.final
+        Z_own, Z_nbr = np.asarray(st.Z_own), np.asarray(st.Z_nbr)
+        for (i, j) in g.edges():
+            np.testing.assert_allclose(Z_own[i, j], Z_nbr[j, i], atol=1e-5)
+            np.testing.assert_allclose(Z_own[j, i], Z_nbr[i, j], atol=1e-5)
+
+    def test_neighbor_copies_agree_at_convergence(self):
+        """Partial consensus: Theta_i^j -> Theta_j^j."""
+        g, data = mean_problem(5)
+        sol = solitary_mean(data)
+        tr = sync_admm(g, data, 0.1, 1.0, "quadratic", steps=200, theta_sol=sol)
+        T = np.asarray(tr.final.T)
+        for (i, j) in g.edges():
+            np.testing.assert_allclose(T[i, j], T[j, j], atol=2e-2)
+            np.testing.assert_allclose(T[j, i], T[i, i], atol=2e-2)

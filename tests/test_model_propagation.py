@@ -1,0 +1,144 @@
+"""Claims C1/C2: Prop. 1 closed form, Eq. (5) convergence, Theorem 1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Graph, gaussian_kernel_graph, two_moons, ring_graph,
+                        closed_form, synchronous, async_gossip, mp_objective,
+                        label_propagation)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scoped():
+    """Enable f64 for this module only — leaking x64 into the rest of the
+    suite changes index/literal dtypes session-wide."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def small_problem(seed=0, n=12, p=3):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, 2))
+    g = gaussian_kernel_graph(pts, sigma=1.0)
+    theta_sol = rng.standard_normal((n, p))
+    c = rng.uniform(0.05, 1.0, n)
+    return g, theta_sol, c
+
+
+class TestClosedForm:
+    def test_is_stationary_point_of_qmp(self):
+        """C1: Prop. 1 output is the argmin of Q_MP (gradient ~ 0)."""
+        g, theta_sol, c = small_problem()
+        alpha = 0.9
+        mu = (1 - alpha) / alpha
+        theta_star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        grad = jax.grad(lambda th: mp_objective(th, jnp.asarray(theta_sol),
+                                                jnp.asarray(g.W),
+                                                jnp.asarray(c), mu))(
+            jnp.asarray(theta_star))
+        np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-8)
+
+    def test_beats_random_perturbations(self):
+        g, theta_sol, c = small_problem(1)
+        alpha = 0.8
+        mu = (1 - alpha) / alpha
+        theta_star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        q = lambda th: float(mp_objective(jnp.asarray(th), jnp.asarray(theta_sol),
+                                          jnp.asarray(g.W), jnp.asarray(c), mu))
+        q_star = q(theta_star)
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            assert q(theta_star + 0.1 * rng.standard_normal(theta_star.shape)) > q_star
+
+    def test_label_propagation_special_case(self):
+        """C = I recovers Zhou et al. (2004) label propagation."""
+        g, theta_sol, _ = small_problem(2)
+        alpha = 0.95
+        lp = np.asarray(label_propagation(g, theta_sol, alpha))
+        # Zhou et al: F* = (1-alpha)(I - alpha S)^{-1} Y with S=P here
+        n = g.n
+        expect = (1 - alpha) * np.linalg.solve(np.eye(n) - alpha * g.P, theta_sol)
+        np.testing.assert_allclose(lp, expect, rtol=1e-10)
+
+    def test_confidence_strictly_more_general(self):
+        """Unequal C cannot be absorbed into Theta_sol with C=I (paper §3.1)."""
+        g, theta_sol, c = small_problem(3)
+        alpha = 0.9
+        with_c = np.asarray(closed_form(g, theta_sol, c, alpha))
+        without_c = np.asarray(closed_form(g, theta_sol, np.ones(g.n), alpha))
+        assert not np.allclose(with_c, without_c, atol=1e-6)
+
+
+class TestSynchronous:
+    def test_converges_to_closed_form(self):
+        g, theta_sol, c = small_problem(4)
+        alpha = 0.9
+        star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        it = np.asarray(synchronous(g, theta_sol, c, alpha, steps=2000))
+        np.testing.assert_allclose(it, star, rtol=0, atol=1e-5)
+
+    def test_any_init(self):
+        """Appendix B: convergence regardless of Theta(0)."""
+        g, theta_sol, c = small_problem(5)
+        alpha = 0.85
+        star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        rng = np.random.default_rng(0)
+        init = rng.standard_normal(star.shape) * 10
+        it = np.asarray(synchronous(g, theta_sol, c, alpha, steps=3000,
+                                    theta0=init))
+        np.testing.assert_allclose(it, star, rtol=0, atol=1e-5)
+
+
+class TestAsyncGossip:
+    def test_theorem1_convergence_in_expectation(self):
+        """C2/Thm 1: E[theta_i(t)] -> theta_i*; single long run gets close."""
+        g, theta_sol, c = small_problem(6, n=10, p=2)
+        alpha = 0.9
+        star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        tr = async_gossip(g, theta_sol, c, alpha, steps=8000, seed=0,
+                          record_every=500)
+        final = tr.theta_hist[-1]
+        err0 = np.linalg.norm(np.asarray(theta_sol) - star)
+        err = np.linalg.norm(final - star)
+        assert err < 0.05 * err0, (err, err0)
+
+    def test_neighbor_knowledge_converges_too(self):
+        """Thm 1 also covers Theta_tilde_i^j for j in N_i."""
+        g, theta_sol, c = small_problem(7, n=8, p=2)
+        alpha = 0.9
+        star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        tr = async_gossip(g, theta_sol, c, alpha, steps=8000, seed=1,
+                          record_every=1000)
+        K = tr.final_knowledge
+        for i in range(g.n):
+            for j in list(g.neighbors(i)) + [i]:
+                assert np.linalg.norm(K[i, j] - star[j]) < 0.15 * (
+                    1.0 + np.linalg.norm(star[j]))
+
+    def test_error_decreases(self):
+        g, theta_sol, c = small_problem(8, n=10, p=1)
+        alpha = 0.95
+        star = np.asarray(closed_form(g, theta_sol, c, alpha))
+        tr = async_gossip(g, theta_sol, c, alpha, steps=6000, seed=2,
+                          record_every=1000)
+        errs = np.linalg.norm(tr.theta_hist - star[None], axis=(1, 2))
+        assert errs[-1] < errs[0]
+        assert errs[-1] < 0.2 * errs[0]
+
+
+class TestMeanEstimationSetup:
+    """Sanity of the §5.1 experimental generator."""
+
+    def test_two_moons_shapes(self):
+        pts, labels = two_moons(300, seed=0)
+        assert pts.shape == (300, 2)
+        assert set(labels.tolist()) == {0, 1}
+
+    def test_kernel_graph_connected(self):
+        pts, _ = two_moons(50, seed=1)
+        g = gaussian_kernel_graph(pts, sigma=0.1)
+        assert g.is_connected()
+        assert g.n == 50

@@ -1,0 +1,74 @@
+"""Integration tests pinning the paper's experimental claims at small scale
+(fast versions of the benchmark suites; full curves in benchmarks/)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (closed_form, solitary_mean, solitary_gd,
+                        confidences_from_counts, consensus_model, sync_admm)
+from repro.data import (mean_estimation_problem,
+                        linear_classification_problem, accuracy)
+
+
+class TestC3Confidence:
+    def test_confidence_wins_under_unbalance(self):
+        wins, flat_err = [], []
+        for inst in range(10):
+            g, data, targets, _ = mean_estimation_problem(n=100, eps=1.0,
+                                                           seed=100 + inst)
+            sol = np.asarray(solitary_mean(data))
+            conf = np.asarray(confidences_from_counts(data.counts))
+            with_c = np.asarray(closed_form(g, sol, conf, 0.99))[:, 0]
+            no_c = np.asarray(closed_form(g, sol, np.ones(g.n), 0.99))[:, 0]
+            e_c = np.mean((with_c - targets) ** 2)
+            e_nc = np.mean((no_c - targets) ** 2)
+            wins.append(e_c < e_nc)
+            flat_err.append(e_c)
+        assert np.mean(wins) >= 0.7          # paper: ~0.85 at eps=1
+        assert np.mean(flat_err) < 0.2       # with-confidence error stays low
+
+    def test_balanced_data_makes_no_difference(self):
+        g, data, targets, _ = mean_estimation_problem(n=40, eps=0.0, seed=0)
+        sol = np.asarray(solitary_mean(data))
+        conf = np.asarray(confidences_from_counts(data.counts))
+        with_c = np.asarray(closed_form(g, sol, conf, 0.99))
+        no_c = np.asarray(closed_form(g, sol, np.ones(g.n), 0.99))
+        np.testing.assert_allclose(with_c, no_c, atol=1e-6)
+
+
+class TestC5Ordering:
+    def test_cl_beats_solitary_beats_consensus(self):
+        accs = {"sol": [], "cons": [], "mp": [], "cl": []}
+        for inst in range(3):
+            g, train, test, _ = linear_classification_problem(
+                n=50, p=30, seed=inst * 13)
+            sol = np.asarray(solitary_gd(train, "hinge", steps=250))
+            conf = np.asarray(confidences_from_counts(train.counts))
+            cons = np.tile(np.asarray(consensus_model(train, "hinge")),
+                           (g.n, 1))
+            mp = np.asarray(closed_form(g, sol, conf, 0.8))
+            cl = np.asarray(sync_admm(g, train, 0.05, 1.0, "hinge", steps=40,
+                                      k_steps=12, lr=0.05, theta_sol=sol
+                                      ).theta_hist[-1])
+            accs["sol"].append(np.mean(accuracy(sol, test)))
+            accs["cons"].append(np.mean(accuracy(cons, test)))
+            accs["mp"].append(np.mean(accuracy(mp, test)))
+            accs["cl"].append(np.mean(accuracy(cl, test)))
+        m = {k: float(np.mean(v)) for k, v in accs.items()}
+        assert m["cl"] > m["sol"] > m["cons"], m
+        assert m["mp"] > m["sol"], m
+        assert m["cl"] > m["mp"] - 0.02, m   # CL >= MP (paper Fig 3)
+
+    def test_c6_cl_equalizes_across_sizes(self):
+        g, train, test, _ = linear_classification_problem(n=60, p=30, seed=7)
+        sol = np.asarray(solitary_gd(train, "hinge", steps=250))
+        cl = np.asarray(sync_admm(g, train, 0.05, 1.0, "hinge", steps=50,
+                                  k_steps=12, lr=0.05, theta_sol=sol
+                                  ).theta_hist[-1])
+        acc = accuracy(cl, test)
+        counts = np.asarray(train.counts)
+        small = acc[counts <= 7]
+        large = acc[counts >= 14]
+        if len(small) and len(large):
+            # data-poor agents end up within a few points of data-rich ones
+            assert abs(float(np.mean(small)) - float(np.mean(large))) < 0.12
