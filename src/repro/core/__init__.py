@@ -8,6 +8,9 @@ from .losses import (AgentData, pad_datasets, quadratic_loss, hinge_loss,
                      confidences_from_counts, total_loss, LOSSES)
 from .model_propagation import (closed_form, synchronous, async_gossip,
                                 mp_objective, label_propagation, AsyncTrace)
+from .sparse import (NeighborTables, DeviceTables, padded_neighbor_tables,
+                     tables_from_adjacency, to_device, sample_event,
+                     neighbor_aggregate, quadratic_primal_core)
 from .collaborative import (cl_objective, direct_minimize, init_state,
                             async_admm, sync_admm, ADMMState, CLTrace)
 from .consensus import consensus_model, consensus_mean

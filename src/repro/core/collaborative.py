@@ -37,6 +37,8 @@ import numpy as np
 
 from .graph import Graph
 from .losses import AgentData, LOSSES
+from .sparse import (padded_neighbor_tables, quadratic_primal_core,
+                     sample_event, to_device)
 
 
 def cl_objective(theta, W, mu, loss_fn, data: AgentData):
@@ -110,32 +112,32 @@ def init_state(graph: Graph, theta_sol) -> ADMMState:
 # ---------------------------------------------------------------------------
 
 
-def _primal_quadratic(state: ADMMState, l, W, D, mask, mu, rho, data: AgentData):
+def _primal_quadratic(state: ADMMState, l, nbr_idx, nbr_w, deg_count, D,
+                      mu, rho, data: AgentData):
     """Exact argmin of L_rho^l for the quadratic loss, by block elimination.
 
     Stationarity for neighbor blocks j in N_l:
         (W_lj + rho) T^j  =  W_lj T^l + rho Z_nbr[l,j] - L_nbr[l,j]
     Substituting into the self block gives a scalar equation per coordinate.
     L_l(theta) = sum_k ||theta - x_k||^2  =>  grad = 2 (m_l theta - sum_k x_k).
+
+    Gathered over the padded-neighbor slot tables and solved by the shared
+    ``quadratic_primal_core`` so the sparse ADMM engine matches bit-for-bit.
     """
-    w = W[l] * mask[l]                             # (n,)
-    b = rho * state.Z_nbr[l] - state.L_nbr[l]      # (n, p)
+    k = nbr_idx.shape[1]
+    idx = nbr_idx[l]                               # (k,)
+    live = jnp.arange(k) < deg_count[l]
+    w = nbr_w[l]                                   # (k,) 0 at pads
     m_l = jnp.sum(data.mask[l])
     sx = jnp.sum(data.x[l] * data.mask[l][:, None], axis=0)   # (p,)
-    denom_j = jnp.where(mask[l], w + rho, 1.0)
-    n_nbrs = jnp.sum(mask[l])
-    a = (D[l] + 2.0 * mu * D[l] * m_l + rho * n_nbrs
-         - jnp.sum(jnp.where(mask[l], w * w / denom_j, 0.0)))
-    rhs = (2.0 * mu * D[l] * sx
-           + jnp.sum(jnp.where(mask[l][:, None],
-                               rho * state.Z_own[l] - state.L_own[l], 0.0), axis=0)
-           + jnp.sum(jnp.where(mask[l][:, None], (w[:, None] * b) / denom_j[:, None],
-                               0.0), axis=0))
-    theta_l = rhs / a
-    theta_js = (w[:, None] * theta_l[None, :] + b) / denom_j[:, None]
-    new_row = jnp.where(mask[l][:, None], theta_js, state.T[l])
-    new_row = new_row.at[l].set(theta_l)
-    return state.T.at[l].set(new_row)
+    theta_l, theta_js = quadratic_primal_core(
+        w, live, state.Z_own[l][idx], state.Z_nbr[l][idx],
+        state.L_own[l][idx], state.L_nbr[l][idx], D[l], m_l, sx, mu, rho)
+    # pads scatter theta_l onto position l, which is overwritten right after
+    row = state.T[l].at[jnp.where(live, idx, l)].set(
+        jnp.where(live[:, None], theta_js, theta_l[None]))
+    row = row.at[l].set(theta_l)
+    return state.T.at[l].set(row)
 
 
 def _primal_subgrad(state: ADMMState, l, W, D, mask, mu, rho,
@@ -221,9 +223,10 @@ class CLTrace:
     final: "ADMMState"
 
 
-def _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr):
+def _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr):
     if loss == "quadratic":
-        return lambda st, l: _primal_quadratic(st, l, W, D, mask, mu, rho, data)
+        return lambda st, l: _primal_quadratic(st, l, tabs.nbr_idx, tabs.nbr_w,
+                                               tabs.deg_count, D, mu, rho, data)
     return lambda st, l: _primal_subgrad(st, l, W, D, mask, mu, rho, data,
                                          loss, k_steps, lr)
 
@@ -242,19 +245,16 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
     W = jnp.asarray(graph.W, jnp.float32)
     D = jnp.asarray(graph.degrees, jnp.float32)
     mask = jnp.asarray(graph.W > 0)
-    pi_cdf = jnp.cumsum(jnp.asarray(graph.neighbor_distribution(), jnp.float32),
-                        axis=1)
+    tabs = to_device(padded_neighbor_tables(graph))
     if state is None:
         if theta_sol is None:
             raise ValueError("need theta_sol (warm start) or explicit state")
         state = init_state(graph, theta_sol)
-    primal = _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr)
+    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr)
 
     def tick(st: ADMMState, key):
-        ki, kj = jax.random.split(key)
-        i = jax.random.randint(ki, (), 0, n)
-        u = jax.random.uniform(kj)
-        j = jnp.clip(jnp.searchsorted(pi_cdf[i], u, side="right"), 0, n - 1)
+        i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
+        j = tabs.nbr_idx[i, s]
         T = primal(st, i)
         st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
         T = primal(st, j)
@@ -290,11 +290,12 @@ def sync_admm(graph: Graph, data: AgentData, mu: float, rho: float,
     W = jnp.asarray(graph.W, jnp.float32)
     D = jnp.asarray(graph.degrees, jnp.float32)
     mask = jnp.asarray(graph.W > 0)
+    tabs = to_device(padded_neighbor_tables(graph))
     if state is None:
         if theta_sol is None:
             raise ValueError("need theta_sol (warm start) or explicit state")
         state = init_state(graph, theta_sol)
-    primal = _make_primal(W, D, mask, mu, rho, data, loss, k_steps, lr)
+    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr)
 
     @jax.jit
     def run(state):

@@ -15,6 +15,11 @@ Three equivalent solvers for  Q_MP(Theta) =
 Convergence of async_gossip in expectation to Theta* is Theorem 1; it is
 validated in tests/test_model_propagation.py and exercised at scale in
 benchmarks/bench_mp_comm.py.
+
+The inner wake-up sampling and neighbor aggregation go through the shared
+padded-neighbor helpers in ``core.sparse`` so the O(n k p) event-driven
+engine in ``repro.simulate`` reproduces this reference bit-for-bit
+(DESIGN.md §4, tests/test_simulate.py).
 """
 
 from __future__ import annotations
@@ -28,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph
+from .sparse import (neighbor_aggregate, padded_neighbor_tables, sample_event,
+                     to_device)
 
 
 def mp_objective(theta, theta_sol, W, c, mu):
@@ -88,30 +95,29 @@ class AsyncTrace:
 
 
 @partial(jax.jit, static_argnames=("steps", "record_every"))
-def _async_scan(P, pi_cdf, theta_sol, c, alpha, key, steps, record_every,
-                T0):
+def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
+                key, steps, record_every, T0):
     """Exact async gossip (§3.2) as a lax.scan.
 
     T is (n, n, p): T[i, j] = agent i's knowledge of agent j's model.
     One scan step = one clock tick = 2 pairwise communications (i->j, j->i).
+    Neighbor selection and aggregation use the shared slot tables so the
+    sparse engine (repro.simulate.engines) matches bit-for-bit.
     """
     n, _, p = T0.shape
     abar = 1.0 - alpha
 
     def local_update(T, l):
         """Update step Eq. (6) for agent l using its own knowledge row."""
-        w = P[l]                                  # W_lk / D_ll
-        agg = w @ T[l]                            # (p,)
+        nbrs = T[l][nbr_idx[l]]                   # (k_max, p) gathered slots
+        agg = neighbor_aggregate(nbr_p[l], nbrs)  # (p,)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
         return T.at[l, l].set(new)
 
     def step(carry, key):
         T = carry
-        ki, kj = jax.random.split(key)
-        i = jax.random.randint(ki, (), 0, n)
-        u = jax.random.uniform(kj)
-        j = jnp.searchsorted(pi_cdf[i], u, side="right").astype(jnp.int32)
-        j = jnp.clip(j, 0, n - 1)
+        i, s = sample_event(key, n, slot_cdf, deg_count)
+        j = nbr_idx[i, s]
         # communication step: exchange current self-models
         T = T.at[i, j].set(T[j, j])
         T = T.at[j, i].set(T[i, i])
@@ -149,9 +155,7 @@ def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
     n = graph.n
     theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
     p = theta_sol.shape[1]
-    P = jnp.asarray(graph.P, jnp.float32)
-    pi = jnp.asarray(graph.neighbor_distribution(), jnp.float32)
-    pi_cdf = jnp.cumsum(pi, axis=1)
+    tabs = to_device(padded_neighbor_tables(graph))
     c = jnp.asarray(c, jnp.float32)
 
     if theta0 is None:
@@ -163,7 +167,8 @@ def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
         T0 = jnp.asarray(theta0, jnp.float32)
 
     key = jax.random.PRNGKey(seed)
-    T, hist = _async_scan(P, pi_cdf, theta_sol, c, alpha, key, steps,
+    T, hist = _async_scan(tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf,
+                          tabs.deg_count, theta_sol, c, alpha, key, steps,
                           record_every, T0)
     n_rec = hist.shape[0]
     every = 1 if record_every == 1 else record_every

@@ -1,0 +1,193 @@
+"""Padded-neighbor (CSR-style) tables shared by the dense reference engines
+and the sparse event-driven simulator (DESIGN.md §4).
+
+The asynchronous algorithms (MP gossip §3.2, CL-ADMM §4.2) only ever touch an
+agent's own row of state — its neighbors' models, its per-edge secondary
+variables.  Everything they compute can therefore be expressed over a padded
+neighbor layout:
+
+    nbr_idx  (n, k_max) int32  — sorted neighbor ids; pad slots repeat the
+                                 row's last real neighbor (never selected,
+                                 weight exactly 0)
+    rev_slot (n, k_max) int32  — rev_slot[i, s] = position of i in the
+                                 neighbor list of j = nbr_idx[i, s]
+    nbr_w    (n, k_max) f32    — raw edge weights W_ij (0 at pads)
+    nbr_p    (n, k_max) f32    — stochastic weights P_ij = W_ij / D_ii
+    slot_cdf (n, k_max) f32    — cumsum of the uniform neighbor-selection
+                                 distribution pi_i over slots (flat at pads)
+    deg_count (n,)      int32  — number of live slots per row
+
+The dense reference engines in ``model_propagation`` / ``collaborative`` keep
+their (n, n, p) state but route every inner aggregation, neighbor-selection
+draw, and primal solve through the helpers below, gathered over these same
+slot tables.  The sparse engines in ``repro.simulate`` apply the *identical*
+jnp expressions to their (n, k_max, p) state.  Identical ops on identical
+values make the two trajectories match bit-for-bit given the same RNG stream
+— the property tested in tests/test_simulate.py.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class NeighborTables(NamedTuple):
+    """Host-side (numpy) padded-neighbor tables; see module docstring."""
+
+    nbr_idx: np.ndarray    # (n, k_max) int32
+    rev_slot: np.ndarray   # (n, k_max) int32
+    deg_count: np.ndarray  # (n,) int32
+    nbr_w: np.ndarray      # (n, k_max) float32, raw W
+    nbr_p: np.ndarray      # (n, k_max) float32, W / D
+    slot_cdf: np.ndarray   # (n, k_max) float32
+    deg_w: np.ndarray      # (n,) float64 weighted degree D_ii
+
+    @property
+    def n(self) -> int:
+        return self.nbr_idx.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.nbr_idx.shape[1]
+
+
+def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
+                          weight_lists: Sequence[np.ndarray],
+                          deg_w: Optional[np.ndarray] = None) -> NeighborTables:
+    """Build NeighborTables from per-agent sorted neighbor/weight lists.
+
+    Never materializes an n x n matrix: O(n * k_max) memory throughout, so it
+    is the constructor used by the large-topology generators as well as by
+    ``padded_neighbor_tables`` (which extracts the lists from a dense Graph).
+
+    ``deg_w`` overrides the weighted degrees — Graph-derived tables pass the
+    dense ``W.sum(axis=1)`` so D_ii matches the reference engines bitwise.
+    """
+    n = len(nbr_lists)
+    deg_count = np.array([len(a) for a in nbr_lists], np.int32)
+    if (deg_count == 0).any():
+        raise ValueError("every agent needs at least one neighbor")
+    k_max = int(deg_count.max())
+
+    nbr_idx = np.zeros((n, k_max), np.int32)
+    nbr_w = np.zeros((n, k_max), np.float32)
+    for i, (nb, wt) in enumerate(zip(nbr_lists, weight_lists)):
+        d = len(nb)
+        nbr_idx[i, :d] = nb
+        nbr_idx[i, d:] = nb[-1]          # pads duplicate the last neighbor
+        nbr_w[i, :d] = wt
+
+    if deg_w is None:
+        deg_w = np.array([np.asarray(w, np.float64).sum()
+                          for w in weight_lists])
+    deg_w = np.asarray(deg_w, np.float64)
+    live = np.arange(k_max)[None, :] < deg_count[:, None]
+    nbr_p = np.where(live, nbr_w.astype(np.float64)
+                     / deg_w[:, None], 0.0).astype(np.float32)
+
+    # uniform neighbor-selection cdf over slots (pi_i, paper §3.2); float32
+    # cumsum so both engines compare u against bit-identical thresholds
+    probs = np.where(live, (1.0 / deg_count[:, None]).astype(np.float32),
+                     np.float32(0.0)).astype(np.float32)
+    slot_cdf = np.cumsum(probs, axis=1, dtype=np.float32)
+
+    # rev_slot via one lexsort over the directed edge list: within each
+    # destination block, the rank of (dst, src) is src's slot in dst's row
+    src = np.repeat(np.arange(n, dtype=np.int64), deg_count)
+    dst = np.concatenate([np.asarray(a, np.int64) for a in nbr_lists])
+    slot = np.concatenate([np.arange(d, dtype=np.int64) for d in deg_count])
+    order = np.lexsort((src, dst))
+    block_start = np.concatenate([[0], np.cumsum(deg_count)[:-1]])
+    rank = np.empty(len(src), np.int64)
+    rank[order] = np.arange(len(src)) - block_start[dst[order]]
+    rev = np.zeros((n, k_max), np.int32)
+    rev[src, slot] = rank
+    for i in range(n):                   # pads copy the last real slot's rev
+        rev[i, deg_count[i]:] = rev[i, deg_count[i] - 1]
+
+    return NeighborTables(nbr_idx, rev, deg_count, nbr_w, nbr_p,
+                          slot_cdf, deg_w)
+
+
+def padded_neighbor_tables(graph) -> NeighborTables:
+    """NeighborTables of a ``core.graph.Graph`` (small/medium n only)."""
+    W = np.asarray(graph.W)
+    nbrs = [np.nonzero(W[i])[0] for i in range(W.shape[0])]
+    wts = [W[i, nb] for i, nb in enumerate(nbrs)]
+    return tables_from_adjacency(nbrs, wts, deg_w=W.sum(axis=1))
+
+
+class DeviceTables(NamedTuple):
+    """Device-resident mirror of NeighborTables (what jitted engines take)."""
+
+    nbr_idx: jnp.ndarray
+    rev_slot: jnp.ndarray
+    deg_count: jnp.ndarray
+    nbr_w: jnp.ndarray
+    nbr_p: jnp.ndarray
+    slot_cdf: jnp.ndarray
+    deg_w: jnp.ndarray
+
+
+def to_device(tables: NeighborTables, dtype=jnp.float32) -> DeviceTables:
+    return DeviceTables(
+        jnp.asarray(tables.nbr_idx), jnp.asarray(tables.rev_slot),
+        jnp.asarray(tables.deg_count), jnp.asarray(tables.nbr_w, dtype),
+        jnp.asarray(tables.nbr_p, dtype), jnp.asarray(tables.slot_cdf, dtype),
+        jnp.asarray(tables.deg_w, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Shared jnp building blocks (used verbatim by dense AND sparse engines)
+# ---------------------------------------------------------------------------
+
+
+def sample_event(key, n: int, slot_cdf, deg_count):
+    """One wake-up draw: (agent i, neighbor slot s) — paper §3.2 / §4.2.
+
+    i is uniform over agents; the slot is drawn from pi_i by inverting the
+    float32 slot cdf (clipped to the live range so pads are never selected).
+    """
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, (), 0, n)
+    u = jax.random.uniform(kj)
+    s = jnp.searchsorted(slot_cdf[i], u, side="right").astype(jnp.int32)
+    s = jnp.minimum(s, deg_count[i] - 1)
+    return i, s
+
+
+def neighbor_aggregate(w_slots, theta_slots):
+    """sum_s w[s] * theta[s]  over the k_max slot axis: (k,), (k, p) -> (p,).
+
+    The single shared reduction both engines use — same shapes, same HLO,
+    bit-identical result (pad slots contribute an exact 0.0 * value).
+    """
+    return jnp.einsum("k,kp->p", w_slots, theta_slots)
+
+
+def quadratic_primal_core(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
+                          D_l, m_l, sx, mu, rho):
+    """Exact argmin of the CL-ADMM local Lagrangian for the quadratic loss,
+    over one agent's slot row (block elimination; paper §4.2 step 1).
+
+    w: (k,) raw edge weights (0 at pads); live: (k,) bool;
+    z/l slices: (k, p) agent-l secondary/dual rows; D_l, m_l scalars;
+    sx: (p,) sum of l's local samples.  Returns (theta_l (p,), theta_js (k, p)).
+    """
+    b = rho * z_nbr_s - l_nbr_s                               # (k, p)
+    denom = jnp.where(live, w + rho, 1.0)                     # (k,)
+    n_nbrs = jnp.sum(live)
+    a = (D_l + 2.0 * mu * D_l * m_l + rho * n_nbrs
+         - jnp.sum(jnp.where(live, w * w / denom, 0.0)))
+    rhs = (2.0 * mu * D_l * sx
+           + jnp.sum(jnp.where(live[:, None],
+                               rho * z_own_s - l_own_s, 0.0), axis=0)
+           + jnp.sum(jnp.where(live[:, None],
+                               (w[:, None] * b) / denom[:, None], 0.0), axis=0))
+    theta_l = rhs / a
+    theta_js = (w[:, None] * theta_l[None, :] + b) / denom[:, None]
+    return theta_l, theta_js

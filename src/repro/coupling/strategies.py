@@ -43,6 +43,18 @@ from jax.sharding import PartitionSpec as P
 from repro.core.graph import Graph
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: jax.shard_map (new, check_vma) or
+    jax.experimental.shard_map.shard_map (jax <= 0.4.x, check_rep)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class CouplingConfig:
     mode: str = "mp"              # none | consensus | mp | cl | cl_admm
@@ -247,9 +259,9 @@ def make_coupling(cfg: CouplingConfig, state: CouplingState,
                     out = gossip_mix_tree(p_loc, s_loc, state, cfg, names)
                     return jax.tree_util.tree_map(lambda a: a[None], out)
 
-                mixed = jax.shard_map(
+                mixed = _shard_map(
                     body, mesh=mesh, in_specs=(specs_in, specs_in),
-                    out_specs=specs_in, check_vma=False)(params, solitary)
+                    out_specs=specs_in)(params, solitary)
                 do = (step % cfg.every) == 0
                 return jax.tree_util.tree_map(
                     lambda a, b: jnp.where(do, a, b), mixed, params)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import graph_mix as _gm
 from . import flash_attention as _fa
 from . import admm_update as _au
+from . import sparse_mix as _sm
 
 
 def _interpret() -> bool:
@@ -29,6 +30,12 @@ def _interpret() -> bool:
 def graph_mix(theta, theta_sol, A, b, *, block_d: int = _gm.DEFAULT_BLOCK_D):
     return _gm.graph_mix(theta, theta_sol, A, b, block_d=block_d,
                          interpret=_interpret())
+
+
+def sparse_gather_mix(table, idx, w, b, sol, *,
+                      block_n: int = _sm.DEFAULT_BLOCK_N):
+    return _sm.sparse_gather_mix(table, idx, w, b, sol, block_n=block_n,
+                                 interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, window: Optional[int] = None,

@@ -22,6 +22,18 @@ def graph_mix(theta, theta_sol, A, b):
             + b[:, None] * theta_sol.astype(jnp.float32)).astype(theta.dtype)
 
 
+def sparse_gather_mix(table, idx, w, b, sol):
+    """CSR model-propagation sweep over padded-neighbor tables.
+
+    table, sol: (n, p); idx: (n, k) int32 neighbor ids; w: (n, k) mixing
+    weights (0 at pads); b: (n,) anchor coefficients.
+    returns out[i] = sum_s w[i, s] * table[idx[i, s]] + b[i] * sol[i]
+    """
+    gathered = table[idx].astype(jnp.float32)            # (n, k, p)
+    mixed = jnp.einsum("nk,nkp->np", w.astype(jnp.float32), gathered)
+    return (mixed + b[:, None] * sol.astype(jnp.float32)).astype(table.dtype)
+
+
 def flash_attention(q, k, v, *, window: Optional[int] = None):
     """Causal (optionally sliding-window) attention oracle.
 

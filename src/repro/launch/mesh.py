@@ -24,6 +24,22 @@ def make_debug_mesh(n_agents: int = 4, model: int = 2, *,
     return jax.make_mesh((n_agents, model), ("data", "model"))
 
 
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Compat shim across jax versions: ``jax.set_mesh`` (new), else
+    ``jax.sharding.use_mesh``, else the Mesh object's own context manager
+    (the only spelling on jax <= 0.4.x).
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    sharding_use = getattr(jax.sharding, "use_mesh", None)
+    if sharding_use is not None:
+        return sharding_use(mesh)
+    return mesh
+
+
 def n_agents_of(mesh) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return sizes.get("pod", 1) * sizes.get("data", 1)

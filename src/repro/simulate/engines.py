@@ -1,0 +1,406 @@
+"""Sparse event-driven engines: MP gossip + CL-ADMM over padded-neighbor
+state (DESIGN.md §4).
+
+State is O(n * k * p) instead of the reference engines' O(n^2 * p):
+
+  theta (n, p)        — each agent's own model
+  K     (n, k_max, p) — K[i, s] = agent i's copy of neighbor nbr_idx[i, s]
+
+Two operating modes:
+
+* **exact** (``sparse_async_gossip`` / ``sparse_async_admm``): one event per
+  scan tick, consuming the same RNG stream and the same shared slot helpers
+  (``core.sparse``) as the dense references — trajectories match those of
+  ``core.model_propagation.async_gossip`` / ``core.collaborative.async_admm``
+  bit-for-bit given the same seed (tests/test_simulate.py).
+
+* **scenario** (``run_mp_scenario``): batched wake-ups from the scheduler
+  with message drops, staleness, stragglers, churn and partitions.  All
+  communication scatters of a round land before any model update reads, so
+  batch collisions are deterministic (duplicate updates compute identical
+  values from the same post-communication state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import AgentData
+from repro.core.sparse import (neighbor_aggregate, quadratic_primal_core,
+                               sample_event)
+from . import scheduler as sched
+from .scheduler import NetworkConditions
+from .topology import SparseTopology
+
+
+# ---------------------------------------------------------------------------
+# Exact sparse MP gossip (mirrors core.model_propagation.async_gossip)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SparseTrace:
+    """theta_hist: (n_records, n, p); comms_hist: cumulative pairwise comms."""
+
+    theta_hist: np.ndarray
+    comms_hist: np.ndarray
+    final_theta: np.ndarray
+    final_knowledge: np.ndarray   # (n, k_max, p) neighbor slots
+
+
+def _mp_warm_start(tabs, theta_sol):
+    """Solitary models everywhere the agent has knowledge (paper §3.2)."""
+    theta = theta_sol
+    K = theta_sol[tabs.nbr_idx]              # (n, k_max, p)
+    return theta, K
+
+
+@partial(jax.jit, static_argnames=("steps", "record_every"))
+def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
+                       theta_sol, c, alpha, key, steps, record_every,
+                       theta0, K0):
+    n, p = theta0.shape
+    abar = 1.0 - alpha
+
+    def local_update(theta, K, l):
+        agg = neighbor_aggregate(nbr_p[l], K[l])
+        new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
+        return theta.at[l].set(new)
+
+    def step(carry, key):
+        theta, K = carry
+        i, s = sample_event(key, n, slot_cdf, deg_count)
+        j = nbr_idx[i, s]
+        r = rev_slot[i, s]
+        # communication step: exchange current self-models
+        K = K.at[i, s].set(theta[j])
+        K = K.at[j, r].set(theta[i])
+        # update step for both endpoints
+        theta = local_update(theta, K, i)
+        theta = local_update(theta, K, j)
+        return (theta, K), theta if record_every == 1 else None
+
+    if record_every == 1:
+        keys = jax.random.split(key, steps)
+        (theta, K), hist = jax.lax.scan(step, (theta0, K0), keys)
+        return theta, K, hist
+
+    n_rec = steps // record_every
+
+    def outer(carry, key):
+        keys = jax.random.split(key, record_every)
+        carry, _ = jax.lax.scan(lambda c_, k: (step(c_, k)[0], None),
+                                carry, keys)
+        return carry, carry[0]
+
+    keys = jax.random.split(key, n_rec)
+    (theta, K), hist = jax.lax.scan(outer, (theta0, K0), keys)
+    return theta, K, hist
+
+
+def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
+                        steps: int, seed: int = 0,
+                        record_every: int = 100) -> SparseTrace:
+    """The paper's async gossip MP algorithm over O(n k p) sparse state.
+
+    Bit-for-bit equal to ``core.model_propagation.async_gossip`` for the same
+    (graph, seed) — same RNG stream, same shared slot arithmetic — while
+    scaling to tens of thousands of agents.
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    c = jnp.asarray(c, jnp.float32)
+    theta0, K0 = _mp_warm_start(tabs, theta_sol)
+    key = jax.random.PRNGKey(seed)
+    theta, K, hist = _sparse_async_scan(
+        tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf, tabs.deg_count,
+        tabs.rev_slot, theta_sol, c, alpha, key, steps, record_every,
+        theta0, K0)
+    n_rec = hist.shape[0]
+    every = 1 if record_every == 1 else record_every
+    comms = 2 * every * (np.arange(n_rec) + 1)
+    return SparseTrace(np.asarray(hist), comms, np.asarray(theta),
+                       np.asarray(K))
+
+
+# ---------------------------------------------------------------------------
+# Synchronous sparse sweep (Eq. 5 over CSR) — the gather-mix hot loop
+# ---------------------------------------------------------------------------
+
+
+def sparse_sync_mp(topo: SparseTopology, theta_sol, c, alpha: float,
+                   sweeps: int, use_kernel: bool = False) -> jnp.ndarray:
+    """Fixed-point iteration Eq. (5) over the sparse neighbor layout.
+
+    theta_{t+1}[i] = (alpha * sum_s P[i,s] theta_t[nbr[i,s]]
+                      + (1-alpha) c_i theta_sol[i]) / (alpha + (1-alpha) c_i)
+
+    One sweep = one gather-mix over all agents: O(n * k * p) work, the op the
+    optional Pallas kernel (kernels/sparse_mix.py) accelerates.
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    c = jnp.asarray(c, jnp.float32)
+    abar = 1.0 - alpha
+    denom = alpha + abar * c
+    w = (alpha / denom)[:, None] * tabs.nbr_p          # (n, k) mixing slots
+    b = abar * c / denom                               # (n,) anchor
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def sweep(theta, _):
+            return kops.sparse_gather_mix(theta, tabs.nbr_idx, w, b,
+                                          theta_sol), None
+    else:
+        def sweep(theta, _):
+            gathered = theta[tabs.nbr_idx]             # (n, k, p)
+            mixed = jnp.einsum("nk,nkp->np", w, gathered)
+            return mixed + b[:, None] * theta_sol, None
+
+    theta, _ = jax.lax.scan(jax.jit(sweep), theta_sol, None, length=sweeps)
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# Scenario engine: batched wake-ups + network conditions (MP gossip)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """Result of a scenario run.
+
+    theta_hist:   (n_records, n, p)
+    active_hist:  (n_records,) fraction of live agents
+    delivered:    total messages delivered;  dropped: total lost
+    rounds, events: totals (events = wake-ups = 2 attempted messages each)
+    """
+
+    theta_hist: np.ndarray
+    active_hist: np.ndarray
+    delivered: int
+    dropped: int
+    rounds: int
+    events: int
+
+
+@partial(jax.jit, static_argnames=("conditions", "alpha", "batch",
+                                   "record_every", "n_rec"))
+def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
+                   conditions: NetworkConditions, alpha: float, batch: int,
+                   record_every: int, n_rec: int):
+    """Module-level jitted runner so repeated calls with the same static
+    (conditions, alpha, batch, record_every, n_rec) and shapes hit the jit
+    cache — benchmark warmups genuinely pre-compile the timed run."""
+    n = theta_sol.shape[0]
+    abar = 1.0 - alpha
+
+    def round_fn(carry, inp):
+        theta, K, theta_prev, active, delivered, dropped = carry
+        theta_in = theta                  # next round's "one-round-old" model
+        t, key = inp
+        k_ev, k_churn = jax.random.split(key)
+        ev = sched.draw_events(k_ev, conditions, tabs, part_half, active,
+                               rates, t, batch)
+
+        # --- communication: all scatters land before any update reads
+        msg_i = jnp.where(ev.stale_ij[:, None], theta_prev[ev.i], theta[ev.i])
+        msg_j = jnp.where(ev.stale_ji[:, None], theta_prev[ev.j], theta[ev.j])
+        # undelivered messages scatter out of bounds -> dropped by XLA
+        row_j = jnp.where(ev.deliver_ij, ev.j, n)
+        row_i = jnp.where(ev.deliver_ji, ev.i, n)
+        K = K.at[row_j, ev.r].set(msg_i, mode="drop")
+        K = K.at[row_i, ev.s].set(msg_j, mode="drop")
+
+        # --- update: endpoints that received a message recompute Eq. (6)
+        upd = jnp.concatenate([ev.i, ev.j])                      # (2B,)
+        got = jnp.concatenate([ev.deliver_ji, ev.deliver_ij])
+        got &= active[upd]
+        agg = jnp.einsum("bk,bkp->bp", tabs.nbr_p[upd], K[upd])
+        new = (alpha * agg + abar * c[upd, None] * theta_sol[upd]) \
+            / (alpha + abar * c[upd])[:, None]
+        theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
+
+        delivered = delivered + jnp.sum(ev.deliver_ij) + jnp.sum(ev.deliver_ji)
+        dropped = dropped + jnp.sum(~ev.deliver_ij) + jnp.sum(~ev.deliver_ji)
+        active = sched.churn_step(k_churn, conditions, active)
+        return (theta, K, theta_in, active, delivered, dropped), None
+
+    def outer(carry, inp):
+        ks, t0 = inp
+        inner_ts = t0 + jnp.arange(record_every)
+        carry, _ = jax.lax.scan(round_fn, carry, (inner_ts, ks))
+        frac = jnp.mean(carry[3].astype(jnp.float32))
+        return carry, (carry[0], frac)
+
+    return jax.lax.scan(outer, carry0, (keys, ts))
+
+
+def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
+                    conditions: NetworkConditions, rounds: int,
+                    batch: int, seed: int = 0,
+                    record_every: int = 10) -> SimTrace:
+    """MP gossip under a fault scenario, B wake-ups per round.
+
+    Per round: draw an EventBatch, land every delivered message (scatter into
+    the receivers' neighbor slots; stale deliveries read the sender's model
+    from the previous round), then every endpoint that received something
+    recomputes its model from its post-communication slots (update step
+    Eq. 6).  Inactive (churned-out) agents neither wake nor update.
+
+    The horizon is floored to a multiple of record_every (record_every is
+    clamped to ``rounds`` first); SimTrace.rounds reports the actual count.
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    c = jnp.asarray(c, jnp.float32)
+    part_half = jnp.asarray(topo.partition_halves())
+    key = jax.random.PRNGKey(seed)
+    key, k_strag = jax.random.split(key)
+    rates = sched.straggler_rates(k_strag, conditions, n)
+
+    theta0, K0 = _mp_warm_start(tabs, theta_sol)
+    record_every = max(1, min(record_every, rounds))
+    n_rec = max(1, rounds // record_every)
+
+    keys = jax.random.split(key, n_rec * record_every).reshape(
+        n_rec, record_every, 2)
+    ts = jnp.asarray((np.arange(n_rec) * record_every).astype(np.int32))
+    carry0 = (theta0, K0, theta0, jnp.ones((n,), bool),
+              jnp.int32(0), jnp.int32(0))
+    carry, (hist, active_hist) = _scenario_scan(
+        tabs, part_half, rates, theta_sol, c, carry0, keys, ts,
+        conditions=conditions, alpha=alpha, batch=batch,
+        record_every=record_every, n_rec=n_rec)
+    theta, K, _, active, delivered, dropped = carry
+    total_rounds = n_rec * record_every
+    return SimTrace(np.asarray(hist), np.asarray(active_hist),
+                    int(delivered), int(dropped), total_rounds,
+                    total_rounds * batch)
+
+
+# ---------------------------------------------------------------------------
+# Exact sparse CL-ADMM (mirrors core.collaborative.async_admm, quadratic)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseADMMState:
+    """Sparse partial-consensus state: per-agent self model + per-slot
+    copies/secondary/dual variables (all neighbor arrays (n, k_max, p))."""
+
+    theta: jnp.ndarray
+    K: jnp.ndarray
+    Z_own: jnp.ndarray
+    Z_nbr: jnp.ndarray
+    L_own: jnp.ndarray
+    L_nbr: jnp.ndarray
+
+
+def init_sparse_admm(topo: SparseTopology, theta_sol) -> SparseADMMState:
+    """Warm start (paper §4.2): share solitary models with neighbors."""
+    tabs = topo.device_tables()
+    n = topo.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    p = theta_sol.shape[1]
+    K = theta_sol[tabs.nbr_idx]                               # copies of nbrs
+    Z_own = jnp.broadcast_to(theta_sol[:, None, :],
+                             (n, topo.k_max, p)).astype(jnp.float32)
+    Z_nbr = K.astype(jnp.float32)
+    zeros = jnp.zeros((n, topo.k_max, p), jnp.float32)
+    return SparseADMMState(theta_sol, K.astype(jnp.float32),
+                           Z_own, Z_nbr, zeros, zeros)
+
+
+def _sparse_primal_quadratic(st: SparseADMMState, l, nbr_w, deg_count, D,
+                             mu, rho, data: AgentData) -> SparseADMMState:
+    """Slot-row mirror of core.collaborative._primal_quadratic."""
+    k = nbr_w.shape[1]
+    live = jnp.arange(k) < deg_count[l]
+    w = nbr_w[l]
+    m_l = jnp.sum(data.mask[l])
+    sx = jnp.sum(data.x[l] * data.mask[l][:, None], axis=0)
+    theta_l, theta_js = quadratic_primal_core(
+        w, live, st.Z_own[l], st.Z_nbr[l], st.L_own[l], st.L_nbr[l],
+        D[l], m_l, sx, mu, rho)
+    K = st.K.at[l].set(jnp.where(live[:, None], theta_js, st.K[l]))
+    theta = st.theta.at[l].set(theta_l)
+    return SparseADMMState(theta, K, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
+
+
+def _sparse_edge_zl(st: SparseADMMState, i, s, j, r, rho) -> SparseADMMState:
+    """Slot mirror of core.collaborative._edge_zl_update for edge (i, j):
+    slot s is j's position in i's row, slot r is i's position in j's row."""
+    z_i = 0.5 * ((st.L_own[i, s] + st.L_nbr[j, r]) / rho
+                 + st.theta[i] + st.K[j, r])
+    z_j = 0.5 * ((st.L_own[j, r] + st.L_nbr[i, s]) / rho
+                 + st.theta[j] + st.K[i, s])
+    Z_own = st.Z_own.at[i, s].set(z_i).at[j, r].set(z_j)
+    Z_nbr = st.Z_nbr.at[i, s].set(z_j).at[j, r].set(z_i)
+    L_own = st.L_own.at[i, s].add(rho * (st.theta[i] - z_i))
+    L_own = L_own.at[j, r].add(rho * (st.theta[j] - z_j))
+    L_nbr = st.L_nbr.at[i, s].add(rho * (st.K[i, s] - z_j))
+    L_nbr = L_nbr.at[j, r].add(rho * (st.K[j, r] - z_i))
+    return SparseADMMState(st.theta, st.K, Z_own, Z_nbr, L_own, L_nbr)
+
+
+@dataclasses.dataclass
+class SparseCLTrace:
+    theta_hist: np.ndarray
+    comms_hist: np.ndarray
+    final: SparseADMMState
+
+
+def sparse_async_admm(topo: SparseTopology, data: AgentData, mu: float,
+                      rho: float, steps: int = 1000, seed: int = 0,
+                      record_every: int = 50, theta_sol=None,
+                      state: Optional[SparseADMMState] = None) -> SparseCLTrace:
+    """Asynchronous decentralized CL-ADMM (paper §4.2) over sparse edge state.
+
+    Quadratic loss only (exact closed-form primal).  Bit-for-bit equal to
+    ``core.collaborative.async_admm(..., loss="quadratic")`` for the same
+    (graph, seed) while storing O(n k p) instead of 5 x O(n^2 p).
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    D = jnp.asarray(tabs.deg_w, jnp.float32)
+    if state is None:
+        if theta_sol is None:
+            raise ValueError("need theta_sol (warm start) or explicit state")
+        state = init_sparse_admm(topo, theta_sol)
+
+    def tick(st: SparseADMMState, key):
+        i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
+        j = tabs.nbr_idx[i, s]
+        r = tabs.rev_slot[i, s]
+        st = _sparse_primal_quadratic(st, i, tabs.nbr_w, tabs.deg_count, D,
+                                      mu, rho, data)
+        st = _sparse_primal_quadratic(st, j, tabs.nbr_w, tabs.deg_count, D,
+                                      mu, rho, data)
+        return _sparse_edge_zl(st, i, s, j, r, rho)
+
+    n_rec = max(1, steps // record_every)
+
+    @jax.jit
+    def run(state, key):
+        def outer(st, key):
+            keys = jax.random.split(key, record_every)
+            st = jax.lax.scan(lambda s_, k: (tick(s_, k), None), st, keys)[0]
+            return st, st.theta
+        keys = jax.random.split(key, n_rec)
+        return jax.lax.scan(outer, state, keys)
+
+    final, hist = run(state, jax.random.PRNGKey(seed))
+    comms = 2 * record_every * (np.arange(n_rec) + 1)
+    return SparseCLTrace(np.asarray(hist), comms, final)

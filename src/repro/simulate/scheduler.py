@@ -1,0 +1,143 @@
+"""Vectorized event engine: batched Poisson wake-ups + network conditions.
+
+The asynchronous model of the paper (§3.2, §4.2) is a Poisson clock per
+agent; conditioned on a tick, the waking agent is drawn proportionally to
+its rate.  The scheduler exploits that: one scan step draws a *batch* of B
+wake-ups (a superposition of B exponential arrivals) and the engine applies
+them together — collisions (two events touching the same agent in one batch)
+are deterministic because all communication scatters land before any model
+update reads (repro.simulate.engines).
+
+Pluggable network conditions, all vectorized per event:
+
+  drop_prob      — iid per *direction* message loss
+  stale_prob     — delayed delivery: the receiver gets the sender's model
+                   from the previous round (one-round staleness). Drawn per
+                   *sender agent* per round — a lagging link lags for the
+                   whole round — so duplicate events in a batch carry
+                   identical payloads (deterministic scatter collisions)
+  straggler_frac / straggler_factor
+                 — a random fraction of agents wakes at ``factor`` x the
+                   base rate (heavy-tailed activity)
+  churn_rate     — per-round probability an agent toggles active/inactive;
+                   inactive agents neither wake nor accept messages
+  partition      — during rounds [partition_start, partition_end) every
+                   message crossing the topology's two halves is dropped,
+                   then the network heals
+
+DJAM (arXiv:1803.09737) and Zantedeschi et al. (arXiv:1901.08460) analyze
+exactly this regime: asynchronous personal-model updates under random
+wake-ups with per-agent communication bounded by neighborhood size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConditions:
+    """Static (trace-time) fault model. All fields are plain python floats —
+    the jitted round function closes over them as compile-time constants."""
+
+    drop_prob: float = 0.0
+    stale_prob: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_factor: float = 0.1
+    churn_rate: float = 0.0
+    partition_start: int = -1     # round index; -1 = never partition
+    partition_end: int = -1
+
+    @property
+    def has_partition(self) -> bool:
+        return 0 <= self.partition_start < self.partition_end
+
+
+class EventBatch(NamedTuple):
+    """One round of wake-up events (all arrays (B,))."""
+
+    i: jnp.ndarray            # waking agent
+    s: jnp.ndarray            # chosen neighbor slot in i's row
+    j: jnp.ndarray            # neighbor id  = nbr_idx[i, s]
+    r: jnp.ndarray            # reverse slot = rev_slot[i, s]
+    deliver_ij: jnp.ndarray   # bool: i's model reached j
+    deliver_ji: jnp.ndarray   # bool: j's model reached i
+    stale_ij: jnp.ndarray     # bool: delivered value is one round old
+    stale_ji: jnp.ndarray
+
+
+def straggler_rates(key, cond: NetworkConditions, n: int) -> jnp.ndarray:
+    """Per-agent base wake rates: 1.0, or straggler_factor for stragglers."""
+    if cond.straggler_frac <= 0.0:
+        return jnp.ones((n,), jnp.float32)
+    mask = jax.random.bernoulli(key, cond.straggler_frac, (n,))
+    return jnp.where(mask, jnp.float32(cond.straggler_factor), 1.0)
+
+
+def draw_wakeups(key, weights, batch: int) -> jnp.ndarray:
+    """B wake-ups ~ categorical(weights) via inverse-cdf (O(n + B log n))."""
+    n = weights.shape[0]
+    cdf = jnp.cumsum(weights)
+    total = jnp.maximum(cdf[-1], 1e-30)
+    u = jax.random.uniform(key, (batch,)) * total
+    i = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(i, 0, n - 1).astype(jnp.int32)
+
+
+def draw_slots(key, i, deg_count) -> jnp.ndarray:
+    """Uniform neighbor slot per event (pi_i uniform over N_i)."""
+    u = jax.random.uniform(key, i.shape)
+    deg = deg_count[i].astype(jnp.float32)
+    return jnp.minimum((u * deg).astype(jnp.int32), deg_count[i] - 1)
+
+
+def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
+                rates, t, batch: int) -> EventBatch:
+    """Sample one round's EventBatch under the network conditions.
+
+    tabs: DeviceTables; part_half: (n,) bool; active: (n,) bool;
+    rates: (n,) f32 base rates; t: scalar round index.
+    """
+    kw, ks, k1, k2, k3, k4 = jax.random.split(key, 6)
+    i = draw_wakeups(kw, rates * active.astype(jnp.float32), batch)
+    s = draw_slots(ks, i, tabs.deg_count)
+    j = tabs.nbr_idx[i, s]
+    r = tabs.rev_slot[i, s]
+
+    B = i.shape[0]
+    ok = jnp.ones((B,), bool)
+    if cond.drop_prob > 0.0:
+        drop_ij = jax.random.bernoulli(k1, cond.drop_prob, (B,))
+        drop_ji = jax.random.bernoulli(k2, cond.drop_prob, (B,))
+    else:
+        drop_ij = drop_ji = jnp.zeros((B,), bool)
+    if cond.has_partition:
+        in_window = (t >= cond.partition_start) & (t < cond.partition_end)
+        cut = in_window & (part_half[i] != part_half[j])
+        ok &= ~cut
+    # an inactive endpoint kills both directions (i inactive can't happen
+    # through the wake draw unless everyone is inactive; guard anyway)
+    ok &= active[i] & active[j]
+    if cond.stale_prob > 0.0:
+        # per-sender-per-round draw: identical payload for duplicate events
+        n = tabs.deg_count.shape[0]
+        lagging = jax.random.bernoulli(k3, cond.stale_prob, (n,))
+        stale_ij = lagging[i]
+        stale_ji = lagging[j]
+    else:
+        stale_ij = stale_ji = jnp.zeros((B,), bool)
+    return EventBatch(i, s, j, r, ok & ~drop_ij, ok & ~drop_ji,
+                      stale_ij, stale_ji)
+
+
+def churn_step(key, cond: NetworkConditions, active) -> jnp.ndarray:
+    """Toggle agents in/out of the network with prob churn_rate per round."""
+    if cond.churn_rate <= 0.0:
+        return active
+    toggle = jax.random.bernoulli(key, cond.churn_rate, active.shape)
+    return jnp.where(toggle, ~active, active)
