@@ -1,0 +1,211 @@
+"""Backend-dispatch benchmark: time every available implementation of the
+MP-mix and ADMM-primal hot loops (plus the sparse gather-mix) and write a
+``BENCH_dispatch.json`` with per-backend timings and parity errors.
+
+    PYTHONPATH=src python benchmarks/bench_dispatch.py            # full
+    PYTHONPATH=src python benchmarks/bench_dispatch.py --smoke    # CI lane
+
+``--smoke`` shrinks shapes and forces the Pallas implementations through
+interpret mode so backend-parity regressions surface in CI even on CPU
+runners (interpret timings are NOT perf numbers — the maxerr columns are
+the point).  Off-TPU without ``--smoke``/``--interpret``, Pallas impls are
+recorded as skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import ReproBackend, resolve
+
+
+def _time_loop(fn, repeats: int) -> float:
+    """Median wall-time (us) of ``fn()`` after one warmup."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _runnable_impls(op: str, interpret: bool):
+    """(impl, backend, note) triples for every registered implementation."""
+    out = []
+    for name in dispatch.implementations(op):
+        backend = ReproBackend.using(
+            interpret=interpret or None, **{op: name})
+        if dispatch.available(op, name, interpret=interpret):
+            out.append((name, backend, None))
+        else:
+            out.append((name, None,
+                        "needs TPU (or --interpret/--smoke for the slow "
+                        "interpret mode)"))
+    return out
+
+
+def _maxerr(got, want) -> float:
+    ga = got if isinstance(got, (tuple, list)) else (got,)
+    wa = want if isinstance(want, (tuple, list)) else (want,)
+    return max(float(jnp.abs(jnp.asarray(g, jnp.float32)
+                             - jnp.asarray(w, jnp.float32)).max())
+               for g, w in zip(ga, wa))
+
+
+def bench_mix(smoke: bool, interpret: bool, repeats: int) -> dict:
+    n, D = (16, 2048) if smoke else (32, 65536)
+    loops = 5 if smoke else 50
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    theta = jax.random.normal(k1, (n, D))
+    sol = jax.random.normal(k2, (n, D))
+    A = jax.random.uniform(k3, (n, n)) / n
+    b = jax.random.uniform(k4, (n,))
+    want = resolve("mix", ReproBackend.using(mix="reference"))(
+        theta, sol, A, b)
+    impls = {}
+    for name, backend, skip in _runnable_impls("mix", interpret):
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        mix = resolve("mix", backend)
+        loop = jax.jit(lambda th, m=mix: jax.lax.scan(
+            lambda t, _: (m(t, sol, A, b), None), th, None, length=loops)[0])
+        impls[name] = {
+            "maxerr": _maxerr(mix(theta, sol, A, b), want),
+            "us_per_loop": _time_loop(lambda: loop(theta), repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"n": n, "D": D}, "impls": impls}
+
+
+def bench_sparse_mix(smoke: bool, interpret: bool, repeats: int) -> dict:
+    n, k, p = (256, 8, 64) if smoke else (4096, 16, 256)
+    loops = 5 if smoke else 50
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, n, (n, k)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 1, (n, k)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    table = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    sol = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    want = resolve("sparse_mix", ReproBackend.using(
+        sparse_mix="reference"))(table, idx, w, b, sol)
+    impls = {}
+    for name, backend, skip in _runnable_impls("sparse_mix", interpret):
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        mix = resolve("sparse_mix", backend)
+        loop = jax.jit(lambda t, m=mix: jax.lax.scan(
+            lambda tt, _: (m(tt, idx, w, b, sol), None), t, None,
+            length=loops)[0])
+        impls[name] = {
+            "maxerr": _maxerr(mix(table, idx, w, b, sol), want),
+            "us_per_loop": _time_loop(lambda: loop(table), repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"n": n, "k": k, "p": p}, "impls": impls}
+
+
+def bench_admm_primal(smoke: bool, interpret: bool, repeats: int) -> dict:
+    n, k, p = (32, 8, 32) if smoke else (256, 16, 512)
+    loops = 5 if smoke else 50
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.uniform(0.1, 1, (n, k)), jnp.float32)
+    live = jnp.asarray(rng.uniform(size=(n, k)) < 0.8)
+    zo, zn, lo, ln = (jnp.asarray(rng.standard_normal((n, k, p)), jnp.float32)
+                      for _ in range(4))
+    D = jnp.asarray(rng.uniform(1, 4, n), jnp.float32)
+    m = jnp.asarray(rng.integers(1, 100, n), jnp.float32)
+    sx = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    mu, rho = 0.05, 1.0
+
+    def batched(primal):
+        return jax.vmap(lambda w_, l_, a, b_, c_, d_, D_, m_, s_:
+                        primal(w_, l_, a, b_, c_, d_, D_, m_, s_, mu, rho))
+
+    want = batched(resolve("admm_primal", ReproBackend.using(
+        admm_primal="reference")))(w, live, zo, zn, lo, ln, D, m, sx)
+    impls = {}
+    for name, backend, skip in _runnable_impls("admm_primal", interpret):
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        primal = batched(resolve("admm_primal", backend))
+
+        def body(carry, _, primal=primal):
+            zo_, zn_ = carry
+            theta_l, theta_js = primal(w, live, zo_, zn_, lo, ln, D, m, sx)
+            # feed the solution back so the loop has a real dependency chain
+            return (0.9 * zo_ + 0.1 * theta_js,
+                    0.9 * zn_ + 0.1 * theta_l[:, None, :]), None
+
+        loop = jax.jit(lambda z, body=body: jax.lax.scan(
+            body, z, None, length=loops)[0][0])
+        impls[name] = {
+            "maxerr": _maxerr(primal(w, live, zo, zn, lo, ln, D, m, sx),
+                              want),
+            "us_per_loop": _time_loop(lambda: loop((zo, zn)), repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"n": n, "k": k, "p": p}, "impls": impls}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + interpret-mode Pallas (CI parity lane)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="include Pallas impls via interpret mode off-TPU")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    args = ap.parse_args(argv)
+    repeats = args.repeats or (1 if args.smoke else 5)
+    interpret = args.smoke or args.interpret
+
+    report = {
+        "meta": {
+            "platform": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": args.smoke,
+            "interpret": interpret,
+            "repeats": repeats,
+        },
+        "ops": {
+            "mix": bench_mix(args.smoke, interpret, repeats),
+            "sparse_mix": bench_sparse_mix(args.smoke, interpret, repeats),
+            "admm_primal": bench_admm_primal(args.smoke, interpret, repeats),
+        },
+    }
+
+    worst = 0.0
+    for op, entry in report["ops"].items():
+        for impl, row in entry["impls"].items():
+            if "maxerr" in row:
+                worst = max(worst, row["maxerr"])
+                print(f"bench_dispatch,{op},{impl},"
+                      f"us={row['us_per_loop']:.1f},maxerr={row['maxerr']:.2e}",
+                      flush=True)
+            else:
+                print(f"bench_dispatch,{op},{impl},skipped", flush=True)
+    report["meta"]["worst_maxerr"] = worst
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    if worst > 1e-4:
+        print(f"PARITY FAILURE: worst maxerr {worst:.2e} > 1e-4")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,6 +5,8 @@
    errors of each.
 2. Collaborative linear classification (paper §5.2): solitary vs consensus
    vs MP vs CL-ADMM accuracy.
+3. Backend dispatch + vmapped sweeps: the same MP iterates under an
+   explicit ReproBackend, and a (seed x alpha) grid in one jitted call.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,9 +14,12 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import (closed_form, async_gossip, solitary_mean, solitary_gd,
-                        confidences_from_counts, consensus_model, sync_admm)
+                        confidences_from_counts, consensus_model, sync_admm,
+                        synchronous)
 from repro.data import (mean_estimation_problem,
                         linear_classification_problem, accuracy)
+from repro.experiments import mean_estimation_trials, run_mp_sweep
+from repro.kernels import ReproBackend
 
 
 def mean_estimation():
@@ -54,6 +59,31 @@ def linear_classification():
     print(f" CL (ADMM) acc = {acc(cl):.3f}")
 
 
+def backends_and_sweeps():
+    print("== backend dispatch + vmapped sweep ==")
+    g, data, targets, _ = mean_estimation_problem(n=60, eps=1.0, seed=0)
+    sol = np.asarray(solitary_mean(data))
+    conf = np.asarray(confidences_from_counts(data.counts))
+
+    # auto backend: fused XLA on CPU/GPU, Pallas compiled on TPU
+    auto = synchronous(g, sol, conf, alpha=0.9, steps=300)
+    # explicit override: validate the Pallas kernel via interpret mode
+    kern = synchronous(g, sol, conf, alpha=0.9, steps=300,
+                       backend=ReproBackend.using(mix="pallas",
+                                                  interpret=True))
+    print(f" |auto - pallas(interpret)| = "
+          f"{float(np.abs(np.asarray(auto) - np.asarray(kern)).max()):.2e}")
+
+    # 8 (seed, alpha) trials as ONE jitted program over the trial axis
+    trials = mean_estimation_trials(seeds=range(4), alphas=[0.9, 0.99], n=60)
+    res = run_mp_sweep(trials, sweeps=300)
+    for a in (0.9, 0.99):
+        sel = trials.alpha == np.float32(a)
+        print(f" alpha={a}: mean final L2 over {int(sel.sum())} seeds = "
+              f"{res.err_hist[sel, -1].mean():.4f}")
+
+
 if __name__ == "__main__":
     mean_estimation()
     linear_classification()
+    backends_and_sweeps()

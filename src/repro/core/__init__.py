@@ -7,7 +7,8 @@ from .losses import (AgentData, pad_datasets, quadratic_loss, hinge_loss,
                      logistic_loss, solitary_mean, solitary_gd,
                      confidences_from_counts, total_loss, LOSSES)
 from .model_propagation import (closed_form, synchronous, async_gossip,
-                                mp_objective, label_propagation, AsyncTrace)
+                                mp_objective, mp_mix_operator,
+                                label_propagation, AsyncTrace)
 from .sparse import (NeighborTables, DeviceTables, padded_neighbor_tables,
                      tables_from_adjacency, to_device, sample_event,
                      neighbor_aggregate, quadratic_primal_core)

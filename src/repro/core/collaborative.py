@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import ReproBackend
+
 from .graph import Graph
 from .losses import AgentData, LOSSES
 from .sparse import (padded_neighbor_tables, quadratic_primal_core,
@@ -113,7 +115,7 @@ def init_state(graph: Graph, theta_sol) -> ADMMState:
 
 
 def _primal_quadratic(state: ADMMState, l, nbr_idx, nbr_w, deg_count, D,
-                      mu, rho, data: AgentData):
+                      mu, rho, data: AgentData, backend=None):
     """Exact argmin of L_rho^l for the quadratic loss, by block elimination.
 
     Stationarity for neighbor blocks j in N_l:
@@ -132,7 +134,8 @@ def _primal_quadratic(state: ADMMState, l, nbr_idx, nbr_w, deg_count, D,
     sx = jnp.sum(data.x[l] * data.mask[l][:, None], axis=0)   # (p,)
     theta_l, theta_js = quadratic_primal_core(
         w, live, state.Z_own[l][idx], state.Z_nbr[l][idx],
-        state.L_own[l][idx], state.L_nbr[l][idx], D[l], m_l, sx, mu, rho)
+        state.L_own[l][idx], state.L_nbr[l][idx], D[l], m_l, sx, mu, rho,
+        backend)
     # pads scatter theta_l onto position l, which is overwritten right after
     row = state.T[l].at[jnp.where(live, idx, l)].set(
         jnp.where(live[:, None], theta_js, theta_l[None]))
@@ -223,10 +226,12 @@ class CLTrace:
     final: "ADMMState"
 
 
-def _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr):
+def _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr,
+                 backend=None):
     if loss == "quadratic":
         return lambda st, l: _primal_quadratic(st, l, tabs.nbr_idx, tabs.nbr_w,
-                                               tabs.deg_count, D, mu, rho, data)
+                                               tabs.deg_count, D, mu, rho,
+                                               data, backend)
     return lambda st, l: _primal_subgrad(st, l, W, D, mask, mu, rho, data,
                                          loss, k_steps, lr)
 
@@ -234,7 +239,8 @@ def _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr):
 def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
                loss: str = "quadratic", steps: int = 1000, seed: int = 0,
                record_every: int = 50, k_steps: int = 10, lr: float = 0.05,
-               theta_sol=None, state: Optional[ADMMState] = None) -> CLTrace:
+               theta_sol=None, state: Optional[ADMMState] = None,
+               backend: Optional[ReproBackend] = None) -> CLTrace:
     """Asynchronous decentralized ADMM (paper §4.2).
 
     One scan step = one wake-up: agent i (uniform) picks neighbor j ~ pi_i
@@ -250,7 +256,8 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
         if theta_sol is None:
             raise ValueError("need theta_sol (warm start) or explicit state")
         state = init_state(graph, theta_sol)
-    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr)
+    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr,
+                          backend)
 
     def tick(st: ADMMState, key):
         i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
@@ -280,7 +287,8 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
 def sync_admm(graph: Graph, data: AgentData, mu: float, rho: float,
               loss: str = "quadratic", steps: int = 100,
               k_steps: int = 10, lr: float = 0.05,
-              theta_sol=None, state: Optional[ADMMState] = None) -> CLTrace:
+              theta_sol=None, state: Optional[ADMMState] = None,
+              backend: Optional[ReproBackend] = None) -> CLTrace:
     """Synchronous decentralized ADMM (paper App. D).
 
     One iteration = every agent primal-updates, then all Z/dual updates;
@@ -295,7 +303,8 @@ def sync_admm(graph: Graph, data: AgentData, mu: float, rho: float,
         if theta_sol is None:
             raise ValueError("need theta_sol (warm start) or explicit state")
         state = init_state(graph, theta_sol)
-    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr)
+    primal = _make_primal(tabs, W, D, mask, mu, rho, data, loss, k_steps, lr,
+                          backend)
 
     @jax.jit
     def run(state):

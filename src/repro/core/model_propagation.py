@@ -32,9 +32,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import ReproBackend, resolve
+
 from .graph import Graph
 from .sparse import (neighbor_aggregate, padded_neighbor_tables, sample_event,
                      to_device)
+
+
+def mp_mix_operator(P_rows, c, alpha):
+    """Eq. (5) as a "mix" op:  theta' = A_mix @ theta + b * theta_sol.
+
+    A_mix = diag(alpha / (alpha + abar c)) P,  b = abar c / (alpha + abar c).
+    ``P_rows`` may be the dense (n, n) stochastic matrix or the (n, k)
+    padded-neighbor slot weights (row scaling is identical) — the single
+    derivation shared by ``synchronous``, ``simulate.engines.sparse_sync_mp``
+    and ``experiments.sweep``.
+    """
+    abar = 1.0 - alpha
+    denom = alpha + abar * c
+    A_mix = (alpha / denom)[:, None] * P_rows
+    b = abar * c / denom
+    return A_mix, b
 
 
 def mp_objective(theta, theta_sol, W, c, mu):
@@ -62,19 +80,25 @@ def closed_form(graph: Graph, theta_sol, c, alpha: float) -> jnp.ndarray:
 
 
 def synchronous(graph: Graph, theta_sol, c, alpha: float, steps: int,
-                theta0=None) -> jnp.ndarray:
-    """Fixed-point iteration Eq. (5); converges to Theta* for any init."""
+                theta0=None,
+                backend: Optional[ReproBackend] = None) -> jnp.ndarray:
+    """Fixed-point iteration Eq. (5); converges to Theta* for any init.
+
+    Each iterate is one ``mix`` op — A_mix @ theta + b * theta_sol with
+    A_mix = diag(alpha/(alpha+abar c)) P and b = abar c/(alpha+abar c) —
+    resolved through ``kernels.dispatch`` (fused XLA on CPU/GPU, Pallas
+    kernel on TPU, overridable per call via ``backend``).
+    """
     n = graph.n
     P = jnp.asarray(graph.P, jnp.float32)
     theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
     c = jnp.asarray(c, jnp.float32)
-    abar = 1.0 - alpha
-    denom = (alpha + abar * c)[:, None]
+    A_mix, b = mp_mix_operator(P, c, alpha)
     theta = theta_sol if theta0 is None else jnp.asarray(theta0, jnp.float32)
+    mix = resolve("mix", backend)
 
     def step(theta, _):
-        theta = (alpha * (P @ theta) + abar * c[:, None] * theta_sol) / denom
-        return theta, None
+        return mix(theta, theta_sol, A_mix, b), None
 
     theta, _ = jax.lax.scan(step, theta, None, length=steps)
     return theta
@@ -94,9 +118,9 @@ class AsyncTrace:
     final_knowledge: np.ndarray
 
 
-@partial(jax.jit, static_argnames=("steps", "record_every"))
+@partial(jax.jit, static_argnames=("steps", "record_every", "backend"))
 def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
-                key, steps, record_every, T0):
+                key, steps, record_every, T0, backend=None):
     """Exact async gossip (§3.2) as a lax.scan.
 
     T is (n, n, p): T[i, j] = agent i's knowledge of agent j's model.
@@ -110,7 +134,7 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
     def local_update(T, l):
         """Update step Eq. (6) for agent l using its own knowledge row."""
         nbrs = T[l][nbr_idx[l]]                   # (k_max, p) gathered slots
-        agg = neighbor_aggregate(nbr_p[l], nbrs)  # (p,)
+        agg = neighbor_aggregate(nbr_p[l], nbrs, backend)  # (p,)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
         return T.at[l, l].set(new)
 
@@ -146,7 +170,8 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
 
 def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
                  seed: int = 0, record_every: int = 100,
-                 theta0=None) -> AsyncTrace:
+                 theta0=None,
+                 backend: Optional[ReproBackend] = None) -> AsyncTrace:
     """Run the asynchronous gossip MP algorithm (paper §3.2).
 
     ``steps`` clock ticks; each tick = 2 pairwise communications.
@@ -169,7 +194,7 @@ def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
     key = jax.random.PRNGKey(seed)
     T, hist = _async_scan(tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf,
                           tabs.deg_count, theta_sol, c, alpha, key, steps,
-                          record_every, T0)
+                          record_every, T0, backend)
     n_rec = hist.shape[0]
     every = 1 if record_every == 1 else record_every
     comms = 2 * every * (np.arange(n_rec) + 1)

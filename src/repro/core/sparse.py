@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import ReproBackend, resolve
+
 
 class NeighborTables(NamedTuple):
     """Host-side (numpy) padded-neighbor tables; see module docstring."""
@@ -160,34 +162,32 @@ def sample_event(key, n: int, slot_cdf, deg_count):
     return i, s
 
 
-def neighbor_aggregate(w_slots, theta_slots):
+def neighbor_aggregate(w_slots, theta_slots,
+                       backend: Optional[ReproBackend] = None):
     """sum_s w[s] * theta[s]  over the k_max slot axis: (k,), (k, p) -> (p,).
 
     The single shared reduction both engines use — same shapes, same HLO,
     bit-identical result (pad slots contribute an exact 0.0 * value).
+    Dispatched through ``kernels.dispatch`` ("neighbor_aggregate" op); both
+    engines must pass the same ``backend`` to keep their trajectories
+    bit-identical.
     """
-    return jnp.einsum("k,kp->p", w_slots, theta_slots)
+    return resolve("neighbor_aggregate", backend)(w_slots, theta_slots)
 
 
 def quadratic_primal_core(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
-                          D_l, m_l, sx, mu, rho):
+                          D_l, m_l, sx, mu, rho,
+                          backend: Optional[ReproBackend] = None):
     """Exact argmin of the CL-ADMM local Lagrangian for the quadratic loss,
     over one agent's slot row (block elimination; paper §4.2 step 1).
 
     w: (k,) raw edge weights (0 at pads); live: (k,) bool;
     z/l slices: (k, p) agent-l secondary/dual rows; D_l, m_l scalars;
     sx: (p,) sum of l's local samples.  Returns (theta_l (p,), theta_js (k, p)).
+
+    Dispatched through ``kernels.dispatch`` ("admm_primal" op); the math
+    lives in ``kernels.ref.quadratic_primal`` (reference) with a fused XLA
+    variant selected by default.
     """
-    b = rho * z_nbr_s - l_nbr_s                               # (k, p)
-    denom = jnp.where(live, w + rho, 1.0)                     # (k,)
-    n_nbrs = jnp.sum(live)
-    a = (D_l + 2.0 * mu * D_l * m_l + rho * n_nbrs
-         - jnp.sum(jnp.where(live, w * w / denom, 0.0)))
-    rhs = (2.0 * mu * D_l * sx
-           + jnp.sum(jnp.where(live[:, None],
-                               rho * z_own_s - l_own_s, 0.0), axis=0)
-           + jnp.sum(jnp.where(live[:, None],
-                               (w[:, None] * b) / denom[:, None], 0.0), axis=0))
-    theta_l = rhs / a
-    theta_js = (w[:, None] * theta_l[None, :] + b) / denom[:, None]
-    return theta_l, theta_js
+    return resolve("admm_primal", backend)(
+        w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s, D_l, m_l, sx, mu, rho)

@@ -41,6 +41,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.graph import Graph
+from repro.kernels.dispatch import ReproBackend, resolve
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -63,8 +64,20 @@ class CouplingConfig:
     mu: float = 0.01              # CL trade-off
     rho: float = 1.0              # ADMM penalty
     every: int = 1                # apply every k optimizer steps
-    use_kernel: bool = False      # graph_mix Pallas kernel for the math
+    use_kernel: bool = False      # deprecated: force the Pallas "mix" impl
     mix_dtype: Any = jnp.float32  # wire dtype for cross-agent traffic
+    # kernels.dispatch.ReproBackend choosing the "mix" implementation
+    # (None = platform auto: Pallas compiled on TPU, fused XLA elsewhere)
+    backend: Optional[ReproBackend] = None
+
+    def mix_backend(self) -> Optional[ReproBackend]:
+        if self.backend is not None:
+            return self.backend
+        if self.use_kernel:
+            return ReproBackend.using(
+                mix="pallas",
+                interpret=None if jax.default_backend() == "tpu" else True)
+        return None
 
 
 @jax.tree_util.register_dataclass
@@ -122,23 +135,24 @@ def _per_leaf(fn, *trees):
 
 def dense_mix_tree(params, solitary, state: CouplingState,
                    cfg: CouplingConfig):
-    """out = A_mix @ theta + b * theta_sol per leaf (einsum over agent dim)."""
+    """out = A_mix @ theta + b * theta_sol per leaf, via the "mix" op.
+
+    The implementation (fused XLA einsum, Pallas kernel compiled or
+    interpret) is resolved through ``kernels.dispatch`` from
+    ``cfg.backend`` — platform auto when None.  All operands (including
+    A_mix) are quantized to ``cfg.mix_dtype`` as the wire format; the
+    impls accumulate in float32.
+    """
     A_mix = state.A_mix.astype(cfg.mix_dtype)
     b = state.b_anchor
+    mix_fn = resolve("mix", cfg.mix_backend())
 
     def mix(leaf, sol):
-        if cfg.use_kernel:
-            from repro.kernels import ops as kops
-            n = leaf.shape[0]
-            out = kops.graph_mix(leaf.reshape(n, -1).astype(cfg.mix_dtype),
-                                 sol.reshape(n, -1).astype(cfg.mix_dtype),
-                                 state.A_mix, b)
-            return out.reshape(leaf.shape).astype(leaf.dtype)
-        mixed = jnp.einsum("ab,b...->a...", A_mix,
-                           leaf.astype(cfg.mix_dtype))
-        anchored = b.reshape((-1,) + (1,) * (leaf.ndim - 1)) * sol.astype(
-            cfg.mix_dtype)
-        return (mixed + anchored).astype(leaf.dtype)
+        n = leaf.shape[0]
+        out = mix_fn(leaf.reshape(n, -1).astype(cfg.mix_dtype),
+                     sol.reshape(n, -1).astype(cfg.mix_dtype),
+                     A_mix, b)
+        return out.reshape(leaf.shape).astype(leaf.dtype)
 
     return _per_leaf(mix, params, solitary)
 

@@ -1,0 +1,7 @@
+"""Paper-style experiment drivers (vmapped multi-trial sweeps)."""
+
+from .sweep import (ADMMSweepResult, ADMMTrials, MPSweepResult, MPTrials,
+                    admm_mean_estimation_trials, closed_form_comparison,
+                    mean_estimation_trials, run_admm_sweep, run_mp_sweep)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

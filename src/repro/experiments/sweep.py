@@ -1,0 +1,340 @@
+"""Vmapped multi-seed × hyperparameter sweep runner (paper Fig. 1–3 style).
+
+The paper's experiments (and Bellet et al. 2018 / Zantedeschi et al. 2019
+follow-ups) average every curve over many random problem instances and
+hyperparameter settings.  Run naively that is a Python loop of hundreds of
+small jitted programs; here each sweep is ONE jitted call vmapped over a
+trial axis:
+
+* :func:`mean_estimation_trials` — stack T = |seeds| × |alphas| × |noises|
+  instances of the §5.1 collaborative mean-estimation problem (per-seed
+  graph/data, optional multiplicative edge noise) into dense trial arrays.
+* :func:`run_mp_sweep` — synchronous MP (Eq. 5) on all trials at once; each
+  iterate is the dispatch-layer "mix" op under ``vmap``, emitting per-trial
+  Q_MP objective and L2-error trajectories.
+* :func:`closed_form_comparison` — the seed experiment itself (Prop. 1 with
+  vs without confidence values) as one vmapped linear solve.
+* :func:`admm_mean_estimation_trials` / :func:`run_admm_sweep` — synchronous
+  CL-ADMM (quadratic loss) over a (seed, mu, rho) grid; the primal step is
+  the dispatch-layer "admm_primal" op vmapped over agents AND trials (the
+  per-agent primal touches disjoint state, so the reference engine's
+  sequential agent loop parallelizes exactly).
+
+Backend note: trials run under ``jax.vmap``, so the default resolves to the
+fused XLA implementations (batched einsum/dot); Pallas impls can be forced
+via ``backend`` where the platform supports batched pallas_call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collaborative import ADMMState, _all_zl_update, cl_objective
+from repro.core.losses import LOSSES, AgentData, solitary_mean, \
+    confidences_from_counts
+from repro.core.model_propagation import mp_mix_operator, mp_objective
+from repro.data.synthetic import mean_estimation_problem
+from repro.kernels.dispatch import ReproBackend, resolve
+
+
+# ---------------------------------------------------------------------------
+# Trial containers (host-side stacked arrays; leading axis = trial)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MPTrials:
+    """T stacked mean-estimation instances for the MP sweep."""
+
+    W: np.ndarray          # (T, n, n) edge weights
+    P: np.ndarray          # (T, n, n) stochastic mixing matrices
+    theta_sol: np.ndarray  # (T, n, p) solitary models
+    c: np.ndarray          # (T, n)   confidence values
+    alpha: np.ndarray      # (T,)     MP trade-off per trial
+    targets: np.ndarray    # (T, n, p) ground-truth models
+    seed: np.ndarray       # (T,) int  instance seed per trial
+    graph_noise: np.ndarray  # (T,)   edge-noise level per trial
+
+    @property
+    def n_trials(self) -> int:
+        return self.W.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class MPSweepResult:
+    """Per-trial trajectories from one vmapped MP sweep."""
+
+    trials: MPTrials
+    objective_hist: np.ndarray  # (T, sweeps) Q_MP after each iterate
+    err_hist: np.ndarray        # (T, sweeps) mean L2 error to targets
+    theta_final: np.ndarray     # (T, n, p)
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMTrials:
+    """T stacked quadratic-loss instances for the CL-ADMM sweep."""
+
+    W: np.ndarray         # (T, n, n)
+    adj: np.ndarray       # (T, n, n) bool adjacency, from the *float64* W —
+                          # kernel weights can underflow to 0 in float32
+    x: np.ndarray         # (T, n, m, p) local samples
+    y: np.ndarray         # (T, n, m)    unused by the quadratic loss
+    mask: np.ndarray      # (T, n, m)    live-sample mask
+    theta_sol: np.ndarray  # (T, n, p)   warm start
+    mu: np.ndarray        # (T,)
+    rho: np.ndarray       # (T,)
+    targets: np.ndarray   # (T, n, p)
+    seed: np.ndarray      # (T,)
+
+    @property
+    def n_trials(self) -> int:
+        return self.W.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMSweepResult:
+    trials: ADMMTrials
+    objective_hist: np.ndarray  # (T, iters) Q_CL after each iteration
+    err_hist: np.ndarray        # (T, iters) mean L2 error to targets
+    theta_final: np.ndarray     # (T, n, p)
+
+
+# ---------------------------------------------------------------------------
+# Trial builders (host loops — one problem instance per seed)
+# ---------------------------------------------------------------------------
+
+
+def _noisy_graph(W: np.ndarray, noise: float, rng) -> np.ndarray:
+    """Symmetric multiplicative edge perturbation: W_ij *= exp(noise * g)."""
+    if noise == 0.0:
+        return W
+    g = rng.standard_normal(W.shape)
+    g = (g + g.T) / np.sqrt(2.0)
+    return W * np.exp(noise * g)
+
+
+def mean_estimation_trials(seeds: Sequence[int],
+                           alphas: Sequence[float],
+                           graph_noises: Sequence[float] = (0.0,),
+                           n: int = 100, eps: float = 1.0,
+                           noise_seed: int = 0) -> MPTrials:
+    """Cartesian (seed × alpha × graph-noise) grid of §5.1 instances.
+
+    The graph and data depend on the seed (and the optional edge noise);
+    alpha only changes the algorithm, so those trials share instance arrays.
+    """
+    Ws, Ps, sols, cs, als, tgts, sds, nss = [], [], [], [], [], [], [], []
+    nrng = np.random.default_rng(noise_seed)
+    for seed, noise in itertools.product(seeds, graph_noises):
+        g, data, targets, _ = mean_estimation_problem(n=n, eps=eps, seed=seed)
+        W = _noisy_graph(np.asarray(g.W, np.float64), noise, nrng)
+        D = W.sum(axis=1)
+        P = W / D[:, None]
+        sol = np.asarray(solitary_mean(data), np.float32)
+        conf = np.asarray(confidences_from_counts(data.counts), np.float32)
+        for alpha in alphas:
+            Ws.append(W.astype(np.float32))
+            Ps.append(P.astype(np.float32))
+            sols.append(sol)
+            cs.append(conf)
+            als.append(np.float32(alpha))
+            tgts.append(targets[:, None].astype(np.float32))
+            sds.append(seed)
+            nss.append(np.float32(noise))
+    return MPTrials(np.stack(Ws), np.stack(Ps), np.stack(sols), np.stack(cs),
+                    np.asarray(als), np.stack(tgts),
+                    np.asarray(sds, np.int64), np.asarray(nss))
+
+
+def admm_mean_estimation_trials(seeds: Sequence[int],
+                                mus: Sequence[float],
+                                rhos: Sequence[float],
+                                n: int = 20, eps: float = 1.0) -> ADMMTrials:
+    """Cartesian (seed × mu × rho) grid of quadratic CL instances."""
+    insts = []
+    for seed in seeds:
+        g, data, targets, _ = mean_estimation_problem(n=n, eps=eps, seed=seed)
+        sol = np.asarray(solitary_mean(data), np.float32)
+        insts.append((seed, g, data, targets, sol))
+    # different seeds draw different sample counts -> pad to a common m_max
+    m_max = max(inst[2].x.shape[1] for inst in insts)
+
+    def pad_m(a):
+        return np.pad(np.asarray(a, np.float32),
+                      ((0, 0), (0, m_max - a.shape[1])) + ((0, 0),) *
+                      (a.ndim - 2))
+
+    Ws, adjs, xs, ys, ms, sols, mus_, rhos_, tgts, sds = (
+        [] for _ in range(10))
+    for seed, g, data, targets, sol in insts:
+        for mu, rho in itertools.product(mus, rhos):
+            Ws.append(np.asarray(g.W, np.float32))
+            adjs.append(np.asarray(g.W) > 0)
+            xs.append(pad_m(data.x))
+            ys.append(pad_m(data.y))
+            ms.append(pad_m(data.mask))
+            sols.append(sol)
+            mus_.append(np.float32(mu))
+            rhos_.append(np.float32(rho))
+            tgts.append(targets[:, None].astype(np.float32))
+            sds.append(seed)
+    return ADMMTrials(np.stack(Ws), np.stack(adjs), np.stack(xs),
+                      np.stack(ys), np.stack(ms), np.stack(sols),
+                      np.asarray(mus_), np.asarray(rhos_), np.stack(tgts),
+                      np.asarray(sds, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# MP sweep — one jitted program over the trial axis
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("sweeps", "backend"))
+def _mp_sweep_prog(P, W, sol, c, alpha, targets, *, sweeps: int,
+                   backend: Optional[ReproBackend]):
+    mix = resolve("mix", backend)
+
+    def one_trial(P, W, sol, c, alpha, targets):
+        A_mix, b = mp_mix_operator(P, c, alpha)
+        mu = (1.0 - alpha) / alpha             # Q_MP anchor weight (§3.1)
+
+        def step(theta, _):
+            theta = mix(theta, sol, A_mix, b)
+            obj = mp_objective(theta, sol, W, c, mu)
+            err = jnp.mean(jnp.sum((theta - targets) ** 2, axis=-1))
+            return theta, (obj, err)
+
+        theta, (objs, errs) = jax.lax.scan(step, sol, None, length=sweeps)
+        return theta, objs, errs
+
+    return jax.vmap(one_trial)(P, W, sol, c, alpha, targets)
+
+
+def run_mp_sweep(trials: MPTrials, sweeps: int = 300,
+                 backend: Optional[ReproBackend] = None) -> MPSweepResult:
+    """Synchronous MP (Eq. 5) on every trial at once — one jitted call."""
+    theta, objs, errs = _mp_sweep_prog(
+        jnp.asarray(trials.P), jnp.asarray(trials.W),
+        jnp.asarray(trials.theta_sol), jnp.asarray(trials.c),
+        jnp.asarray(trials.alpha), jnp.asarray(trials.targets),
+        sweeps=sweeps, backend=backend)
+    return MPSweepResult(trials, np.asarray(objs), np.asarray(errs),
+                         np.asarray(theta))
+
+
+@jax.jit
+def _closed_form_prog(P, sol, c, alpha, targets):
+    def one_trial(P, sol, c, alpha, targets):
+        n = P.shape[0]
+
+        def solve(conf):
+            abar = 1.0 - alpha
+            A = (jnp.eye(n) - abar * (jnp.eye(n) - jnp.diag(conf))
+                 - alpha * P)
+            star = abar * jnp.linalg.solve(A, conf[:, None] * sol)
+            return jnp.mean(jnp.sum((star - targets) ** 2, axis=-1))
+
+        e_c = solve(c)
+        e_nc = solve(jnp.ones_like(c))
+        win = jnp.where(jnp.abs(e_c - e_nc) < 1e-12, 0.5,
+                        (e_c < e_nc).astype(jnp.float32))
+        return e_c, e_nc, win
+
+    return jax.vmap(one_trial)(P, sol, c, alpha, targets)
+
+
+def closed_form_comparison(trials: MPTrials) -> Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]:
+    """Paper Fig. 2 experiment as ONE jitted call over all trials.
+
+    Returns per-trial (err_with_conf, err_without_conf, win) — win is 1.0
+    where confidence values help, 0.5 on exact ties (balanced data).
+    """
+    e_c, e_nc, win = _closed_form_prog(
+        jnp.asarray(trials.P), jnp.asarray(trials.theta_sol),
+        jnp.asarray(trials.c), jnp.asarray(trials.alpha),
+        jnp.asarray(trials.targets))
+    return np.asarray(e_c), np.asarray(e_nc), np.asarray(win)
+
+
+# ---------------------------------------------------------------------------
+# CL-ADMM sweep — synchronous App. D iteration, vectorized over agents
+# ---------------------------------------------------------------------------
+
+
+def _admm_primal_all(T, Z_own, Z_nbr, L_own, L_nbr, W, mask, D, m, sx,
+                     mu, rho, backend):
+    """All agents' exact quadratic primal at once.
+
+    The reference engine's sequential agent loop is embarrassingly parallel
+    (agent l reads only its Z/L rows and writes only T row l), so one vmap
+    of the "admm_primal" op over the agent axis reproduces it exactly.
+    Dense layout: agent l's "slot row" is the full agent set with live mask
+    = mask[l] (so w carries exact zeros at non-edges, as in the CSR layout).
+    """
+    n = T.shape[0]
+    primal = resolve("admm_primal", backend)
+    theta_l, theta_js = jax.vmap(
+        lambda w, live, zo, zn, lo, ln, D_l, m_l, sx_l:
+        primal(w, live, zo, zn, lo, ln, D_l, m_l, sx_l, mu, rho))(
+            W, mask, Z_own, Z_nbr, L_own, L_nbr, D, m, sx)
+    T = jnp.where(mask[:, :, None], theta_js, T)
+    return T.at[jnp.arange(n), jnp.arange(n)].set(theta_l)
+
+
+@partial(jax.jit, static_argnames=("iters", "backend"))
+def _admm_sweep_prog(W, adj, x, y, smask, sol, mu, rho, targets, *,
+                     iters: int, backend: Optional[ReproBackend]):
+    loss_fn = LOSSES["quadratic"]
+
+    def one_trial(W, mask, x, y, smask, sol, mu, rho, targets):
+        n, p = sol.shape
+        D = jnp.sum(W, axis=1)
+        m = jnp.sum(smask, axis=1)                          # (n,) sample counts
+        sx = jnp.sum(x * smask[..., None], axis=1)          # (n, p)
+        adj = mask | jnp.eye(n, dtype=bool)
+        T0 = jnp.where(adj[:, :, None],
+                       jnp.broadcast_to(sol[None], (n, n, p)), 0.0)
+        Z_own0 = jnp.where(mask[:, :, None],
+                           jnp.broadcast_to(sol[:, None], (n, n, p)), 0.0)
+        Z_nbr0 = jnp.where(mask[:, :, None],
+                           jnp.broadcast_to(sol[None], (n, n, p)), 0.0)
+        zeros = jnp.zeros((n, n, p), jnp.float32)
+        st0 = ADMMState(T0, Z_own0, Z_nbr0, zeros, zeros)
+        data = AgentData(x=x, y=y, mask=smask)
+
+        def it(st, _):
+            T = _admm_primal_all(st.T, st.Z_own, st.Z_nbr, st.L_own,
+                                 st.L_nbr, W, mask, D, m, sx, mu, rho,
+                                 backend)
+            st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
+            st = _all_zl_update(st, mask, rho)
+            theta = st.models()
+            obj = cl_objective(theta, W, mu, loss_fn, data)
+            err = jnp.mean(jnp.sum((theta - targets) ** 2, axis=-1))
+            return st, (obj, err)
+
+        st, (objs, errs) = jax.lax.scan(it, st0, None, length=iters)
+        return st.models(), objs, errs
+
+    return jax.vmap(one_trial)(W, adj, x, y, smask, sol, mu, rho, targets)
+
+
+def run_admm_sweep(trials: ADMMTrials, iters: int = 50,
+                   backend: Optional[ReproBackend] = None) -> ADMMSweepResult:
+    """Synchronous quadratic CL-ADMM on every (seed, mu, rho) trial at once."""
+    theta, objs, errs = _admm_sweep_prog(
+        jnp.asarray(trials.W), jnp.asarray(trials.adj),
+        jnp.asarray(trials.x), jnp.asarray(trials.y),
+        jnp.asarray(trials.mask), jnp.asarray(trials.theta_sol),
+        jnp.asarray(trials.mu), jnp.asarray(trials.rho),
+        jnp.asarray(trials.targets), iters=iters, backend=backend)
+    return ADMMSweepResult(trials, np.asarray(objs), np.asarray(errs),
+                           np.asarray(theta))

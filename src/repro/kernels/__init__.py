@@ -1,5 +1,8 @@
-"""Pallas TPU kernels (validated with interpret=True on CPU) + jnp oracles."""
+"""Pallas TPU kernels (validated with interpret=True on CPU) + jnp oracles
++ the backend dispatch registry that chooses between them per platform."""
 
-from . import ops, ref
+from . import dispatch, ops, ref
+from .dispatch import BackendUnavailable, ReproBackend, resolve
 
-__all__ = ["ops", "ref"]
+__all__ = ["dispatch", "ops", "ref", "ReproBackend", "resolve",
+           "BackendUnavailable"]

@@ -43,8 +43,12 @@ def _kernel(tii, tji, tjj, tij, loi, lnj, loj, lni, zi, zj, loi_o, lnj_o,
                                              "interpret"))
 def admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i, l_own_j,
                      l_nbr_i_of_j, *, rho: float, block_e: int = 8,
-                     block_p: int = 512, interpret: bool = True):
-    """All inputs (E, p). Returns (z_i, z_j, 4 updated duals) like ref.py."""
+                     block_p: int = 512, interpret: bool = False):
+    """All inputs (E, p). Returns (z_i, z_j, 4 updated duals) like ref.py.
+
+    ``interpret`` is an explicit opt-in (CPU validation only); the default
+    compiles for TPU — use ``kernels.dispatch`` for automatic selection.
+    """
     E, p = t_ii.shape
     block_e = min(block_e, E)
     block_p = min(block_p, max(p, 1))

@@ -1,0 +1,378 @@
+"""Unified backend dispatch for the mixing/ADMM hot paths (DESIGN.md §10).
+
+The paper's two algorithms share a handful of hot-path primitives — the
+graph-weighted model mix (Eq. 5), its CSR gather-mix counterpart, the
+quadratic CL-ADMM primal, the fused ADMM edge update, the per-agent
+neighbor reduction, and causal attention for the LM workloads.  Each exists
+in up to three realizations (pure-jnp oracle, fused XLA expression, Pallas
+TPU kernel); before this module every call site picked one ad-hoc.
+
+This module is the single chooser.  A registry keyed by
+
+    op   ∈ {mix, sparse_mix, admm_primal, admm_edge, neighbor_aggregate,
+            attention}
+    impl ∈ {reference, xla, pallas, pallas_sparse}
+
+maps to concrete callables; ``resolve(op, backend)`` returns the callable a
+call site should use.  Selection rules:
+
+* **auto** (the default): Pallas *compiled* on TPU, fused XLA on CPU/GPU.
+  Pallas interpret mode is never chosen silently — it is a validation tool,
+  orders of magnitude slower than XLA, and must be requested explicitly
+  (``ReproBackend(interpret=True)`` or ``REPRO_PALLAS_INTERPRET=1``).
+* per-op **overrides** via :class:`ReproBackend`, threaded through
+  ``core.model_propagation`` / ``core.collaborative`` / ``core.sparse`` /
+  ``simulate.engines`` / ``coupling.strategies`` / ``models.blocks``.
+* env escape hatches for experiments without code changes:
+  ``REPRO_BACKEND=<impl>`` forces the default implementation,
+  ``REPRO_PALLAS_INTERPRET=1`` opts in to interpret mode off-TPU.
+  Both are read at TRACE time: jitted engines whose static backend arg is
+  unchanged keep their compiled program, so flipping an env var
+  mid-process does not retrace — pass an explicit ``ReproBackend`` to
+  switch implementations reliably.
+
+``ReproBackend`` is a frozen (hashable) dataclass so it can ride through
+``jax.jit`` static arguments; resolution happens at trace time, so the
+chosen implementation is baked into the compiled program.
+
+Registering a new op implementation::
+
+    from repro.kernels import dispatch
+
+    @dispatch.register("mix", "my_impl")
+    def _mix_my_impl(theta, theta_sol, A, b):
+        ...
+
+Pallas implementations register a *factory* taking the interpret flag::
+
+    @dispatch.register("mix", "my_pallas", pallas=True)
+    def _mix_my_pallas(interpret):
+        return functools.partial(my_kernel, interpret=interpret)
+
+Every implementation of an op must share the op's canonical signature
+(documented per-op below); parity with ``reference`` within 1e-5 on
+randomized inputs is enforced by tests/test_dispatch.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import admm_update as _au
+from . import flash_attention as _fa
+from . import graph_mix as _gm
+from . import ref
+from . import sparse_mix as _sm
+
+IMPLS = ("reference", "xla", "pallas", "pallas_sparse")
+_PALLAS_IMPLS = ("pallas", "pallas_sparse")
+
+
+class BackendUnavailable(RuntimeError):
+    """Requested implementation cannot run on this platform as configured."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _Impl:
+    """One registered implementation of an op.
+
+    ``make(interpret)`` returns the callable; non-Pallas impls ignore the
+    flag.  ``pallas`` marks impls that lower through pallas_call and hence
+    need a TPU (compiled) or an explicit interpret opt-in (CPU/GPU).
+    """
+
+    name: str
+    make: Callable[[bool], Callable]
+    pallas: bool = False
+
+
+_REGISTRY: Dict[str, Dict[str, _Impl]] = {}
+
+
+def register(op: str, impl: str, *, pallas: bool = False):
+    """Decorator registering ``fn`` as implementation ``impl`` of ``op``.
+
+    Plain impls register the op callable itself; Pallas impls (``pallas=
+    True``) register a factory ``make(interpret: bool) -> callable``.
+    """
+    def deco(fn):
+        make = fn if pallas else (lambda interpret, _fn=fn: _fn)
+        _REGISTRY.setdefault(op, {})[impl] = _Impl(impl, make, pallas)
+        return fn
+    return deco
+
+
+def ops() -> Tuple[str, ...]:
+    """All registered op names."""
+    return tuple(sorted(_REGISTRY))
+
+
+def implementations(op: str) -> Tuple[str, ...]:
+    """Registered implementation names for ``op`` (reference first)."""
+    impls = _REGISTRY[op]
+    return tuple(sorted(impls, key=lambda n: (n != "reference", n)))
+
+
+def _env_default() -> str:
+    return os.environ.get("REPRO_BACKEND", "auto")
+
+
+def _env_interpret() -> bool:
+    # same parse as kernels.ops._interpret: set-and-not-falsy means opt-in
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    return env is not None and env not in ("0", "false", "False")
+
+
+def _platform() -> str:
+    return jax.default_backend()
+
+
+@dataclasses.dataclass(frozen=True)
+class ReproBackend:
+    """Backend selection config threaded through the algorithm layers.
+
+    default:   implementation used for every op without an override —
+               "auto" picks Pallas-compiled on TPU and fused XLA elsewhere.
+    overrides: per-op (op, impl) pairs, e.g. (("mix", "pallas"),).
+    interpret: explicit opt-in to Pallas interpret mode off-TPU (None
+               defers to the REPRO_PALLAS_INTERPRET env var; on TPU the
+               kernels always compile unless interpret is True).
+
+    Frozen/hashable so it can be a jit static argument.
+    """
+
+    default: str = "auto"
+    overrides: Tuple[Tuple[str, str], ...] = ()
+    interpret: Optional[bool] = None
+
+    @classmethod
+    def using(cls, default: str = "auto",
+              interpret: Optional[bool] = None, **per_op: str) -> "ReproBackend":
+        """Keyword-friendly constructor: ``ReproBackend.using(mix="pallas")``."""
+        return cls(default=default,
+                   overrides=tuple(sorted(per_op.items())),
+                   interpret=interpret)
+
+    def impl_for(self, op: str) -> str:
+        for o, impl in self.overrides:
+            if o == op:
+                return impl
+        return self.default
+
+    def wants_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return _env_interpret()
+
+
+def _auto_impl(op: str, interpret_opt_in: bool) -> str:
+    """Platform default: Pallas compiled on TPU (when the op has a Pallas
+    impl), fused XLA otherwise.  Off-TPU, auto only picks Pallas when the
+    backend's resolved interpret preference opted in (explicit
+    ``interpret=True`` or the env var, with ``interpret=False`` winning)."""
+    impls = _REGISTRY[op]
+    pallas_name = next((n for n in _PALLAS_IMPLS if n in impls), None)
+    if pallas_name is not None and (_platform() == "tpu" or interpret_opt_in):
+        return pallas_name
+    return "xla" if "xla" in impls else "reference"
+
+
+def available(op: str, impl: str, *, interpret: Optional[bool] = None) -> bool:
+    """Whether (op, impl) can run here. Pallas impls need a TPU or an
+    interpret opt-in."""
+    entry = _REGISTRY.get(op, {}).get(impl)
+    if entry is None:
+        return False
+    if not entry.pallas:
+        return True
+    if interpret is None:
+        interpret = _env_interpret()
+    return _platform() == "tpu" or bool(interpret)
+
+
+def resolve(op: str, backend: Optional[ReproBackend] = None) -> Callable:
+    """Return the callable implementing ``op`` under ``backend``.
+
+    Happens at trace time (cheap, deterministic): jitted engines bake the
+    chosen implementation into the compiled program.
+    """
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {ops()}")
+    if backend is None:
+        backend = ReproBackend(default=_env_default())
+    name = backend.impl_for(op)
+    if name == "auto":
+        name = _auto_impl(op, backend.wants_interpret())
+    entry = _REGISTRY[op].get(name)
+    if entry is None:
+        raise KeyError(
+            f"op {op!r} has no implementation {name!r}; "
+            f"registered: {implementations(op)}")
+    interpret = False
+    if entry.pallas:
+        interpret = backend.wants_interpret()
+        if _platform() != "tpu" and not interpret:
+            raise BackendUnavailable(
+                f"{op}/{name} is a Pallas kernel: it compiles on TPU only. "
+                f"On {_platform()!r} pass ReproBackend(interpret=True) (or "
+                f"set REPRO_PALLAS_INTERPRET=1) to opt in to the slow "
+                f"interpret mode, or use the 'xla' implementation.")
+        if _platform() == "tpu" and backend.interpret is None:
+            interpret = False          # compiled is the TPU default
+    return entry.make(interpret)
+
+
+# ---------------------------------------------------------------------------
+# mix — dense graph-weighted model mixing (paper Eq. 5):
+#   (theta (n, D), theta_sol (n, D), A (n, n), b (n,)) -> (n, D)
+#   out = A @ theta + b[:, None] * theta_sol
+# ---------------------------------------------------------------------------
+
+
+register("mix", "reference")(ref.graph_mix)
+
+
+@register("mix", "xla")
+def _mix_xla(theta, theta_sol, A, b):
+    """Fused single-pass XLA form (f32 accumulate, MXU-friendly dot)."""
+    acc = jnp.dot(A.astype(jnp.float32), theta.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc + b.astype(jnp.float32)[:, None]
+            * theta_sol.astype(jnp.float32)).astype(theta.dtype)
+
+
+@register("mix", "pallas", pallas=True)
+def _mix_pallas(interpret):
+    return functools.partial(_gm.graph_mix, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# sparse_mix — CSR gather-mix over padded-neighbor tables:
+#   (table (n, p), idx (n, k) int32, w (n, k), b (n,), sol (n, p)) -> (n, p)
+#   out[i] = sum_s w[i, s] * table[idx[i, s]] + b[i] * sol[i]
+# ---------------------------------------------------------------------------
+
+
+register("sparse_mix", "reference")(ref.sparse_gather_mix)
+
+
+@register("sparse_mix", "xla")
+def _sparse_mix_xla(table, idx, w, b, sol):
+    """Fused take → einsum → fma (the O(n k p) simulator hot loop)."""
+    gathered = table[idx].astype(jnp.float32)                # (n, k, p)
+    mixed = jnp.einsum("nk,nkp->np", w.astype(jnp.float32), gathered)
+    return (mixed + b.astype(jnp.float32)[:, None]
+            * sol.astype(jnp.float32)).astype(table.dtype)
+
+
+@register("sparse_mix", "pallas_sparse", pallas=True)
+def _sparse_mix_pallas(interpret):
+    return functools.partial(_sm.sparse_gather_mix, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# admm_primal — exact quadratic CL-ADMM primal for one agent's slot row
+# (paper §4.2 step 1, block elimination):
+#   (w (k,), live (k,) bool, z_own (k, p), z_nbr (k, p), l_own (k, p),
+#    l_nbr (k, p), D_l, m_l, sx (p,), mu, rho) -> (theta_l (p,), theta_js (k, p))
+# ---------------------------------------------------------------------------
+
+
+register("admm_primal", "reference")(ref.quadratic_primal)
+
+
+@register("admm_primal", "xla")
+def _admm_primal_xla(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
+                     D_l, m_l, sx, mu, rho):
+    """Fused XLA form: one masked pass over the slot row, dot-product
+    reductions instead of where-sums."""
+    f = jnp.float32
+    w = w.astype(f)
+    wl = jnp.where(live, w, 0.0)                              # (k,)
+    b = rho * z_nbr_s.astype(f) - l_nbr_s.astype(f)           # (k, p)
+    denom = jnp.where(live, w + rho, 1.0)                     # (k,)
+    n_nbrs = jnp.sum(live)
+    a = (D_l + 2.0 * mu * D_l * m_l + rho * n_nbrs
+         - jnp.sum(wl * wl / denom))
+    zo = jnp.where(live[:, None], rho * z_own_s.astype(f)
+                   - l_own_s.astype(f), 0.0)
+    rhs = (2.0 * mu * D_l * sx
+           + jnp.sum(zo, axis=0)
+           + (wl / denom) @ jnp.where(live[:, None], b, 0.0))
+    theta_l = rhs / a
+    theta_js = (w[:, None] * theta_l[None, :] + b) / denom[:, None]
+    return theta_l, theta_js
+
+
+# ---------------------------------------------------------------------------
+# admm_edge — fused CL-ADMM Z + dual update for a batch of edges
+# (paper §4.2 steps 2-3): 8 inputs (E, p), rho kw-only -> 6 outputs (E, p)
+# ---------------------------------------------------------------------------
+
+
+register("admm_edge", "reference")(ref.admm_edge_update)
+
+
+@register("admm_edge", "xla")
+def _admm_edge_xla(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
+                   l_own_j, l_nbr_i_of_j, *, rho: float):
+    return ref.admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i,
+                                l_nbr_j_of_i, l_own_j, l_nbr_i_of_j, rho)
+
+
+@register("admm_edge", "pallas", pallas=True)
+def _admm_edge_pallas(interpret):
+    return functools.partial(_au.admm_edge_update, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# neighbor_aggregate — per-agent slot reduction shared by the dense and
+# sparse engines:  (w (k,), theta (k, p)) -> (p,)
+# ---------------------------------------------------------------------------
+
+
+register("neighbor_aggregate", "reference")(ref.neighbor_aggregate)
+# The einsum IS the fused XLA form; registering the same callable keeps the
+# dense/sparse engines' bit-for-bit trajectory match (identical HLO) intact
+# whichever name resolves.
+register("neighbor_aggregate", "xla")(ref.neighbor_aggregate)
+
+
+# ---------------------------------------------------------------------------
+# attention — causal (optionally sliding-window) attention with GQA
+# expansion:  (q (B,S,H,hd), k (B,S,K,hd), v (B,S,K,hd), *, window) -> (B,S,H,hd)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_expand(q, k, v):
+    H, K = q.shape[2], k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    return k, v
+
+
+@register("attention", "reference")
+def _attention_reference(q, k, v, *, window=None):
+    k, v = _gqa_expand(q, k, v)
+    return ref.flash_attention(q, k, v, window=window)
+
+
+# Dense softmax attention lowers to fused XLA ops directly; the reference
+# expression is the XLA path.
+register("attention", "xla")(_attention_reference)
+
+
+@register("attention", "pallas", pallas=True)
+def _attention_pallas(interpret):
+    def run(q, k, v, *, window=None, block_q: int = 256, block_k: int = 256):
+        k, v = _gqa_expand(q, k, v)
+        return _fa.flash_attention(q, k, v, window=window, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    return run

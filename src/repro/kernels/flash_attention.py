@@ -83,8 +83,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                                              "interpret"))
 def flash_attention(q, k, v, *, window: Optional[int] = None,
                     block_q: int = 256, block_k: int = 256,
-                    interpret: bool = True):
-    """q, k, v: (B, S, H, hd) equal head counts -> (B, S, H, hd), causal."""
+                    interpret: bool = False):
+    """q, k, v: (B, S, H, hd) equal head counts -> (B, S, H, hd), causal.
+
+    ``interpret`` is an explicit opt-in (CPU validation only); the default
+    compiles for TPU — use ``kernels.dispatch`` for automatic selection.
+    """
     B, S, H, hd = q.shape
     assert k.shape == v.shape == (B, S, H, hd)
     block_q = min(block_q, S)

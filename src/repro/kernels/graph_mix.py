@@ -36,8 +36,13 @@ def _kernel(a_ref, b_ref, theta_ref, sol_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def graph_mix(theta, theta_sol, A, b, *, block_d: int = DEFAULT_BLOCK_D,
-              interpret: bool = True):
+              interpret: bool = False):
     """theta, theta_sol: (n, D); A: (n, n); b: (n,) -> (n, D).
+
+    ``interpret`` is an explicit opt-in (CPU validation only — orders of
+    magnitude slower than the compiled kernel); the default compiles for
+    TPU. Prefer ``kernels.dispatch.resolve("mix", backend)``, which picks
+    the right implementation per platform.
 
     D is padded to a multiple of ``block_d`` (lane-aligned); n rides in the
     sublane dim and may be any size (the compiler pads to 8/16/32 sublanes).

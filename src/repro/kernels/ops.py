@@ -1,9 +1,12 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd wrappers that ALWAYS run the Pallas kernels (kernel validation).
 
-On CPU (this container) kernels run with interpret=True; on TPU set
-``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check) to
-compile natively. GQA head expansion for flash_attention happens here so the
-kernel sees equal head counts.
+Used by tests/benchmarks that exercise the kernels themselves: on TPU the
+kernels compile natively; elsewhere they run under the (slow) interpreter so
+the kernel code path stays testable on CPU. Production call sites should go
+through ``kernels.dispatch`` instead, which only picks a Pallas kernel when
+it can compile (or when interpret mode is explicitly requested) and falls
+back to fused XLA otherwise. GQA head expansion for flash_attention happens
+here so the kernel sees equal head counts.
 """
 
 from __future__ import annotations

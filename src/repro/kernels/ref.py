@@ -34,6 +34,40 @@ def sparse_gather_mix(table, idx, w, b, sol):
     return (mixed + b[:, None] * sol.astype(jnp.float32)).astype(table.dtype)
 
 
+def neighbor_aggregate(w_slots, theta_slots):
+    """sum_s w[s] * theta[s]  over the k_max slot axis: (k,), (k, p) -> (p,).
+
+    The single shared reduction the dense and sparse engines both use — same
+    shapes, same HLO, bit-identical result (pad slots contribute an exact
+    0.0 * value).
+    """
+    return jnp.einsum("k,kp->p", w_slots, theta_slots)
+
+
+def quadratic_primal(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
+                     D_l, m_l, sx, mu, rho):
+    """Exact argmin of the CL-ADMM local Lagrangian for the quadratic loss,
+    over one agent's slot row (block elimination; paper §4.2 step 1).
+
+    w: (k,) raw edge weights (0 at pads); live: (k,) bool;
+    z/l slices: (k, p) agent-l secondary/dual rows; D_l, m_l scalars;
+    sx: (p,) sum of l's local samples.  Returns (theta_l (p,), theta_js (k, p)).
+    """
+    b = rho * z_nbr_s - l_nbr_s                               # (k, p)
+    denom = jnp.where(live, w + rho, 1.0)                     # (k,)
+    n_nbrs = jnp.sum(live)
+    a = (D_l + 2.0 * mu * D_l * m_l + rho * n_nbrs
+         - jnp.sum(jnp.where(live, w * w / denom, 0.0)))
+    rhs = (2.0 * mu * D_l * sx
+           + jnp.sum(jnp.where(live[:, None],
+                               rho * z_own_s - l_own_s, 0.0), axis=0)
+           + jnp.sum(jnp.where(live[:, None],
+                               (w[:, None] * b) / denom[:, None], 0.0), axis=0))
+    theta_l = rhs / a
+    theta_js = (w[:, None] * theta_l[None, :] + b) / denom[:, None]
+    return theta_l, theta_js
+
+
 def flash_attention(q, k, v, *, window: Optional[int] = None):
     """Causal (optionally sliding-window) attention oracle.
 

@@ -46,11 +46,15 @@ def _kernel(idx_ref, w_ref, b_ref, sol_ref, table_ref, out_ref, *, k: int):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sparse_gather_mix(table, idx, w, b, sol, *,
                       block_n: int = DEFAULT_BLOCK_N,
-                      interpret: bool = True):
+                      interpret: bool = False):
     """table, sol: (n, p); idx: (n, k) int32; w: (n, k); b: (n,) -> (n, p).
 
     Pad slots must carry w == 0 (their gathered rows are multiplied away),
     which is exactly the NeighborTables convention.
+
+    ``interpret`` is an explicit opt-in (CPU validation only); the default
+    compiles for TPU. Prefer ``kernels.dispatch.resolve("sparse_mix",
+    backend)``, which picks the right implementation per platform.
     """
     n, p = table.shape
     k = idx.shape[1]

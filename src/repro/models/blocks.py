@@ -177,8 +177,17 @@ def attn_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
     if cfg.attn_impl == "ref" or S % cfg.attn_chunk != 0:
         o = ref_attention(xq, xk, xv, window=window)
     elif cfg.attn_impl == "flash":
-        from repro.kernels import ops as kops
-        o = kops.flash_attention(xq, xk, xv, window=window)
+        # "attention" op via dispatch: the Pallas flash kernel where it can
+        # run (TPU compiled, or explicit interpret opt-in); elsewhere fall
+        # back to the memory-bounded chunked path rather than the dense
+        # (S x S)-materializing softmax.
+        from repro.kernels.dispatch import ReproBackend, available, resolve
+        if available("attention", "pallas"):
+            o = resolve("attention", ReproBackend.using(attention="pallas"))(
+                xq, xk, xv, window=window)
+        else:
+            o = chunked_attention(xq, xk, xv, window=window,
+                                  chunk=cfg.attn_chunk)
     else:
         o = chunked_attention(xq, xk, xv, window=window, chunk=cfg.attn_chunk)
     y = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]

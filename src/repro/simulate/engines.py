@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.losses import AgentData
 from repro.core.sparse import (neighbor_aggregate, quadratic_primal_core,
                                sample_event)
+from repro.kernels.dispatch import ReproBackend, resolve
 from . import scheduler as sched
 from .scheduler import NetworkConditions
 from .topology import SparseTopology
@@ -61,15 +62,15 @@ def _mp_warm_start(tabs, theta_sol):
     return theta, K
 
 
-@partial(jax.jit, static_argnames=("steps", "record_every"))
+@partial(jax.jit, static_argnames=("steps", "record_every", "backend"))
 def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
                        theta_sol, c, alpha, key, steps, record_every,
-                       theta0, K0):
+                       theta0, K0, backend=None):
     n, p = theta0.shape
     abar = 1.0 - alpha
 
     def local_update(theta, K, l):
-        agg = neighbor_aggregate(nbr_p[l], K[l])
+        agg = neighbor_aggregate(nbr_p[l], K[l], backend)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
         return theta.at[l].set(new)
 
@@ -105,8 +106,8 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
 
 
 def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
-                        steps: int, seed: int = 0,
-                        record_every: int = 100) -> SparseTrace:
+                        steps: int, seed: int = 0, record_every: int = 100,
+                        backend: Optional[ReproBackend] = None) -> SparseTrace:
     """The paper's async gossip MP algorithm over O(n k p) sparse state.
 
     Bit-for-bit equal to ``core.model_propagation.async_gossip`` for the same
@@ -122,7 +123,7 @@ def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
     theta, K, hist = _sparse_async_scan(
         tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf, tabs.deg_count,
         tabs.rev_slot, theta_sol, c, alpha, key, steps, record_every,
-        theta0, K0)
+        theta0, K0, backend)
     n_rec = hist.shape[0]
     every = 1 if record_every == 1 else record_every
     comms = 2 * every * (np.arange(n_rec) + 1)
@@ -136,35 +137,35 @@ def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
 
 
 def sparse_sync_mp(topo: SparseTopology, theta_sol, c, alpha: float,
-                   sweeps: int, use_kernel: bool = False) -> jnp.ndarray:
+                   sweeps: int, use_kernel: bool = False,
+                   backend: Optional[ReproBackend] = None) -> jnp.ndarray:
     """Fixed-point iteration Eq. (5) over the sparse neighbor layout.
 
     theta_{t+1}[i] = (alpha * sum_s P[i,s] theta_t[nbr[i,s]]
                       + (1-alpha) c_i theta_sol[i]) / (alpha + (1-alpha) c_i)
 
-    One sweep = one gather-mix over all agents: O(n * k * p) work, the op the
-    optional Pallas kernel (kernels/sparse_mix.py) accelerates.
+    One sweep = one "sparse_mix" op (O(n * k * p) gather-mix over all
+    agents), resolved through ``kernels.dispatch``: fused XLA take/einsum on
+    CPU/GPU, the Pallas gather kernel on TPU.  ``use_kernel=True`` is the
+    deprecated spelling of ``backend=ReproBackend.using(
+    sparse_mix="pallas_sparse", interpret=<off-TPU>)``.
     """
+    from repro.core.model_propagation import mp_mix_operator
     tabs = topo.device_tables()
     n = topo.n
     theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
     c = jnp.asarray(c, jnp.float32)
-    abar = 1.0 - alpha
-    denom = alpha + abar * c
-    w = (alpha / denom)[:, None] * tabs.nbr_p          # (n, k) mixing slots
-    b = abar * c / denom                               # (n,) anchor
+    # (n, k) mixing slot weights + (n,) anchor coefficients
+    w, b = mp_mix_operator(tabs.nbr_p, c, alpha)
 
-    if use_kernel:
-        from repro.kernels import ops as kops
+    if use_kernel and backend is None:
+        backend = ReproBackend.using(
+            sparse_mix="pallas_sparse",
+            interpret=None if jax.default_backend() == "tpu" else True)
+    mix = resolve("sparse_mix", backend)
 
-        def sweep(theta, _):
-            return kops.sparse_gather_mix(theta, tabs.nbr_idx, w, b,
-                                          theta_sol), None
-    else:
-        def sweep(theta, _):
-            gathered = theta[tabs.nbr_idx]             # (n, k, p)
-            mixed = jnp.einsum("nk,nkp->np", w, gathered)
-            return mixed + b[:, None] * theta_sol, None
+    def sweep(theta, _):
+        return mix(theta, tabs.nbr_idx, w, b, theta_sol), None
 
     theta, _ = jax.lax.scan(jax.jit(sweep), theta_sol, None, length=sweeps)
     return theta
@@ -324,7 +325,8 @@ def init_sparse_admm(topo: SparseTopology, theta_sol) -> SparseADMMState:
 
 
 def _sparse_primal_quadratic(st: SparseADMMState, l, nbr_w, deg_count, D,
-                             mu, rho, data: AgentData) -> SparseADMMState:
+                             mu, rho, data: AgentData,
+                             backend=None) -> SparseADMMState:
     """Slot-row mirror of core.collaborative._primal_quadratic."""
     k = nbr_w.shape[1]
     live = jnp.arange(k) < deg_count[l]
@@ -333,7 +335,7 @@ def _sparse_primal_quadratic(st: SparseADMMState, l, nbr_w, deg_count, D,
     sx = jnp.sum(data.x[l] * data.mask[l][:, None], axis=0)
     theta_l, theta_js = quadratic_primal_core(
         w, live, st.Z_own[l], st.Z_nbr[l], st.L_own[l], st.L_nbr[l],
-        D[l], m_l, sx, mu, rho)
+        D[l], m_l, sx, mu, rho, backend)
     K = st.K.at[l].set(jnp.where(live[:, None], theta_js, st.K[l]))
     theta = st.theta.at[l].set(theta_l)
     return SparseADMMState(theta, K, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
@@ -365,7 +367,8 @@ class SparseCLTrace:
 def sparse_async_admm(topo: SparseTopology, data: AgentData, mu: float,
                       rho: float, steps: int = 1000, seed: int = 0,
                       record_every: int = 50, theta_sol=None,
-                      state: Optional[SparseADMMState] = None) -> SparseCLTrace:
+                      state: Optional[SparseADMMState] = None,
+                      backend: Optional[ReproBackend] = None) -> SparseCLTrace:
     """Asynchronous decentralized CL-ADMM (paper §4.2) over sparse edge state.
 
     Quadratic loss only (exact closed-form primal).  Bit-for-bit equal to
@@ -385,9 +388,9 @@ def sparse_async_admm(topo: SparseTopology, data: AgentData, mu: float,
         j = tabs.nbr_idx[i, s]
         r = tabs.rev_slot[i, s]
         st = _sparse_primal_quadratic(st, i, tabs.nbr_w, tabs.deg_count, D,
-                                      mu, rho, data)
+                                      mu, rho, data, backend)
         st = _sparse_primal_quadratic(st, j, tabs.nbr_w, tabs.deg_count, D,
-                                      mu, rho, data)
+                                      mu, rho, data, backend)
         return _sparse_edge_zl(st, i, s, j, r, rho)
 
     n_rec = max(1, steps // record_every)

@@ -1,0 +1,198 @@
+"""Backend dispatch registry: parity of every registered implementation
+against ``reference`` (1e-5 on randomized inputs), selection rules, and the
+no-direct-kernel-imports architecture invariant."""
+
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ref
+from repro.kernels.dispatch import BackendUnavailable, ReproBackend, resolve
+
+
+def _as_tuple(x):
+    return x if isinstance(x, (tuple, list)) else (x,)
+
+
+def _make_args(op, seed=0):
+    """Randomized canonical-signature inputs (args, kwargs) for ``op``."""
+    rng = np.random.default_rng(seed)
+    f32 = jnp.float32
+    if op == "mix":
+        n, D = 12, 200
+        return (jnp.asarray(rng.standard_normal((n, D)), f32),
+                jnp.asarray(rng.standard_normal((n, D)), f32),
+                jnp.asarray(rng.uniform(0, 1, (n, n)) / n, f32),
+                jnp.asarray(rng.uniform(0, 1, n), f32)), {}
+    if op == "sparse_mix":
+        n, k, p = 50, 6, 40
+        w = rng.uniform(0, 1, (n, k)).astype(np.float32)
+        w[:, -1] = 0.0
+        return (jnp.asarray(rng.standard_normal((n, p)), f32),
+                jnp.asarray(rng.integers(0, n, (n, k)), jnp.int32),
+                jnp.asarray(w),
+                jnp.asarray(rng.uniform(0, 1, n), f32),
+                jnp.asarray(rng.standard_normal((n, p)), f32)), {}
+    if op == "admm_primal":
+        k, p = 7, 20
+        return (jnp.asarray(rng.uniform(0.1, 1, k), f32),
+                jnp.asarray(rng.uniform(size=k) < 0.7),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.float32(2.5), jnp.float32(30.0),
+                jnp.asarray(rng.standard_normal(p), f32),
+                0.05, 1.3), {}
+    if op == "admm_edge":
+        E, p = 9, 33
+        return tuple(jnp.asarray(rng.standard_normal((E, p)), f32)
+                     for _ in range(8)), {"rho": 1.5}
+    if op == "neighbor_aggregate":
+        k, p = 9, 25
+        return (jnp.asarray(rng.uniform(0, 1, k), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32)), {}
+    if op == "attention":
+        B, S, H, hd = 1, 128, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return (jax.random.normal(ks[0], (B, S, H, hd)),
+                jax.random.normal(ks[1], (B, S, H, hd)),
+                jax.random.normal(ks[2], (B, S, H, hd))), {"window": 48}
+    raise NotImplementedError(op)
+
+
+@pytest.mark.parametrize("op", dispatch.ops())
+def test_all_impls_match_reference(op):
+    """Acceptance: every registered implementation of every op agrees with
+    ``reference`` within 1e-5 on randomized inputs (Pallas via the explicit
+    interpret opt-in off-TPU)."""
+    args, kw = _make_args(op)
+    want = _as_tuple(resolve(op, ReproBackend.using(**{op: "reference"}))(
+        *args, **kw))
+    for impl in dispatch.implementations(op):
+        backend = ReproBackend.using(interpret=True, **{op: impl})
+        got = _as_tuple(resolve(op, backend)(*args, **kw))
+        assert len(got) == len(want), (op, impl)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(
+                np.asarray(g, np.float32), np.asarray(w, np.float32),
+                atol=1e-5, rtol=1e-5,
+                err_msg=f"{op}/{impl} diverges from reference")
+
+
+@pytest.mark.parametrize("op,seed", [(op, s) for op in ("mix", "sparse_mix",
+                                                        "admm_primal")
+                                     for s in (1, 2, 3)])
+def test_parity_extra_random_draws(op, seed):
+    args, kw = _make_args(op, seed=seed)
+    want = _as_tuple(resolve(op, ReproBackend.using(**{op: "reference"}))(
+        *args, **kw))
+    for impl in dispatch.implementations(op):
+        got = _as_tuple(resolve(
+            op, ReproBackend.using(interpret=True, **{op: impl}))(*args, **kw))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       atol=1e-5, rtol=1e-5)
+
+
+class TestSelectionRules:
+    def test_every_op_has_reference_and_xla(self):
+        for op in dispatch.ops():
+            impls = dispatch.implementations(op)
+            assert "reference" in impls, op
+            assert "xla" in impls, op
+
+    def test_auto_never_picks_interpret_silently(self):
+        """Off-TPU, auto must resolve to the fused XLA impl, not Pallas
+        interpret (the satellite fix: interpret is explicit opt-in only)."""
+        if jax.default_backend() == "tpu":
+            pytest.skip("auto picks compiled Pallas on TPU by design")
+        for op in dispatch.ops():
+            fn = resolve(op)
+            entry = dispatch._REGISTRY[op]["xla"]
+            assert fn is entry.make(False), op
+
+    def test_pallas_off_tpu_requires_explicit_interpret(self):
+        if jax.default_backend() == "tpu":
+            pytest.skip("Pallas compiles on TPU")
+        with pytest.raises(BackendUnavailable):
+            resolve("mix", ReproBackend.using(mix="pallas"))
+        # explicit opt-in works
+        fn = resolve("mix", ReproBackend.using(mix="pallas", interpret=True))
+        args, _ = _make_args("mix")
+        want = ref.graph_mix(*args)
+        np.testing.assert_allclose(np.asarray(fn(*args)), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_explicit_interpret_false_beats_env_opt_in(self, monkeypatch):
+        """REPRO_PALLAS_INTERPRET=1 in the env must not make auto pick a
+        Pallas impl that an explicit interpret=False backend refuses to
+        run — it has to fall back to fused XLA."""
+        if jax.default_backend() == "tpu":
+            pytest.skip("off-TPU selection rule")
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        fn = resolve("mix", ReproBackend(interpret=False))
+        assert fn is dispatch._REGISTRY["mix"]["xla"].make(False)
+        # and with the opt-in honored, auto picks the Pallas impl
+        fn2 = resolve("mix", ReproBackend())
+        args, _ = _make_args("mix")
+        np.testing.assert_allclose(np.asarray(fn2(*args)),
+                                   np.asarray(ref.graph_mix(*args)),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_override_and_default_selection(self):
+        b = ReproBackend.using(mix="reference")
+        assert resolve("mix", b) is ref.graph_mix
+        b2 = ReproBackend(default="reference")
+        assert resolve("sparse_mix", b2) is ref.sparse_gather_mix
+
+    def test_unknown_op_and_impl_raise(self):
+        with pytest.raises(KeyError):
+            resolve("no_such_op")
+        with pytest.raises(KeyError):
+            resolve("mix", ReproBackend.using(mix="no_such_impl"))
+
+    def test_backend_is_hashable_static_arg(self):
+        b = ReproBackend.using(mix="xla", interpret=True)
+        assert hash(b) == hash(ReproBackend.using(mix="xla", interpret=True))
+
+    def test_register_new_impl(self):
+        name = "test_tmp_impl"
+        try:
+            @dispatch.register("mix", name)
+            def _mix_double_checked(theta, theta_sol, A, b):
+                return ref.graph_mix(theta, theta_sol, A, b)
+
+            args, _ = _make_args("mix")
+            got = resolve("mix", ReproBackend.using(mix=name))(*args)
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(ref.graph_mix(*args)),
+                                       atol=1e-6)
+        finally:
+            dispatch._REGISTRY["mix"].pop(name, None)
+
+
+def test_no_direct_kernel_imports_outside_kernels():
+    """Acceptance: production call sites resolve kernels through dispatch —
+    no module outside kernels/ imports a concrete kernel module."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    concrete = r"(graph_mix|sparse_mix|admm_update|flash_attention)"
+    pats = [re.compile(r"^\s*(from|import)\s+repro\.kernels\." + concrete),
+            re.compile(r"^\s*from\s+repro\.kernels(\.\w+)?\s+import\s+"
+                       r".*\b" + concrete),
+            re.compile(r"^\s*from\s+\.\.?kernels(\.\w+)?\s+import\s+"
+                       r".*\b" + concrete)]
+    offenders = []
+    for sub in ("src/repro", "benchmarks", "examples"):
+        for path in sorted((root / sub).rglob("*.py")):
+            if "kernels" in path.parts:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if any(p.search(line) for p in pats):
+                    offenders.append(
+                        f"{path.relative_to(root)}:{lineno}: {line.strip()}")
+    assert not offenders, f"direct kernel imports: {offenders}"

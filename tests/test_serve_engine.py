@@ -1,0 +1,105 @@
+"""serve.Engine slot lifecycle: a request finishing by EOS vs. max_tokens
+must free its slot, and a queued request spliced into the recycled slot must
+decode from a clean cache region (same tokens as in a fresh engine)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.serve import Engine, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = ModelConfig(name="serve-test", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab_size=128, attn_impl="ref", remat=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(k, lens=(7, 11, 5, 9)):
+    rng = np.random.default_rng(42)
+    return [rng.integers(0, 128, (lens[i % len(lens)],)) for i in range(k)]
+
+
+def _run_alone(model, params, prompt, cfg: ServeConfig):
+    """Reference decode of one prompt in a fresh engine (clean cache)."""
+    eng = Engine(model, params, cfg)
+    rid = eng.submit(prompt)
+    return eng.run()[rid]
+
+
+def test_max_tokens_frees_slot_and_queued_request_splices(model_and_params):
+    """3 requests through 2 slots: the third runs in a recycled slot and
+    must produce exactly what it produces in a fresh engine."""
+    model, params = model_and_params
+    cfg = ServeConfig(batch_size=2, cache_len=64, max_new_tokens=6,
+                      temperature=0.0)
+    prompts = _prompts(3)
+    eng = Engine(model, params, cfg)
+    rids = [eng.submit(p) for p in prompts]
+    results = eng.run()
+    assert set(results) == set(rids)
+    # every request ran to its token budget (no EOS configured)
+    for rid in rids:
+        assert len(results[rid]) == cfg.max_new_tokens
+    # all slots were freed at drain
+    assert not any(s.active for s in eng.slots)
+    assert not eng._pending
+    # the spliced-in third request saw a clean cache region: its greedy
+    # decode must match a fresh single-request engine bit-for-bit
+    alone = _run_alone(model, params, prompts[2],
+                       ServeConfig(batch_size=1, cache_len=64,
+                                   max_new_tokens=6, temperature=0.0))
+    assert results[rids[2]] == alone
+
+
+def test_eos_frees_slot_early_and_next_request_is_clean(model_and_params):
+    """Pick the EOS id from an unconstrained run so the first request
+    terminates mid-budget; the queued request must then splice into the
+    freed slot and decode cleanly."""
+    model, params = model_and_params
+    base = ServeConfig(batch_size=1, cache_len=64, max_new_tokens=8,
+                       temperature=0.0)
+    prompts = _prompts(2)
+    free_run = _run_alone(model, params, prompts[0], base)
+    assert len(free_run) == base.max_new_tokens
+    eos = free_run[2]          # guaranteed to appear at decode step >= 1
+
+    cfg = ServeConfig(batch_size=1, cache_len=64, max_new_tokens=8,
+                      temperature=0.0, eos_id=int(eos))
+    eng = Engine(model, params, cfg)
+    rids = [eng.submit(p) for p in prompts]
+    results = eng.run()
+
+    # request 0 stopped at the first EOS emitted after the prefill token
+    cut = next(i for i, t in enumerate(free_run[1:], start=1) if t == eos)
+    assert results[rids[0]] == free_run[:cut + 1]
+    assert len(results[rids[0]]) < cfg.max_new_tokens
+    assert results[rids[0]][-1] == eos
+    # slot was freed and reused; request 1's decode matches a fresh engine
+    alone = _run_alone(model, params, prompts[1], cfg)
+    assert results[rids[1]] == alone
+    assert not any(s.active for s in eng.slots)
+
+
+def test_eos_on_first_decoded_token(model_and_params):
+    """EOS as the very first decode-step token: one-token completion after
+    the prefill sample, slot still recycles for the queued request."""
+    model, params = model_and_params
+    base = ServeConfig(batch_size=1, cache_len=64, max_new_tokens=8,
+                       temperature=0.0)
+    prompts = _prompts(2)
+    free_run = _run_alone(model, params, prompts[0], base)
+    eos = free_run[1]
+    cfg = ServeConfig(batch_size=1, cache_len=64, max_new_tokens=8,
+                      temperature=0.0, eos_id=int(eos))
+    eng = Engine(model, params, cfg)
+    rids = [eng.submit(p) for p in prompts]
+    results = eng.run()
+    cut = next(i for i, t in enumerate(free_run[1:], start=1) if t == eos)
+    assert results[rids[0]] == free_run[:cut + 1]
+    assert results[rids[1]] == _run_alone(model, params, prompts[1], cfg)

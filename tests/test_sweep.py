@@ -1,0 +1,121 @@
+"""Vmapped sweep runner: one jitted call over the trial axis must reproduce
+the per-instance reference algorithms (synchronous MP iterates, Prop. 1
+closed form, synchronous CL-ADMM)."""
+
+import numpy as np
+import pytest
+
+from repro.core import closed_form, solitary_mean, confidences_from_counts, \
+    sync_admm, synchronous
+from repro.data import mean_estimation_problem
+from repro.experiments import (admm_mean_estimation_trials,
+                               closed_form_comparison,
+                               mean_estimation_trials, run_admm_sweep,
+                               run_mp_sweep)
+
+SEEDS = [0, 1, 2, 3]
+ALPHAS = [0.9, 0.99]
+
+
+@pytest.fixture(scope="module")
+def mp_trials():
+    return mean_estimation_trials(seeds=SEEDS, alphas=ALPHAS, n=30)
+
+
+def _instance(seed, n=30):
+    g, data, targets, _ = mean_estimation_problem(n=n, eps=1.0, seed=seed)
+    sol = np.asarray(solitary_mean(data))
+    conf = np.asarray(confidences_from_counts(data.counts))
+    return g, sol, conf, targets
+
+
+def test_mp_sweep_has_at_least_8_trials(mp_trials):
+    assert mp_trials.n_trials == len(SEEDS) * len(ALPHAS) >= 8
+
+
+def test_mp_sweep_matches_reference_iterates(mp_trials):
+    """Acceptance: the vmapped sweep reproduces the seed mean-estimation
+    experiment over >= 8 (seed, alpha) trials in ONE jitted call — each
+    trial's trajectory equals core.synchronous run per-instance."""
+    sweeps = 150
+    res = run_mp_sweep(mp_trials, sweeps=sweeps)
+    assert res.objective_hist.shape == (mp_trials.n_trials, sweeps)
+    assert res.err_hist.shape == (mp_trials.n_trials, sweeps)
+    i = 0
+    for seed in SEEDS:
+        g, sol, conf, _ = _instance(seed)
+        for alpha in ALPHAS:
+            want = np.asarray(synchronous(g, sol, conf, alpha, steps=sweeps))
+            np.testing.assert_allclose(res.theta_final[i], want,
+                                       atol=1e-4, rtol=1e-4)
+            i += 1
+
+
+def test_mp_sweep_objective_monotone(mp_trials):
+    res = run_mp_sweep(mp_trials, sweeps=100)
+    diffs = np.diff(res.objective_hist, axis=1)
+    assert np.all(diffs <= 1e-5)
+
+
+def test_mp_sweep_converges_to_closed_form():
+    trials = mean_estimation_trials(seeds=[0, 1], alphas=[0.9], n=30)
+    res = run_mp_sweep(trials, sweeps=2000)
+    for i, seed in enumerate([0, 1]):
+        g, sol, conf, _ = _instance(seed)
+        star = np.asarray(closed_form(g, sol, conf, 0.9))
+        np.testing.assert_allclose(res.theta_final[i], star, atol=1e-3)
+
+
+def test_closed_form_comparison_matches_per_instance(mp_trials):
+    """The Fig. 2 experiment (with vs without confidences) as one vmapped
+    solve matches looping core.closed_form per trial."""
+    e_c, e_nc, win = closed_form_comparison(mp_trials)
+    assert e_c.shape == (mp_trials.n_trials,)
+    i = 0
+    for seed in SEEDS:
+        g, sol, conf, targets = _instance(seed)
+        for alpha in ALPHAS:
+            with_c = np.asarray(closed_form(g, sol, conf, alpha))
+            no_c = np.asarray(closed_form(g, sol, np.ones(g.n), alpha))
+            t = targets[:, None]
+            np.testing.assert_allclose(
+                e_c[i], np.mean(np.sum((with_c - t) ** 2, -1)), rtol=1e-3)
+            np.testing.assert_allclose(
+                e_nc[i], np.mean(np.sum((no_c - t) ** 2, -1)), rtol=1e-3)
+            i += 1
+    # unbalanced data (eps=1): confidences should win on most instances
+    assert win.mean() >= 0.5
+
+
+def test_graph_noise_axis_perturbs_instances():
+    clean = mean_estimation_trials(seeds=[0], alphas=[0.9], n=20)
+    noisy = mean_estimation_trials(seeds=[0], alphas=[0.9],
+                                   graph_noises=(0.0, 0.2), n=20)
+    assert noisy.n_trials == 2
+    np.testing.assert_allclose(noisy.W[0], clean.W[0])
+    assert np.abs(noisy.W[1] - noisy.W[0]).max() > 0
+    np.testing.assert_allclose(noisy.W[1], noisy.W[1].T)  # still symmetric
+    res = run_mp_sweep(noisy, sweeps=50)
+    assert np.all(np.isfinite(res.objective_hist))
+
+
+def test_admm_sweep_matches_sync_admm():
+    """(seed × mu × rho) CL-ADMM sweep equals the reference synchronous
+    engine per trial (quadratic loss, exact primal)."""
+    seeds, mus, rhos, n, iters = [0, 1], [0.05, 0.2], [1.0], 12, 20
+    trials = admm_mean_estimation_trials(seeds=seeds, mus=mus, rhos=rhos, n=n)
+    assert trials.n_trials == 4
+    res = run_admm_sweep(trials, iters=iters)
+    assert res.objective_hist.shape == (4, iters)
+    i = 0
+    for seed in seeds:
+        g, data, targets, _ = mean_estimation_problem(n=n, eps=1.0, seed=seed)
+        sol = np.asarray(solitary_mean(data))
+        for mu in mus:
+            for rho in rhos:
+                trc = sync_admm(g, data, mu=mu, rho=rho, loss="quadratic",
+                                steps=iters, theta_sol=sol)
+                np.testing.assert_allclose(res.theta_final[i],
+                                           trc.theta_hist[-1],
+                                           atol=1e-4, rtol=1e-4)
+                i += 1
