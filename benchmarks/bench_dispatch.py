@@ -10,6 +10,16 @@ interpret mode so backend-parity regressions surface in CI even on CPU
 runners (interpret timings are NOT perf numbers — the maxerr columns are
 the point).  Off-TPU without ``--smoke``/``--interpret``, Pallas impls are
 recorded as skipped.
+
+``--baseline BENCH_dispatch.baseline.json`` turns the run into a CI gate:
+it fails on parity drift (any op/impl maxerr above 1e-5 AND 10x its
+baseline) and on >2x per-op slowdown.  Slowdowns are normalized by the
+median slowdown across all timed (op, impl) pairs, so a uniformly slower
+runner doesn't trip the gate — only ops that regressed *relative to the
+rest of the suite* do.  Pallas interpret timings are never gated (they are
+validation artifacts, not perf numbers).  Refresh the committed baseline
+with ``--smoke --out BENCH_dispatch.baseline.json`` when op timings shift
+on purpose.
 """
 
 from __future__ import annotations
@@ -27,15 +37,16 @@ from repro.kernels.dispatch import ReproBackend, resolve
 
 
 def _time_loop(fn, repeats: int) -> float:
-    """Median wall-time (us) of ``fn()`` after one warmup."""
+    """Best wall-time (us) of ``fn()`` after one warmup.  Min, not median:
+    scheduler noise only ever adds time, so the minimum is the stable
+    estimator — which is what the baseline gate needs on shared runners."""
     jax.block_until_ready(fn())
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         ts.append((time.perf_counter() - t0) * 1e6)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return min(ts)
 
 
 def _runnable_impls(op: str, interpret: bool):
@@ -159,6 +170,47 @@ def bench_admm_primal(smoke: bool, interpret: bool, repeats: int) -> dict:
     return {"shape": {"n": n, "k": k, "p": p}, "impls": impls}
 
 
+PARITY_FLOOR = 1e-5          # drift below this is float noise, never gated
+MAX_SLOWDOWN = 2.0           # vs baseline, after machine-speed normalization
+
+
+def _is_gated_timing(op: str, impl: str) -> bool:
+    """Pallas interpret-mode timings are validation artifacts, not perf."""
+    from repro.kernels.dispatch import _REGISTRY
+    entry = _REGISTRY.get(op, {}).get(impl)
+    return entry is not None and not entry.pallas
+
+
+def compare_to_baseline(report: dict, baseline: dict) -> list:
+    """Gate failures of ``report`` vs a committed baseline (see module
+    docstring for the rules).  Returns human-readable failure strings."""
+    failures = []
+    pairs = []               # (op, impl, cur_us, base_us)
+    for op, entry in report["ops"].items():
+        base_op = baseline.get("ops", {}).get(op, {}).get("impls", {})
+        for impl, row in entry["impls"].items():
+            base = base_op.get(impl)
+            if "maxerr" not in row or base is None or "maxerr" not in base:
+                continue
+            if row["maxerr"] > max(10.0 * base["maxerr"], PARITY_FLOOR):
+                failures.append(
+                    f"parity drift: {op}/{impl} maxerr {row['maxerr']:.2e} "
+                    f"vs baseline {base['maxerr']:.2e}")
+            if _is_gated_timing(op, impl):
+                pairs.append((op, impl, row["us_per_loop"],
+                              base["us_per_loop"]))
+    if pairs:
+        slowdowns = sorted(c / max(b, 1e-9) for _, _, c, b in pairs)
+        machine = slowdowns[len(slowdowns) // 2]        # median = runner speed
+        for op, impl, cur, base in pairs:
+            rel = (cur / max(base, 1e-9)) / max(machine, 1e-9)
+            if rel > MAX_SLOWDOWN:
+                failures.append(
+                    f"slowdown: {op}/{impl} {cur:.1f}us vs baseline "
+                    f"{base:.1f}us ({rel:.2f}x the suite median drift)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -167,8 +219,12 @@ def main(argv=None) -> int:
                     help="include Pallas impls via interpret mode off-TPU")
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--out", default="BENCH_dispatch.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to gate against (fail on "
+                         "parity drift or >2x normalized slowdown)")
     args = ap.parse_args(argv)
-    repeats = args.repeats or (1 if args.smoke else 5)
+    # gating needs stable medians; plain smoke stays cheap
+    repeats = args.repeats or (5 if args.baseline or not args.smoke else 1)
     interpret = args.smoke or args.interpret
 
     report = {
@@ -204,6 +260,15 @@ def main(argv=None) -> int:
     if worst > 1e-4:
         print(f"PARITY FAILURE: worst maxerr {worst:.2e} > 1e-4")
         return 1
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = compare_to_baseline(report, baseline)
+        for fail in failures:
+            print(f"BASELINE FAILURE: {fail}")
+        if failures:
+            return 1
+        print(f"baseline gate OK vs {args.baseline}")
     return 0
 
 

@@ -10,23 +10,48 @@ The point of the exercise: at n = 10,000 (k = 8, p = 32) the dense
     PYTHONPATH=src python benchmarks/bench_network_sim.py \
         --ns 1000,10000 --scenarios clean,lossy-10 --rounds 200
 
+``--sharded`` additionally runs the graph-partitioned engine
+(``simulate.partition``) on a mesh of ``--shards`` devices and reports the
+event-throughput ratio over the single-device run.  On a CPU-only host the
+devices are XLA fake host devices; this script force-creates them (the flag
+must precede jax init, so it is set at import time when --sharded is given).
+
 Emits CSV rows: name,us,derived (same convention as the other benchmarks).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import resource
 import sys
 import time
 
-import numpy as np
+
+def _requested_shards(argv) -> int:
+    for i, a in enumerate(argv):
+        if a == "--shards" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--shards="):
+            return int(a.split("=", 1)[1])
+    return 8
+
+
+if "--sharded" in sys.argv and \
+        "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count="
+          f"{_requested_shards(sys.argv)}").strip()
+
+import numpy as np  # noqa: E402
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from common import emit  # noqa: E402
 
-from repro.simulate import (get_scenario, random_geometric_topology,
-                            run_mp_scenario)
+from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
+                            random_geometric_topology, run_mp_scenario,
+                            run_mp_scenario_sharded)
 
 
 def peak_rss_mb() -> float:
@@ -68,6 +93,38 @@ def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
     }
 
 
+def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
+                      rounds: int, batch: int, shards: int,
+                      seed: int = 0) -> dict:
+    """Timed sharded run (partition + event-stream build reported apart)."""
+    scenario = get_scenario(scenario_name)
+    topo = random_geometric_topology(n, k=k, seed=seed)
+    rng = np.random.default_rng(seed)
+    theta_sol = rng.standard_normal((n, p)).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, n).astype(np.float32)
+    cond = scenario.make_conditions(rounds)
+    record_every = max(1, rounds // 10)
+
+    t0 = time.perf_counter()
+    assignment = greedy_partition(topo, shards)
+    part_s = time.perf_counter() - t0
+
+    kw = dict(rounds=rounds, batch=batch, seed=seed,
+              record_every=record_every, n_shards=shards,
+              assignment=assignment)
+    run_mp_scenario_sharded(topo, theta_sol, c, 0.9, cond, **kw)  # warmup
+    t1 = time.perf_counter()
+    tr = run_mp_scenario_sharded(topo, theta_sol, c, 0.9, cond, **kw)
+    dt = time.perf_counter() - t1
+    return {
+        "time_s": dt, "part_s": part_s, "events": tr.events,
+        "events_per_s": tr.events / dt, "n_shards": tr.n_shards,
+        "edge_cut": tr.edge_cut, "halo": tr.halo_size,
+        "local_batch": tr.local_batch, "overflow": tr.overflow,
+        "peak_rss_mb": peak_rss_mb(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", default="1000,10000")
@@ -77,12 +134,20 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="wake-ups per round (default n // 10)")
     ap.add_argument("--scenarios", default="clean,lossy-10")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the partitioned engine and report the "
+                         "event-throughput ratio over one device")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="mesh size for --sharded (forced as fake host "
+                         "devices when the process has fewer)")
     args = ap.parse_args()
 
     ns = [int(x) for x in args.ns.split(",") if x]
     names = [s for s in args.scenarios.split(",") if s]
     print("name,us,derived", flush=True)
     worst_rss = 0.0
+    worst_ratio = None
+    used_shards = 0
     for n in ns:
         batch = args.batch or max(1, n // 10)
         for name in names:
@@ -95,10 +160,31 @@ def main():
                  f"sparse_state_mb={r['sparse_state_mb']:.1f} "
                  f"dense_state_would_be_mb={r['dense_state_mb']:.0f} "
                  f"peak_rss_mb={r['peak_rss_mb']:.0f}")
+            if args.sharded:
+                s = bench_one_sharded(n, args.k, args.p, name, args.rounds,
+                                      batch, args.shards)
+                ratio = s["events_per_s"] / r["events_per_s"]
+                worst_ratio = ratio if worst_ratio is None \
+                    else min(worst_ratio, ratio)
+                worst_rss = max(worst_rss, s["peak_rss_mb"])
+                used_shards = s["n_shards"]
+                emit(f"network_sim/{name}/n{n}/sharded{s['n_shards']}",
+                     s["time_s"] * 1e6,
+                     f"events/s={s['events_per_s']:.0f} "
+                     f"speedup_vs_1dev={ratio:.2f}x "
+                     f"edge_cut={s['edge_cut']} halo={s['halo']} "
+                     f"local_batch={s['local_batch']} "
+                     f"overflow={s['overflow']} "
+                     f"partition_s={s['part_s']:.2f} "
+                     f"peak_rss_mb={s['peak_rss_mb']:.0f}")
     budget_mb = 4096.0
     status = "OK" if worst_rss < budget_mb else "OVER"
     print(f"# peak_rss {worst_rss:.0f} MB vs budget {budget_mb:.0f} MB "
           f"-> {status}", flush=True)
+    if worst_ratio is not None:
+        print(f"# sharded speedup (min over runs) {worst_ratio:.2f}x on "
+              f"{used_shards} devices ({os.cpu_count()} host cores)",
+              flush=True)
     return 0 if worst_rss < budget_mb else 1
 
 

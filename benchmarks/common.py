@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, List
+from typing import Callable
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:

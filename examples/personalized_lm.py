@@ -13,8 +13,6 @@ Run (CPU, ~10-20 min full / ~2 min with --tiny):
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import random_geometric_graph

@@ -28,7 +28,6 @@ hinge (§4.2: "ADMM is typically robust to approximate solutions").
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -175,7 +174,8 @@ def knn_graph_from_similarity(sim: np.ndarray, k: int) -> Graph:
     return Graph(W)
 
 
-def two_moons(n: int, noise: float = 0.05, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+def two_moons(n: int, noise: float = 0.05,
+              seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Two intertwining moons in R^2 (paper §5.1 / Zhou et al. 2004).
 
     Returns (points (n,2), labels (n,) in {0,1}) — label 0 = upper moon

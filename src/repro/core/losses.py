@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ values make the two trajectories match bit-for-bit given the same RNG stream
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +173,31 @@ def neighbor_aggregate(w_slots, theta_slots,
     bit-identical.
     """
     return resolve("neighbor_aggregate", backend)(w_slots, theta_slots)
+
+
+def batched_model_update(nbr_p_rows, K_rows, c_rows, sol_rows, alpha,
+                         backend: Optional[ReproBackend] = None):
+    """Eq. (6) model update for a batch of agents' slot rows.
+
+    nbr_p_rows: (B, k) stochastic weights; K_rows: (B, k, p) neighbor
+    models; c_rows: (B,) confidences; sol_rows: (B, p) solitary models.
+    Returns the (B, p) updated models
+
+        theta_i = (alpha * sum_s P[i,s] K[i,s] + (1-alpha) c_i sol_i)
+                  / (alpha + (1-alpha) c_i)
+
+    This is THE per-shard step: the single-device scenario engine applies
+    it to rows of its global (n, k, p) state, the partitioned engine
+    (``simulate.partition``) to rows of each shard's local block, and the
+    dense references reach the same reduction through
+    ``neighbor_aggregate`` — all dispatched through ``kernels.dispatch``,
+    so the trajectories agree bit-for-bit whichever layout ran them.
+    """
+    agg = jax.vmap(lambda w_, K_: neighbor_aggregate(w_, K_, backend))(
+        nbr_p_rows, K_rows)
+    abar = 1.0 - alpha
+    return (alpha * agg + abar * c_rows[:, None] * sol_rows) \
+        / (alpha + abar * c_rows)[:, None]
 
 
 def quadratic_primal_core(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,

@@ -32,8 +32,7 @@ Two communication schedules realize the SAME mixing operator (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ Also: MusicGen codebook delay pattern utilities (audio arch support).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -89,7 +89,6 @@ def linear_classification_problem(n: int = 100, p: int = 50,
 
 def accuracy(theta_all, data: AgentData) -> np.ndarray:
     """Per-agent accuracy of linear models on (padded) datasets."""
-    import jax.numpy as jnp
     pred = np.sign(np.einsum("nmp,np->nm", np.asarray(data.x),
                              np.asarray(theta_all)))
     correct = (pred == np.asarray(data.y)) * np.asarray(data.mask)

@@ -68,9 +68,14 @@ from . import admm_update as _au
 from . import flash_attention as _fa
 from . import graph_mix as _gm
 from . import ref
+from . import sharded as _sh
 from . import sparse_mix as _sm
 
-IMPLS = ("reference", "xla", "pallas", "pallas_sparse")
+IMPLS = ("reference", "xla", "pallas", "pallas_sparse", "xla_sharded",
+         "pallas_sparse_sharded")
+# Pallas impls "auto" may pick (single-device only; the sharded wrappers are
+# explicit opt-ins — they reshard their inputs, which auto must never do
+# silently).
 _PALLAS_IMPLS = ("pallas", "pallas_sparse")
 
 
@@ -252,6 +257,13 @@ def _mix_pallas(interpret):
     return functools.partial(_gm.graph_mix, interpret=interpret)
 
 
+@register("mix", "xla_sharded")
+def _mix_xla_sharded(theta, theta_sol, A, b):
+    """Row-sharded mix over the sim mesh (all-gathered theta); per-shard
+    math is the fused XLA form, so parity with it is exact."""
+    return _sh.sharded_graph_mix(theta, theta_sol, A, b, inner=_mix_xla)
+
+
 # ---------------------------------------------------------------------------
 # sparse_mix — CSR gather-mix over padded-neighbor tables:
 #   (table (n, p), idx (n, k) int32, w (n, k), b (n,), sol (n, p)) -> (n, p)
@@ -274,6 +286,20 @@ def _sparse_mix_xla(table, idx, w, b, sol):
 @register("sparse_mix", "pallas_sparse", pallas=True)
 def _sparse_mix_pallas(interpret):
     return functools.partial(_sm.sparse_gather_mix, interpret=interpret)
+
+
+@register("sparse_mix", "xla_sharded")
+def _sparse_mix_xla_sharded(table, idx, w, b, sol):
+    """Agent-sharded gather-mix over the sim mesh: each shard all-gathers
+    the model table and runs the fused XLA mix on its row block."""
+    return _sh.sharded_sparse_mix(table, idx, w, b, sol,
+                                  inner=_sparse_mix_xla)
+
+
+@register("sparse_mix", "pallas_sparse_sharded", pallas=True)
+def _sparse_mix_pallas_sharded(interpret):
+    inner = functools.partial(_sm.sparse_gather_mix, interpret=interpret)
+    return functools.partial(_sh.sharded_sparse_mix, inner=inner)
 
 
 # ---------------------------------------------------------------------------

@@ -47,7 +47,12 @@ def _kernel(idx_ref, w_ref, b_ref, sol_ref, table_ref, out_ref, *, k: int):
 def sparse_gather_mix(table, idx, w, b, sol, *,
                       block_n: int = DEFAULT_BLOCK_N,
                       interpret: bool = False):
-    """table, sol: (n, p); idx: (n, k) int32; w: (n, k); b: (n,) -> (n, p).
+    """table: (N, p); idx: (n, k) int32; w: (n, k); b: (n,); sol: (n, p)
+    -> (n, p).
+
+    The output row count follows ``idx``/``sol``; the gather table may hold
+    more rows than are mixed (N >= n) — the partitioned engines mix each
+    shard's n local rows against the all-gathered N-row global table.
 
     Pad slots must carry w == 0 (their gathered rows are multiplied away),
     which is exactly the NeighborTables convention.
@@ -56,8 +61,8 @@ def sparse_gather_mix(table, idx, w, b, sol, *,
     compiles for TPU. Prefer ``kernels.dispatch.resolve("sparse_mix",
     backend)``, which picks the right implementation per platform.
     """
-    n, p = table.shape
-    k = idx.shape[1]
+    n_table, p = table.shape
+    n, k = idx.shape
     np_ = pl.cdiv(n, block_n) * block_n
     if np_ != n:
         pad = ((0, np_ - n), (0, 0))
@@ -76,7 +81,7 @@ def sparse_gather_mix(table, idx, w, b, sol, *,
             pl.BlockSpec((block_n, k), lambda i: (i, 0)),   # w tile
             pl.BlockSpec((block_n, 1), lambda i: (i, 0)),   # b tile
             pl.BlockSpec((block_n, p), lambda i: (i, 0)),   # sol tile
-            pl.BlockSpec((n, p), lambda i: (0, 0)),         # table: resident
+            pl.BlockSpec((n_table, p), lambda i: (0, 0)),   # table: resident
         ],
         out_specs=pl.BlockSpec((block_n, p), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, p), table.dtype),

@@ -20,16 +20,15 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ALIASES, get_config
 from repro.coupling import CouplingConfig, make_state
-from repro.core import ring_graph, random_geometric_graph
+from repro.core import random_geometric_graph
 from repro.launch.mesh import make_production_mesh, n_agents_of, use_mesh
 from repro.launch.shapes import SHAPES, InputShape, plan_decode
 from repro.launch.sharding import (agent_axes_of, stacked_param_specs,

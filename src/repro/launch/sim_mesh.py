@@ -1,0 +1,89 @@
+"""1-D agent meshes for partitioned network simulation (DESIGN.md §11).
+
+The network simulator shards the *agent* axis: a ``(P,)`` mesh whose single
+axis (``AGENT_AXIS = "shards"``) carries one graph shard per device.  This
+is deliberately distinct from the production train/serve meshes in
+``launch.mesh`` (("pod", "data", "model")): the simulator has no model
+parallelism — every device runs the same per-shard event loop over its own
+block of agents and exchanges halo models between event batches.
+
+On a CPU-only host, multi-device runs use XLA's fake host devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/bench_network_sim.py --sharded
+
+The flag must be set before the first jax call in the process (jax locks
+the device count on first init), which is why the helpers here never force
+a device count themselves — they size the mesh to whatever the process
+already has.
+
+Defined as functions so importing this module never touches jax device
+state (same rule as ``launch.mesh``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AGENT_AXIS = "shards"
+
+#: The recipe for getting P host devices out of a CPU-only process; must be
+#: in the environment before the first jax import (see module docstring).
+HOST_DEVICES_RECIPE = "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+
+
+def max_shards() -> int:
+    """Largest usable shard count on this process (= device count)."""
+    return jax.device_count()
+
+
+def make_sim_mesh(n_shards: Optional[int] = None):
+    """1-D mesh over ``n_shards`` devices (default: all local devices).
+
+    ``n_shards`` is clamped to the available device count so callers can
+    ask for the "ideal" P and degrade gracefully on smaller hosts (a
+    single-device process gets a P = 1 mesh, on which the sharded engines
+    reduce to the plain sparse path).
+    """
+    avail = max_shards()
+    n = avail if n_shards is None else max(1, min(n_shards, avail))
+    return jax.make_mesh((n,), (AGENT_AXIS,))
+
+
+def mesh_shards(mesh) -> int:
+    """Shard count of a sim mesh (size of its agent axis)."""
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape))[AGENT_AXIS])
+
+
+def agent_sharding(mesh, *trailing_dims: Optional[str]) -> NamedSharding:
+    """NamedSharding splitting the leading (agent) axis across the mesh."""
+    return NamedSharding(mesh, P(AGENT_AXIS, *trailing_dims))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_map_1d(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map over a sim mesh.
+
+    ``jax.shard_map`` (new API, ``check_vma``) when present, else
+    ``jax.experimental.shard_map.shard_map`` (jax <= 0.4.x, ``check_rep``).
+    Replication checking is disabled in both spellings: the simulator's
+    per-shard programs mix replicated event streams with sharded state and
+    gather/ppermute collectives the checker cannot type.
+    """
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, check_vma=False, **kw)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as sm_old
+
+    return sm_old(f, check_rep=False, **kw)

@@ -14,7 +14,7 @@ Kinds: attn | attn_local | attn_moe | mlstm | slstm | rglru.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from .common import (ModelConfig, ParamDef, rms_norm, swiglu, gelu_glu,
                      apply_rope, apply_mrope, constrain)
-from .attention import (ref_attention, chunked_attention, decode_attention,
-                        _expand_kv)
+from .attention import (ref_attention, chunked_attention, decode_attention)
 
 
 class Ctx(NamedTuple):

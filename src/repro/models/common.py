@@ -13,11 +13,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
@@ -89,7 +88,8 @@ class ModelConfig:
 
     @property
     def hd(self) -> int:
-        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+        return self.head_dim if self.head_dim is not None \
+            else self.d_model // self.n_heads
 
     @property
     def layer_kinds(self) -> Tuple[str, ...]:
@@ -197,7 +197,8 @@ def rms_norm(x, gamma, eps: float = 1e-6):
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
-    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dtype)
+    return ((x32 * jax.lax.rsqrt(var + eps))
+            * (1.0 + gamma.astype(jnp.float32))).astype(dtype)
 
 
 def swiglu(x, w_gate, w_up, w_down):

@@ -17,9 +17,7 @@ group are stacked over the repetition dim so the whole depth compiles to one
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

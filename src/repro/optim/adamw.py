@@ -9,7 +9,7 @@ f32). Adam is elementwise, so agent-stacked leaves need no special handling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

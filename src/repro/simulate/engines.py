@@ -32,8 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import AgentData
-from repro.core.sparse import (neighbor_aggregate, quadratic_primal_core,
-                               sample_event)
+from repro.core.sparse import (batched_model_update, neighbor_aggregate,
+                               quadratic_primal_core, sample_event)
 from repro.kernels.dispatch import ReproBackend, resolve
 from . import scheduler as sched
 from .scheduler import NetworkConditions
@@ -203,7 +203,6 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
     (conditions, alpha, batch, record_every, n_rec) and shapes hit the jit
     cache — benchmark warmups genuinely pre-compile the timed run."""
     n = theta_sol.shape[0]
-    abar = 1.0 - alpha
 
     def round_fn(carry, inp):
         theta, K, theta_prev, active, delivered, dropped = carry
@@ -223,12 +222,13 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
         K = K.at[row_i, ev.s].set(msg_j, mode="drop")
 
         # --- update: endpoints that received a message recompute Eq. (6)
+        # via the shared per-shard step (core.sparse.batched_model_update —
+        # the same function the partitioned engine applies to local rows)
         upd = jnp.concatenate([ev.i, ev.j])                      # (2B,)
         got = jnp.concatenate([ev.deliver_ji, ev.deliver_ij])
         got &= active[upd]
-        agg = jnp.einsum("bk,bkp->bp", tabs.nbr_p[upd], K[upd])
-        new = (alpha * agg + abar * c[upd, None] * theta_sol[upd]) \
-            / (alpha + abar * c[upd])[:, None]
+        new = batched_model_update(tabs.nbr_p[upd], K[upd], c[upd],
+                                   theta_sol[upd], alpha)
         theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
 
         delivered = delivered + jnp.sum(ev.deliver_ij) + jnp.sum(ev.deliver_ji)

@@ -1,0 +1,499 @@
+"""Graph-partitioned multi-device network simulation (DESIGN.md §11).
+
+Shards the agent graph into P blocks, gives each shard padded local agent
+state plus a *halo* buffer of remote-neighbor models, and runs the
+event-driven MP-gossip engine under ``shard_map`` over a 1-D agent mesh
+(``launch.sim_mesh``), exchanging halos between event batches.
+
+Layout per shard (m = padded local agents, H = padded halo size)::
+
+      theta_loc (m, p)   K_loc (m, k, p)   nbr_p_loc (m, k)  c/sol_loc
+      ext = [ theta_loc | theta_halo (H, p) | 0-row ]   # message source
+
+    fetch[q][agent] -> row of ext   (m + H = the zero row = "not here")
+
+Between event batches each shard publishes its *boundary* rows (local
+agents with a cross-shard edge, padded to B) and pulls its halo from the
+gathered boundary buffers — ``all_gather`` by default, or a P-1-step
+``ppermute`` ring (``exchange="ring"``).
+
+Three properties make the sharded trajectory match the single-device
+engine (``simulate.engines.run_mp_scenario``) bit-for-bit:
+
+* the event stream is *precomputed* with the identical RNG schedule
+  (``scheduler.precompute_event_stream``) and replayed by every shard —
+  the fault process never reads model state, so this is exact;
+* within a round, messages read round-start models; the halo refreshed at
+  the top of each round IS the round-start snapshot of remote models (the
+  previous round's halo serves the one-round-stale payloads);
+* the per-agent update is the shared ``core.sparse.batched_model_update``
+  applied to the receiver's own slot row — identical arithmetic whether
+  the row lives in the global (n, k, p) state or a shard's local block.
+
+The only approximation is the static per-shard update buffer: each round a
+shard compacts its local delivery endpoints into ``local_batch`` slots
+(default: mean + 8 sigma of the binomial receiver count, so overflow is
+~never observed; overflowing events are counted in the trace and sized up
+via ``local_batch`` if parity to the reference run is required).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sparse import batched_model_update
+from repro.launch.sim_mesh import (AGENT_AXIS, make_sim_mesh, mesh_shards,
+                                   shard_map_1d)
+from .engines import SimTrace
+from .scheduler import NetworkConditions, precompute_event_stream
+from .topology import SparseTopology
+
+
+# ---------------------------------------------------------------------------
+# Greedy edge-cut partitioner (linear deterministic greedy over a BFS order)
+# ---------------------------------------------------------------------------
+
+
+def _bfs_order(topo: SparseTopology, seed: int) -> np.ndarray:
+    """Deterministic BFS visit order; the seed picks each component's root."""
+    tabs = topo.tables
+    n = topo.n
+    rng = np.random.default_rng(seed)
+    seen = np.zeros(n, bool)
+    order = np.empty(n, np.int64)
+    pos = 0
+    start = int(rng.integers(n))
+    for root in range(n):
+        root = (root + start) % n
+        if seen[root]:
+            continue
+        seen[root] = True
+        q = deque([root])
+        while q:
+            v = q.popleft()
+            order[pos] = v
+            pos += 1
+            for u in tabs.nbr_idx[v, :tabs.deg_count[v]]:
+                if not seen[u]:
+                    seen[u] = True
+                    q.append(int(u))
+    return order
+
+
+def greedy_partition(topo: SparseTopology, n_shards: int, seed: int = 0,
+                     refine_passes: int = 4) -> np.ndarray:
+    """Greedy edge-cut assignment of agents to ``n_shards`` balanced shards.
+
+    Linear deterministic greedy (Stanton & Kleinberg): visit agents in BFS
+    order and put each on the shard holding most of its already-placed
+    neighbors, discounted by shard fullness and hard-capped at
+    ceil(n / P) agents; then ``refine_passes`` local passes move each agent
+    to its majority-neighbor shard when balance allows (never increases the
+    cut).  O(E) per pass; deterministic for a fixed seed (the seed only
+    picks BFS roots).  Returns the (n,) int32 shard id per agent.
+    """
+    n = topo.n
+    if n_shards <= 1:
+        return np.zeros(n, np.int32)
+    tabs = topo.tables
+    cap = math.ceil(n / n_shards)
+    assign = np.full(n, -1, np.int32)
+    sizes = np.zeros(n_shards, np.int64)
+    order = _bfs_order(topo, seed)
+    for v in order:
+        nbrs = tabs.nbr_idx[v, :tabs.deg_count[v]]
+        placed = assign[nbrs]
+        cnt = np.bincount(placed[placed >= 0], minlength=n_shards)
+        open_ = sizes < cap
+        if cnt.max(initial=0) > 0:
+            score = np.where(open_, cnt * (1.0 - sizes / cap), -1.0)
+        else:                       # no placed neighbor: least-loaded shard
+            score = np.where(open_, -sizes.astype(np.float64), -np.inf)
+        s = int(np.argmax(score))
+        assign[v] = s
+        sizes[s] += 1
+    # refinement tolerates ~6% imbalance so moves stay possible when every
+    # shard sits exactly at cap (the LDG pass always ends there)
+    refine_cap = cap + max(1, cap // 16)
+    for _ in range(refine_passes):
+        moved = False
+        for v in order:
+            nbrs = tabs.nbr_idx[v, :tabs.deg_count[v]]
+            cnt = np.bincount(assign[nbrs], minlength=n_shards)
+            cur = assign[v]
+            t = int(np.argmax(cnt))
+            if t != cur and cnt[t] > cnt[cur] and sizes[t] < refine_cap:
+                assign[v] = t
+                sizes[t] += 1
+                sizes[cur] -= 1
+                moved = True
+        if not moved:
+            break
+    return assign
+
+
+def block_partition(topo: SparseTopology, n_shards: int) -> np.ndarray:
+    """Contiguous-id blocks — the trivial baseline the greedy cut beats."""
+    m = math.ceil(topo.n / max(1, n_shards))
+    return (np.arange(topo.n) // m).astype(np.int32)
+
+
+def _directed_edges(tabs):
+    src = np.repeat(np.arange(tabs.n, dtype=np.int64), tabs.deg_count)
+    live = np.arange(tabs.k_max)[None, :] < tabs.deg_count[:, None]
+    dst = tabs.nbr_idx[live].astype(np.int64)
+    return src, dst
+
+
+def edge_cut(topo: SparseTopology, assignment: np.ndarray) -> int:
+    """Number of undirected edges crossing shard boundaries."""
+    src, dst = _directed_edges(topo.tables)
+    a = np.asarray(assignment)
+    return int((a[src] != a[dst]).sum()) // 2
+
+
+# ---------------------------------------------------------------------------
+# Partition layout: local blocks, boundary buffers, halo fetch tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPartition:
+    """Host-side shard/halo layout of a topology (see module docstring).
+
+    Shapes: owner/local_pos/perm_slot (n,); local_ids (P, m) with -1 pads;
+    bnd_pos (P, B); halo_src_shard/halo_src_pos (P, H); fetch (P, n).
+    ``fetch[q, a]`` is agent a's row in shard q's ext buffer: < m if local,
+    m..m+H-1 if in q's halo, m+H (the zero row) otherwise.
+    """
+
+    n: int
+    n_shards: int
+    shard_size: int                 # m
+    owner: np.ndarray
+    local_pos: np.ndarray
+    perm_slot: np.ndarray           # owner * m + local_pos
+    local_ids: np.ndarray
+    bnd_pos: np.ndarray
+    halo_src_shard: np.ndarray
+    halo_src_pos: np.ndarray
+    fetch: np.ndarray
+    edge_cut: int
+
+    @property
+    def halo_size(self) -> int:     # H (max over shards, 0 if no cut)
+        return self.halo_src_shard.shape[1]
+
+    @property
+    def boundary_size(self) -> int:  # B
+        return self.bnd_pos.shape[1]
+
+    @classmethod
+    def build(cls, topo: SparseTopology, assignment: np.ndarray,
+              n_shards: Optional[int] = None) -> "GraphPartition":
+        tabs = topo.tables
+        n = topo.n
+        owner = np.asarray(assignment, np.int32)
+        P_ = int(n_shards if n_shards is not None else owner.max() + 1)
+        sizes = np.bincount(owner, minlength=P_)
+        m = max(1, int(sizes.max()))
+
+        by_shard = np.argsort(owner, kind="stable")      # id-sorted per shard
+        local_pos = np.empty(n, np.int32)
+        starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        local_pos[by_shard] = (np.arange(n) - starts[owner[by_shard]]) \
+            .astype(np.int32)
+        local_ids = np.full((P_, m), -1, np.int32)
+        local_ids[owner, local_pos] = np.arange(n, dtype=np.int32)
+        perm_slot = owner.astype(np.int64) * m + local_pos
+
+        src, dst = _directed_edges(tabs)
+        cross = owner[src] != owner[dst]
+        cut = int(cross.sum()) // 2
+
+        # boundary: local agents with any cross edge, id-sorted per shard
+        is_bnd = np.zeros(n, bool)
+        is_bnd[src[cross]] = True
+        bnd_lists = [np.where(is_bnd & (owner == q))[0] for q in range(P_)]
+        B = max((len(b) for b in bnd_lists), default=0)
+        bnd_pos = np.zeros((P_, B), np.int32)
+        bnd_rank = np.zeros(n, np.int64)
+        for q, lst in enumerate(bnd_lists):
+            bnd_pos[q, :len(lst)] = local_pos[lst]
+            bnd_rank[lst] = np.arange(len(lst))
+
+        # halo of q: remote endpoints of q's cross edges, id-sorted
+        halo_lists = [np.unique(dst[cross & (owner[src] == q)])
+                      for q in range(P_)]
+        H = max((len(h) for h in halo_lists), default=0)
+        halo_src_shard = np.zeros((P_, H), np.int32)
+        halo_src_pos = np.zeros((P_, H), np.int32)
+        fetch = np.full((P_, n), m + H, np.int32)
+        fetch[owner, np.arange(n)] = local_pos
+        for q, hl in enumerate(halo_lists):
+            halo_src_shard[q, :len(hl)] = owner[hl]
+            halo_src_pos[q, :len(hl)] = bnd_rank[hl]
+            fetch[q, hl] = m + np.arange(len(hl), dtype=np.int32)
+
+        return cls(n=n, n_shards=P_, shard_size=m, owner=owner,
+                   local_pos=local_pos, perm_slot=perm_slot,
+                   local_ids=local_ids, bnd_pos=bnd_pos,
+                   halo_src_shard=halo_src_shard, halo_src_pos=halo_src_pos,
+                   fetch=fetch, edge_cut=cut)
+
+    def shard_rows(self, x: np.ndarray) -> np.ndarray:
+        """Permute per-agent rows (n, ...) into the stacked padded layout
+        (P * m, ...); pad rows are zero."""
+        x = np.asarray(x)
+        ids = self.local_ids.reshape(-1)
+        out = x[np.maximum(ids, 0)]
+        out[ids < 0] = 0
+        return out
+
+    def unshard_rows(self, y):
+        """Inverse of :meth:`shard_rows` along the last-but-(ndim-1) axis:
+        (..., P * m, ...) indexed back to original agent order (..., n, ...).
+        Works on the leading-agent axis right after any batch dims."""
+        return np.asarray(y)[..., self.perm_slot, :]
+
+
+# ---------------------------------------------------------------------------
+# Sharded scenario engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardedSimTrace(SimTrace):
+    """SimTrace plus partition diagnostics.
+
+    overflow: events that missed the static per-shard update buffer (0 =>
+    the trajectory is exactly the single-device one).
+    """
+
+    n_shards: int = 1
+    edge_cut: int = 0
+    halo_size: int = 0
+    local_batch: int = 0
+    overflow: int = 0
+
+
+def _binomial_cap(trials: int, n_shards: int, cap: int) -> int:
+    """mean + 8 sigma of Binomial(trials, 1/P), clamped to the lossless
+    capacity ``cap`` — at 8 sigma overflow is ~never observed, and any
+    occurrence is counted in the trace."""
+    if n_shards <= 1:
+        return cap
+    q = 1.0 / n_shards
+    mean = trials * q
+    std = math.sqrt(trials * q * (1.0 - q))
+    return int(min(cap, math.ceil(mean + 8.0 * std + 16)))
+
+
+def default_local_batch(batch: int, n_shards: int) -> int:
+    """Static per-shard update capacity (each of 2B endpoints lands on a
+    given shard w.p. ~1/P; 2B = lossless whatever the draw)."""
+    return _binomial_cap(2 * batch, n_shards, 2 * batch)
+
+
+def default_local_events(batch: int, n_shards: int) -> int:
+    """Static per-shard event capacity (an event is relevant to a shard
+    when it owns either endpoint, w.p. <= 2/P)."""
+    return _binomial_cap(2 * batch, n_shards, batch)
+
+
+def _scan_specs(P_spec, tree):
+    return jax.tree_util.tree_map(lambda _: P_spec, tree)
+
+
+def _take_padded(x, sel, fill):
+    """x[sel] where the out-of-range selector index len(x) reads ``fill``."""
+    return jnp.concatenate([x, jnp.full((1,), fill, x.dtype)])[sel]
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "alpha", "m", "H", "E", "U", "n_rec",
+                          "record_every", "exchange"))
+def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
+                           fetch, bnd_pos, halo_src_shard, halo_src_pos, *,
+                           alpha: float, m: int, H: int, E: int, U: int,
+                           n_rec: int, record_every: int, exchange: str):
+    """shard_map'd scan over rounds; every array argument before ``fetch``
+    is either replicated (the event stream) or row-sharded (P * m leading
+    axis); ``fetch``/``bnd_pos``/``halo_src_*`` carry one row per shard."""
+    P_ = mesh_shards(mesh)
+    p = theta0.shape[1]
+    batch = stream.i.shape[-1]
+
+    def block_fn(ev, theta0_blk, K0_blk, nbr_p_blk, c_blk, sol_blk,
+                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk):
+        fetch_q = fetch_blk[0]
+        bnd = bnd_blk[0]
+        hsrc, hpos = hsrc_blk[0], hpos_blk[0]
+        zero_row = jnp.zeros((1, p), theta0_blk.dtype)
+
+        def exchange_halo(theta):
+            """Publish boundary rows, pull this shard's halo (round-start
+            snapshot of remote-neighbor models)."""
+            if H == 0:
+                return jnp.concatenate([theta, zero_row])
+            send = theta[bnd]                                  # (B, p)
+            if exchange == "ring":
+                ring = [(s, (s + 1) % P_) for s in range(P_)]
+                q_id = jax.lax.axis_index(AGENT_AXIS)
+                halo = jnp.zeros((H, p), theta.dtype)
+                buf = send
+                for step in range(1, P_):
+                    buf = jax.lax.ppermute(buf, AGENT_AXIS, ring)
+                    src = (q_id - step) % P_
+                    halo = jnp.where((hsrc == src)[:, None], buf[hpos], halo)
+            else:
+                allb = jax.lax.all_gather(send, AGENT_AXIS)    # (P, B, p)
+                halo = allb[hsrc, hpos]
+            return jnp.concatenate([theta, halo, zero_row])
+
+        def round_fn(carry, ev_t):
+            theta, K, ext_prev, overflow = carry
+            ext = exchange_halo(theta)
+
+            # --- compact to the events touching this shard: everything
+            # below (message gathers, slot scatters, updates) then runs at
+            # O(E) ~ 2B/P instead of O(B) per shard
+            rel = (fetch_q[ev_t.i] < m) | (fetch_q[ev_t.j] < m)
+            sel = jnp.nonzero(rel, size=E, fill_value=batch)[0]
+            i = _take_padded(ev_t.i, sel, 0)
+            j = _take_padded(ev_t.j, sel, 0)
+            s = _take_padded(ev_t.s, sel, 0)
+            r = _take_padded(ev_t.r, sel, 0)
+            d_ij = _take_padded(ev_t.deliver_ij, sel, False)
+            d_ji = _take_padded(ev_t.deliver_ji, sel, False)
+            st_ij = _take_padded(ev_t.stale_ij, sel, False)
+            st_ji = _take_padded(ev_t.stale_ji, sel, False)
+            overflow += jnp.maximum(jnp.sum(rel) - E, 0)
+
+            # --- communication: deliver into local receivers' slots
+            f_i, f_j = fetch_q[i], fetch_q[j]
+            msg_i = jnp.where(st_ij[:, None], ext_prev[f_i], ext[f_i])
+            msg_j = jnp.where(st_ji[:, None], ext_prev[f_j], ext[f_j])
+            row_j = jnp.where(d_ij & (f_j < m), f_j, m)
+            row_i = jnp.where(d_ji & (f_i < m), f_i, m)
+            K = K.at[row_j, r].set(msg_i, mode="drop")
+            K = K.at[row_i, s].set(msg_j, mode="drop")
+
+            # --- update: compact local endpoints, shared Eq. (6) step
+            f_u = jnp.concatenate([f_i, f_j])
+            got = jnp.concatenate([d_ji, d_ij]) & (f_u < m)
+            usel = jnp.nonzero(got, size=U, fill_value=2 * E)[0]
+            lu = _take_padded(f_u, usel, m)
+            lu_c = jnp.minimum(lu, m - 1)
+            new = batched_model_update(nbr_p_blk[lu_c], K[lu_c], c_blk[lu_c],
+                                       sol_blk[lu_c], alpha)
+            theta = theta.at[jnp.where(lu < m, lu, m)].set(new, mode="drop")
+            overflow += jnp.maximum(jnp.sum(got) - U, 0)
+            return (theta, K, ext, overflow), None
+
+        def outer(carry, ev_blk):
+            carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
+            return carry, carry[0]
+
+        ext0 = exchange_halo(theta0_blk)                 # = warm-start halo
+        carry0 = (theta0_blk, K0_blk, ext0, jnp.int32(0))
+        (theta, K, _, overflow), hist = jax.lax.scan(outer, carry0, ev)
+        return hist, theta, overflow[None]
+
+    ev_scan = jax.tree_util.tree_map(
+        lambda x: x.reshape(n_rec, record_every, *x.shape[1:]),
+        stream._replace(active_frac=None))
+    run = shard_map_1d(
+        block_fn, mesh,
+        in_specs=(_scan_specs(P(), ev_scan), P(AGENT_AXIS), P(AGENT_AXIS),
+                  P(AGENT_AXIS), P(AGENT_AXIS), P(AGENT_AXIS),
+                  P(AGENT_AXIS, None), P(AGENT_AXIS, None),
+                  P(AGENT_AXIS, None), P(AGENT_AXIS, None)),
+        out_specs=(P(None, AGENT_AXIS, None), P(AGENT_AXIS), P(AGENT_AXIS)))
+    return run(ev_scan, theta0, K0, nbr_p, c, sol, fetch, bnd_pos,
+               halo_src_shard, halo_src_pos)
+
+
+def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
+                            conditions: NetworkConditions, rounds: int,
+                            batch: int, seed: int = 0,
+                            record_every: int = 10, *,
+                            n_shards: Optional[int] = None, mesh=None,
+                            assignment: Optional[np.ndarray] = None,
+                            local_batch: Optional[int] = None,
+                            exchange: str = "all_gather",
+                            partition_seed: int = 0) -> ShardedSimTrace:
+    """``run_mp_scenario`` over a graph partitioned across the sim mesh.
+
+    Same scenario semantics and RNG schedule as the single-device engine —
+    ``trace.theta_hist`` reproduces it exactly whenever ``trace.overflow``
+    is 0 (see module docstring).  ``n_shards`` defaults to every local
+    device; pass ``assignment`` to reuse a precomputed partition, and
+    ``exchange="ring"`` for the ppermute halo path.
+    """
+    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
+    P_ = mesh_shards(mesh)
+    if assignment is None:
+        assignment = greedy_partition(topo, P_, seed=partition_seed)
+    elif int(np.max(assignment)) >= P_:
+        raise ValueError(
+            f"assignment uses shard {int(np.max(assignment))} but the mesh "
+            f"has only {P_} devices (start the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
+            f"fake host devices)")
+    part = GraphPartition.build(topo, assignment, P_)
+
+    tabs = topo.tables
+    n = topo.n
+    theta_sol = np.asarray(theta_sol, np.float32).reshape(n, -1)
+    c = np.asarray(c, np.float32)
+    record_every = max(1, min(record_every, rounds))
+    n_rec = max(1, rounds // record_every)
+    total_rounds = n_rec * record_every
+
+    stream = precompute_event_stream(
+        topo.device_tables(), jnp.asarray(topo.partition_halves()),
+        conditions, batch, seed, total_rounds)
+
+    K0 = theta_sol[tabs.nbr_idx]                     # warm start (§3.2)
+    sharded = dict(
+        theta0=part.shard_rows(theta_sol), K0=part.shard_rows(K0),
+        nbr_p=part.shard_rows(tabs.nbr_p), c=part.shard_rows(c),
+        sol=part.shard_rows(theta_sol))
+    if local_batch is None:
+        E = default_local_events(batch, P_)
+        U = default_local_batch(batch, P_)
+    else:                      # explicit capacity: lossless event selection
+        E = batch
+        U = max(1, min(local_batch, 2 * batch))
+    U = min(U, 2 * E)
+
+    hist, theta, overflow = _sharded_scenario_scan(
+        mesh, stream, **{k: jnp.asarray(v) for k, v in sharded.items()},
+        fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
+        halo_src_shard=jnp.asarray(part.halo_src_shard),
+        halo_src_pos=jnp.asarray(part.halo_src_pos),
+        alpha=alpha, m=part.shard_size, H=part.halo_size,
+        E=E, U=U, n_rec=n_rec, record_every=record_every,
+        exchange=exchange)
+
+    delivered = int(np.asarray(stream.deliver_ij).sum()
+                    + np.asarray(stream.deliver_ji).sum())
+    dropped = 2 * total_rounds * batch - delivered
+    active_hist = np.asarray(stream.active_frac).reshape(
+        n_rec, record_every)[:, -1]
+    return ShardedSimTrace(
+        theta_hist=part.unshard_rows(np.asarray(hist)),
+        active_hist=active_hist, delivered=delivered, dropped=dropped,
+        rounds=total_rounds, events=total_rounds * batch,
+        n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
+        local_batch=U, overflow=int(np.asarray(overflow).sum()))

@@ -33,11 +33,11 @@ wake-ups with per-agent communication bounded by neighborhood size.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,3 +141,59 @@ def churn_step(key, cond: NetworkConditions, active) -> jnp.ndarray:
         return active
     toggle = jax.random.bernoulli(key, cond.churn_rate, active.shape)
     return jnp.where(toggle, ~active, active)
+
+
+class EventStream(NamedTuple):
+    """A full scenario's wake-up events, materialized up front.
+
+    The fault process (wake-ups, drops, staleness, churn) never reads model
+    state, so it can be drawn once on one device and replayed by every
+    shard of the partitioned engine — each shard then does zero O(n)
+    sampling work per round.  All arrays are (rounds, B) except
+    ``active_frac`` (rounds,), the live-agent fraction after each round's
+    churn.  Field semantics match :class:`EventBatch`.
+    """
+
+    i: jnp.ndarray
+    s: jnp.ndarray
+    j: jnp.ndarray
+    r: jnp.ndarray
+    deliver_ij: jnp.ndarray
+    deliver_ji: jnp.ndarray
+    stale_ij: jnp.ndarray
+    stale_ji: jnp.ndarray
+    active_frac: jnp.ndarray
+
+
+@partial(jax.jit, static_argnames=("conditions", "batch", "rounds"))
+def _draw_stream(tabs, part_half, rates, keys, *,
+                 conditions: NetworkConditions, batch: int, rounds: int):
+    n = tabs.deg_count.shape[0]
+
+    def step(active, inp):
+        t, key = inp
+        k_ev, k_churn = jax.random.split(key)
+        ev = draw_events(k_ev, conditions, tabs, part_half, active, rates,
+                         t, batch)
+        active = churn_step(k_churn, conditions, active)
+        frac = jnp.mean(active.astype(jnp.float32))
+        return active, (ev, frac)
+
+    ts = jnp.arange(rounds, dtype=jnp.int32)
+    _, (evs, fracs) = jax.lax.scan(step, jnp.ones((n,), bool), (ts, keys))
+    return EventStream(*evs, fracs)
+
+
+def precompute_event_stream(tabs, part_half, conditions: NetworkConditions,
+                            batch: int, seed: int, rounds: int) -> EventStream:
+    """Draw the whole scenario's events with ``run_mp_scenario``'s exact key
+    schedule (PRNGKey(seed) -> straggler split -> one key per round), so a
+    replayed stream reproduces the inline engine's trajectory bit-for-bit.
+    """
+    key = jax.random.PRNGKey(seed)
+    key, k_strag = jax.random.split(key)
+    n = tabs.deg_count.shape[0]
+    rates = straggler_rates(k_strag, conditions, n)
+    keys = jax.random.split(key, rounds)
+    return _draw_stream(tabs, part_half, rates, keys, conditions=conditions,
+                        batch=batch, rounds=rounds)

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -3,11 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import (Graph, gaussian_kernel_graph, pad_datasets,
+from repro.core import (gaussian_kernel_graph, pad_datasets,
                         cl_objective, direct_minimize, async_admm, sync_admm,
-                        init_state, solitary_mean, solitary_gd, LOSSES,
+                        solitary_mean, solitary_gd, LOSSES,
                         quadratic_loss)
 
 jax.config.update("jax_enable_x64", False)

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Graph, ring_graph, random_geometric_graph,
-                        gaussian_kernel_graph, closed_form, synchronous)
+from repro.core import (ring_graph, random_geometric_graph,
+                        closed_form, synchronous)
 from repro.coupling import (CouplingConfig, make_state, make_coupling,
                             dense_mix_tree, consensus_mean_tree,
                             laplacian_pull_tree)

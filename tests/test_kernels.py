@@ -165,7 +165,7 @@ def test_admm_update_matches_ref(E, p, dtype):
 
 def test_admm_update_matches_core_algorithm():
     """Kernel == the reference decentralized ADMM edge update (step 2-3)."""
-    from repro.core import gaussian_kernel_graph, pad_datasets, sync_admm
+    from repro.core import gaussian_kernel_graph
     from repro.core.collaborative import init_state, _all_zl_update, ADMMState
     rng = np.random.default_rng(3)
     n, p = 6, 4

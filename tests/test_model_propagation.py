@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Graph, gaussian_kernel_graph, two_moons, ring_graph,
+from repro.core import (gaussian_kernel_graph, two_moons,
                         closed_form, synchronous, async_gossip, mp_objective,
                         label_propagation)
 

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get_config, all_archs
+from repro.configs import ARCHS, get_config
 from repro.models import Model
 from repro.launch.shapes import SHAPES, plan_decode
 

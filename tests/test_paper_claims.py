@@ -2,7 +2,6 @@
 (fast versions of the benchmark suites; full curves in benchmarks/)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (closed_form, solitary_mean, solitary_gd,
                         confidences_from_counts, consensus_model, sync_admm)

@@ -1,12 +1,11 @@
 """Sparse event-driven simulator: sparse<->dense equivalence, topology
 generators, fault scenarios, and the edge-coloring matching property."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Graph, async_admm, async_gossip, gaussian_kernel_graph,
+from repro.core import (async_admm, async_gossip, gaussian_kernel_graph,
                         pad_datasets, random_geometric_graph, ring_graph,
                         solitary_mean, synchronous)
 from repro.kernels import ops, ref

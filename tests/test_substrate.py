@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, data pipeline, trainer, checkpoint, serving."""
 
-import os
 import tempfile
 
 import jax
