@@ -139,7 +139,10 @@ def bench_admm_primal(smoke: bool, interpret: bool, repeats: int) -> dict:
     sx = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
     mu, rho = 0.05, 1.0
 
-    def batched(primal):
+    def batched(primal, name=""):
+        if name.endswith("_sharded"):
+            # sharded impls take the stacked batched form natively
+            return lambda *a: primal(*a, mu, rho)
         return jax.vmap(lambda w_, l_, a, b_, c_, d_, D_, m_, s_:
                         primal(w_, l_, a, b_, c_, d_, D_, m_, s_, mu, rho))
 
@@ -150,7 +153,7 @@ def bench_admm_primal(smoke: bool, interpret: bool, repeats: int) -> dict:
         if skip:
             impls[name] = {"skipped": skip}
             continue
-        primal = batched(resolve("admm_primal", backend))
+        primal = batched(resolve("admm_primal", backend), name)
 
         def body(carry, _, primal=primal):
             zo_, zn_ = carry
@@ -168,6 +171,41 @@ def bench_admm_primal(smoke: bool, interpret: bool, repeats: int) -> dict:
             "loop_iters": loops,
         }
     return {"shape": {"n": n, "k": k, "p": p}, "impls": impls}
+
+
+def bench_admm_edge(smoke: bool, interpret: bool, repeats: int) -> dict:
+    # smoke shape sized so the timed loop is comparable to the other ops'
+    # (sub-100us loops are pure dispatch noise and destabilize the gate)
+    E, p = (512, 64) if smoke else (4096, 256)
+    loops = 5 if smoke else 50
+    rng = np.random.default_rng(2)
+    args = tuple(jnp.asarray(rng.standard_normal((E, p)), jnp.float32)
+                 for _ in range(8))
+    rho = 1.3
+    want = resolve("admm_edge", ReproBackend.using(
+        admm_edge="reference"))(*args, rho=rho)
+    impls = {}
+    for name, backend, skip in _runnable_impls("admm_edge", interpret):
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        edge = resolve("admm_edge", backend)
+
+        def body(carry, _, edge=edge):
+            t_ii, l_own_i = carry
+            out = edge(t_ii, *args[1:4], l_own_i, *args[5:], rho=rho)
+            # feed z_i / the updated dual back for a real dependency chain
+            return (0.9 * t_ii + 0.1 * out[0], out[2]), None
+
+        loop = jax.jit(lambda c, body=body: jax.lax.scan(
+            body, c, None, length=loops)[0][0])
+        impls[name] = {
+            "maxerr": _maxerr(edge(*args, rho=rho), want),
+            "us_per_loop": _time_loop(lambda: loop((args[0], args[4])),
+                                      repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"E": E, "p": p}, "impls": impls}
 
 
 PARITY_FLOOR = 1e-5          # drift below this is float noise, never gated
@@ -239,6 +277,7 @@ def main(argv=None) -> int:
             "mix": bench_mix(args.smoke, interpret, repeats),
             "sparse_mix": bench_sparse_mix(args.smoke, interpret, repeats),
             "admm_primal": bench_admm_primal(args.smoke, interpret, repeats),
+            "admm_edge": bench_admm_edge(args.smoke, interpret, repeats),
         },
     }
 

@@ -49,8 +49,10 @@ import numpy as np  # noqa: E402
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from common import emit  # noqa: E402
 
+from repro.core.losses import pad_datasets, solitary_mean  # noqa: E402
 from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
-                            random_geometric_topology, run_mp_scenario,
+                            random_geometric_topology, run_cl_scenario,
+                            run_cl_scenario_sharded, run_mp_scenario,
                             run_mp_scenario_sharded)
 
 
@@ -58,52 +60,87 @@ def peak_rss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
+def _make_data(n: int, p: int, seed: int):
+    """Per-agent quadratic-loss samples (3 draws around a random mean)."""
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal((n, 3, p)).astype(np.float32)
+    return pad_datasets(list(x), [np.zeros(3)] * n)
+
+
+def _single_runner(algo: str, topo, p: int, seed: int):
+    """(run(cond, rounds, batch, record_every) -> trace) for one device."""
+    rng = np.random.default_rng(seed)
+    if algo == "admm":
+        data = _make_data(topo.n, p, seed)
+        sol = np.asarray(solitary_mean(data), np.float32)
+        return lambda cond, **kw: run_cl_scenario(topo, data, 0.1, 1.0,
+                                                  cond, theta_sol=sol, **kw)
+    theta_sol = rng.standard_normal((topo.n, p)).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, topo.n).astype(np.float32)
+    return lambda cond, **kw: run_mp_scenario(topo, theta_sol, c, 0.9,
+                                              cond, **kw)
+
+
+def _sharded_runner(algo: str, topo, p: int, seed: int):
+    rng = np.random.default_rng(seed)
+    if algo == "admm":
+        data = _make_data(topo.n, p, seed)
+        sol = np.asarray(solitary_mean(data), np.float32)
+        return lambda cond, **kw: run_cl_scenario_sharded(
+            topo, data, 0.1, 1.0, cond, theta_sol=sol, **kw)
+    theta_sol = rng.standard_normal((topo.n, p)).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, topo.n).astype(np.float32)
+    return lambda cond, **kw: run_mp_scenario_sharded(topo, theta_sol, c,
+                                                      0.9, cond, **kw)
+
+
 def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
-              batch: int, seed: int = 0) -> dict:
+              batch: int, seed: int = 0, algo: str = "mp") -> dict:
     scenario = get_scenario(scenario_name)
     t0 = time.perf_counter()
     topo = random_geometric_topology(n, k=k, seed=seed)
     build_s = time.perf_counter() - t0
 
-    rng = np.random.default_rng(seed)
-    theta_sol = rng.standard_normal((n, p)).astype(np.float32)
-    c = rng.uniform(0.05, 1.0, n).astype(np.float32)
     cond = scenario.make_conditions(rounds)
+    run = _single_runner(algo, topo, p, seed)
 
     # warmup with IDENTICAL static args + shapes: the engine's runner is a
     # module-level jit, so this compiles the exact program the timed run
     # reuses (steady-state events/s, no trace/compile in the measurement)
     record_every = max(1, rounds // 10)
-    run_mp_scenario(topo, theta_sol, c, 0.9, cond, rounds=rounds,
-                    batch=batch, seed=seed, record_every=record_every)
+    kw = dict(rounds=rounds, batch=batch, seed=seed,
+              record_every=record_every)
+    run(cond, **kw)
     t1 = time.perf_counter()
-    tr = run_mp_scenario(topo, theta_sol, c, 0.9, cond, rounds=rounds,
-                         batch=batch, seed=seed, record_every=record_every)
+    tr = run(cond, **kw)
     dt = time.perf_counter() - t1
 
+    # the ADMM state carries 5 extra (n, k, p) arrays beyond MP's one
+    state_mb = topo.state_bytes(p) / 2**20
+    if algo == "admm":
+        state_mb += 4 * 4 * n * topo.k_max * p / 2**20
     return {
         "n": n, "k_max": topo.k_max, "p": p, "scenario": scenario_name,
         "rounds": tr.rounds, "batch": batch, "events": tr.events,
         "time_s": dt, "build_s": build_s,
         "rounds_per_s": tr.rounds / dt, "events_per_s": tr.events / dt,
         "delivered": tr.delivered, "dropped": tr.dropped,
-        "sparse_state_mb": topo.state_bytes(p) / 2**20,
-        "dense_state_mb": topo.dense_state_bytes(p) / 2**20,
+        "sparse_state_mb": state_mb,
+        "dense_state_mb": topo.dense_state_bytes(p) / 2**20
+        * (5 if algo == "admm" else 1),
         "peak_rss_mb": peak_rss_mb(),
     }
 
 
 def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
                       rounds: int, batch: int, shards: int,
-                      seed: int = 0) -> dict:
+                      seed: int = 0, algo: str = "mp") -> dict:
     """Timed sharded run (partition + event-stream build reported apart)."""
     scenario = get_scenario(scenario_name)
     topo = random_geometric_topology(n, k=k, seed=seed)
-    rng = np.random.default_rng(seed)
-    theta_sol = rng.standard_normal((n, p)).astype(np.float32)
-    c = rng.uniform(0.05, 1.0, n).astype(np.float32)
     cond = scenario.make_conditions(rounds)
     record_every = max(1, rounds // 10)
+    run = _sharded_runner(algo, topo, p, seed)
 
     t0 = time.perf_counter()
     assignment = greedy_partition(topo, shards)
@@ -112,9 +149,9 @@ def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
     kw = dict(rounds=rounds, batch=batch, seed=seed,
               record_every=record_every, n_shards=shards,
               assignment=assignment)
-    run_mp_scenario_sharded(topo, theta_sol, c, 0.9, cond, **kw)  # warmup
+    run(cond, **kw)                                             # warmup
     t1 = time.perf_counter()
-    tr = run_mp_scenario_sharded(topo, theta_sol, c, 0.9, cond, **kw)
+    tr = run(cond, **kw)
     dt = time.perf_counter() - t1
     return {
         "time_s": dt, "part_s": part_s, "events": tr.events,
@@ -134,6 +171,9 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="wake-ups per round (default n // 10)")
     ap.add_argument("--scenarios", default="clean,lossy-10")
+    ap.add_argument("--algo", default="mp", choices=("mp", "admm"),
+                    help="engine: MP gossip (run_mp_scenario) or CL-ADMM "
+                         "(run_cl_scenario)")
     ap.add_argument("--sharded", action="store_true",
                     help="also run the partitioned engine and report the "
                          "event-throughput ratio over one device")
@@ -151,9 +191,10 @@ def main():
     for n in ns:
         batch = args.batch or max(1, n // 10)
         for name in names:
-            r = bench_one(n, args.k, args.p, name, args.rounds, batch)
+            r = bench_one(n, args.k, args.p, name, args.rounds, batch,
+                          algo=args.algo)
             worst_rss = max(worst_rss, r["peak_rss_mb"])
-            emit(f"network_sim/{name}/n{n}", r["time_s"] * 1e6,
+            emit(f"network_sim/{args.algo}/{name}/n{n}", r["time_s"] * 1e6,
                  f"events/s={r['events_per_s']:.0f} "
                  f"rounds/s={r['rounds_per_s']:.1f} "
                  f"delivered={r['delivered']} dropped={r['dropped']} "
@@ -162,13 +203,14 @@ def main():
                  f"peak_rss_mb={r['peak_rss_mb']:.0f}")
             if args.sharded:
                 s = bench_one_sharded(n, args.k, args.p, name, args.rounds,
-                                      batch, args.shards)
+                                      batch, args.shards, algo=args.algo)
                 ratio = s["events_per_s"] / r["events_per_s"]
                 worst_ratio = ratio if worst_ratio is None \
                     else min(worst_ratio, ratio)
                 worst_rss = max(worst_rss, s["peak_rss_mb"])
                 used_shards = s["n_shards"]
-                emit(f"network_sim/{name}/n{n}/sharded{s['n_shards']}",
+                emit(f"network_sim/{args.algo}/{name}/n{n}"
+                     f"/sharded{s['n_shards']}",
                      s["time_s"] * 1e6,
                      f"events/s={s['events_per_s']:.0f} "
                      f"speedup_vs_1dev={ratio:.2f}x "

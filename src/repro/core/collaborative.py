@@ -39,7 +39,7 @@ from repro.kernels.dispatch import ReproBackend
 from .graph import Graph
 from .losses import AgentData, LOSSES
 from .sparse import (padded_neighbor_tables, quadratic_primal_core,
-                     sample_event, to_device)
+                     record_chunks, sample_event, to_device)
 
 
 def cl_objective(theta, W, mu, loss_fn, data: AgentData):
@@ -260,14 +260,19 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
 
     def tick(st: ADMMState, key):
         i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
-        j = tabs.nbr_idx[i, s]
-        T = primal(st, i)
+        # degree-0 waker -> no-op: out-of-bounds targets drop every scatter
+        valid = tabs.deg_count[i] > 0
+        ti = jnp.where(valid, i, n)
+        tj = jnp.where(valid, tabs.nbr_idx[i, s], n)
+        T = primal(st, ti)
         st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
-        T = primal(st, j)
+        T = primal(st, tj)
         st = ADMMState(T, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
-        return _edge_zl_update(st, i, j, rho)
+        return _edge_zl_update(st, ti, tj, rho)
 
-    n_rec = max(1, steps // record_every)
+    # shared recording policy (core.sparse.record_chunks): horizon floored
+    # to a whole number of record chunks — never zero, never an overrun
+    record_every, n_rec = record_chunks(steps, record_every)
 
     @jax.jit
     def run(state, key):

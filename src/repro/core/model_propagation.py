@@ -35,8 +35,8 @@ import numpy as np
 from repro.kernels.dispatch import ReproBackend, resolve
 
 from .graph import Graph
-from .sparse import (neighbor_aggregate, padded_neighbor_tables, sample_event,
-                     to_device)
+from .sparse import (neighbor_aggregate, padded_neighbor_tables,
+                     record_chunks, sample_event, to_device)
 
 
 def mp_mix_operator(P_rows, c, alpha):
@@ -131,23 +131,28 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
     n, _, p = T0.shape
     abar = 1.0 - alpha
 
-    def local_update(T, l):
+    def local_update(T, l, tgt):
         """Update step Eq. (6) for agent l using its own knowledge row."""
         nbrs = T[l][nbr_idx[l]]                   # (k_max, p) gathered slots
         agg = neighbor_aggregate(nbr_p[l], nbrs, backend)  # (p,)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
-        return T.at[l, l].set(new)
+        return T.at[tgt, l].set(new, mode="drop")
 
     def step(carry, key):
         T = carry
         i, s = sample_event(key, n, slot_cdf, deg_count)
+        # degree-0 waker -> no-op (same masking as the sparse engines):
+        # out-of-bounds scatter targets are dropped
+        valid = deg_count[i] > 0
         j = nbr_idx[i, s]
+        ti = jnp.where(valid, i, n)
+        tj = jnp.where(valid, j, n)
         # communication step: exchange current self-models
-        T = T.at[i, j].set(T[j, j])
-        T = T.at[j, i].set(T[i, i])
+        T = T.at[ti, j].set(T[j, j], mode="drop")
+        T = T.at[tj, i].set(T[i, i], mode="drop")
         # update step for both endpoints
-        T = local_update(T, i)
-        T = local_update(T, j)
+        T = local_update(T, i, ti)
+        T = local_update(T, j, tj)
         return T, T[jnp.arange(n), jnp.arange(n)] if record_every == 1 else None
 
     if record_every == 1:
@@ -155,7 +160,8 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
         T, hist = jax.lax.scan(step, T0, keys)
         return T, hist
 
-    # chunked recording: scan over outer records, inner fori over ticks
+    # chunked recording; callers normalize (steps, record_every) through
+    # core.sparse.record_chunks, so the division here is exact
     n_rec = steps // record_every
 
     def outer(T, key):
@@ -192,12 +198,13 @@ def async_gossip(graph: Graph, theta_sol, c, alpha: float, steps: int,
         T0 = jnp.asarray(theta0, jnp.float32)
 
     key = jax.random.PRNGKey(seed)
+    # shared recording policy (core.sparse.record_chunks): horizon floored
+    # to a whole number of record chunks, never silently zero steps
+    record_every, n_rec = record_chunks(steps, record_every)
     T, hist = _async_scan(tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf,
-                          tabs.deg_count, theta_sol, c, alpha, key, steps,
-                          record_every, T0, backend)
-    n_rec = hist.shape[0]
-    every = 1 if record_every == 1 else record_every
-    comms = 2 * every * (np.arange(n_rec) + 1)
+                          tabs.deg_count, theta_sol, c, alpha, key,
+                          n_rec * record_every, record_every, T0, backend)
+    comms = 2 * record_every * (np.arange(hist.shape[0]) + 1)
     return AsyncTrace(np.asarray(hist), comms, np.asarray(T))
 
 

@@ -59,7 +59,8 @@ class NeighborTables(NamedTuple):
 
 def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
                           weight_lists: Sequence[np.ndarray],
-                          deg_w: Optional[np.ndarray] = None) -> NeighborTables:
+                          deg_w: Optional[np.ndarray] = None,
+                          allow_isolated: bool = False) -> NeighborTables:
     """Build NeighborTables from per-agent sorted neighbor/weight lists.
 
     Never materializes an n x n matrix: O(n * k_max) memory throughout, so it
@@ -68,17 +69,24 @@ def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
 
     ``deg_w`` overrides the weighted degrees — Graph-derived tables pass the
     dense ``W.sum(axis=1)`` so D_ii matches the reference engines bitwise.
+
+    ``allow_isolated=True`` admits degree-0 agents (churned-out sensors,
+    stragglers that never joined): their rows carry deg_count 0, all-zero
+    weights and a flat slot cdf, and every event engine treats a wake-up of
+    such an agent as a no-op (see ``sample_event`` / ``scheduler.draw_events``).
     """
     n = len(nbr_lists)
     deg_count = np.array([len(a) for a in nbr_lists], np.int32)
-    if (deg_count == 0).any():
+    if (deg_count == 0).any() and not allow_isolated:
         raise ValueError("every agent needs at least one neighbor")
-    k_max = int(deg_count.max())
+    k_max = max(1, int(deg_count.max()))
 
     nbr_idx = np.zeros((n, k_max), np.int32)
     nbr_w = np.zeros((n, k_max), np.float32)
     for i, (nb, wt) in enumerate(zip(nbr_lists, weight_lists)):
         d = len(nb)
+        if d == 0:
+            continue                     # isolated: all-zero row
         nbr_idx[i, :d] = nb
         nbr_idx[i, d:] = nb[-1]          # pads duplicate the last neighbor
         nbr_w[i, :d] = wt
@@ -89,11 +97,14 @@ def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
     deg_w = np.asarray(deg_w, np.float64)
     live = np.arange(k_max)[None, :] < deg_count[:, None]
     nbr_p = np.where(live, nbr_w.astype(np.float64)
-                     / deg_w[:, None], 0.0).astype(np.float32)
+                     / np.where(deg_w > 0, deg_w, 1.0)[:, None],
+                     0.0).astype(np.float32)
 
     # uniform neighbor-selection cdf over slots (pi_i, paper §3.2); float32
     # cumsum so both engines compare u against bit-identical thresholds
-    probs = np.where(live, (1.0 / deg_count[:, None]).astype(np.float32),
+    probs = np.where(live,
+                     (1.0 / np.maximum(deg_count, 1)[:, None])
+                     .astype(np.float32),
                      np.float32(0.0)).astype(np.float32)
     slot_cdf = np.cumsum(probs, axis=1, dtype=np.float32)
 
@@ -153,13 +164,42 @@ def sample_event(key, n: int, slot_cdf, deg_count):
 
     i is uniform over agents; the slot is drawn from pi_i by inverting the
     float32 slot cdf (clipped to the live range so pads are never selected).
+
+    Degree-0 agents (``allow_isolated`` tables) have an all-zero cdf: the
+    raw clamp ``min(s, deg - 1)`` would yield -1, which wraps via negative
+    indexing into the last pad slot and fabricates a phantom edge.  The slot
+    is therefore clamped to [0, max(deg - 1, 0)] and every consumer must
+    treat an event with ``deg_count[i] == 0`` as a no-op (the engines
+    redirect their scatters out of bounds, where they are dropped).
     """
     ki, kj = jax.random.split(key)
     i = jax.random.randint(ki, (), 0, n)
     u = jax.random.uniform(kj)
     s = jnp.searchsorted(slot_cdf[i], u, side="right").astype(jnp.int32)
-    s = jnp.minimum(s, deg_count[i] - 1)
+    s = jnp.maximum(jnp.minimum(s, deg_count[i] - 1), 0)
     return i, s
+
+
+def record_chunks(steps: int, record_every: int) -> tuple:
+    """The repo-wide recording policy for chunked scan engines.
+
+    Every engine that records one snapshot per ``record_every`` steps uses
+
+        record_every, n_rec = record_chunks(steps, record_every)
+
+    and runs exactly ``n_rec * record_every`` steps: ``record_every`` is
+    clamped to ``[1, steps]`` and the horizon is floored to a whole number
+    of chunks.  This guarantees the run is never silently empty
+    (``steps < record_every`` previously yielded ``n_rec = 0`` — zero steps
+    and an empty history) and never overruns the requested horizon
+    (``max(1, steps // record_every)`` previously ran a full oversized
+    chunk).  Non-divisible ``steps`` are floored; traces report the actual
+    count.  ``steps < 1`` raises.
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    record_every = max(1, min(int(record_every), int(steps)))
+    return record_every, steps // record_every
 
 
 def neighbor_aggregate(w_slots, theta_slots,
@@ -216,3 +256,59 @@ def quadratic_primal_core(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
     """
     return resolve("admm_primal", backend)(
         w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s, D_l, m_l, sx, mu, rho)
+
+
+def batched_admm_primal(w_rows, live_rows, z_own_rows, z_nbr_rows,
+                        l_own_rows, l_nbr_rows, D_rows, m_rows, sx_rows,
+                        mu, rho, backend: Optional[ReproBackend] = None):
+    """Quadratic CL-ADMM primal (paper §4.2 step 1) for a batch of agents'
+    slot rows: all leading axes are the batch B; returns (theta (B, p),
+    theta_js (B, k, p)).
+
+    This is the per-shard ADMM step the scenario engines share: the
+    single-device ``run_cl_scenario`` applies it to rows of its global
+    (n, k, p) state and the partitioned engine to rows of each shard's
+    local block, so the trajectories agree bit-for-bit whichever layout ran
+    them (same property as ``batched_model_update`` for MP).
+
+    Dispatched through "admm_primal": row-wise implementations are vmapped;
+    ``*_sharded`` implementations consume the stacked rows directly.
+    """
+    if backend is None:
+        from repro.kernels.dispatch import _env_default
+        backend = ReproBackend(default=_env_default())
+    fn = resolve("admm_primal", backend)
+    if backend.impl_for("admm_primal").endswith("_sharded"):
+        return fn(w_rows, live_rows, z_own_rows, z_nbr_rows, l_own_rows,
+                  l_nbr_rows, D_rows, m_rows, sx_rows, mu, rho)
+    return jax.vmap(lambda w, lv, zo, zn, lo, ln, D, m, sx: fn(
+        w, lv, zo, zn, lo, ln, D, m, sx, mu, rho))(
+        w_rows, live_rows, z_own_rows, z_nbr_rows, l_own_rows, l_nbr_rows,
+        D_rows, m_rows, sx_rows)
+
+
+def admm_edge_halfstep(theta_own, k_own, l_own, l_nbr,
+                       theta_pay, k_pay, l_own_pay, l_nbr_pay, rho):
+    """One endpoint's half of the CL-ADMM edge update (paper §4.2 steps 2-3).
+
+    The waking edge's endpoints exchange payloads (the partner's post-primal
+    self model, its copy-of-me slot, and its two dual slots) and each side
+    updates its OWN (Z_own, Z_nbr, L_own, L_nbr) slots.  All arrays are
+    (..., p) slices for a batch of event sides:
+
+      theta_own — this side's post-primal self model
+      k_own     — this side's copy of the partner (its K slot)
+      l_own / l_nbr — this side's dual slots for the edge
+      *_pay     — the same four quantities from the partner's payload
+
+    Returns (z_own, z_nbr, l_own_new, l_nbr_new).  With a fresh (current)
+    payload the two sides compute bit-identical Z values and the step is
+    exactly ``simulate.engines._sparse_edge_zl``; under staleness or
+    one-sided drops the mirrored copies may diverge — the asynchronous
+    regime DJAM (arXiv:1803.09737) analyzes.
+    """
+    z_own = 0.5 * ((l_own + l_nbr_pay) / rho + theta_own + k_pay)
+    z_nbr = 0.5 * ((l_own_pay + l_nbr) / rho + theta_pay + k_own)
+    l_own_new = l_own + rho * (theta_own - z_own)
+    l_nbr_new = l_nbr + rho * (k_own - z_nbr)
+    return z_own, z_nbr, l_own_new, l_nbr_new

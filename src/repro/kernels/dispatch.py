@@ -313,6 +313,17 @@ def _sparse_mix_pallas_sharded(interpret):
 register("admm_primal", "reference")(ref.quadratic_primal)
 
 
+def _admm_primal_batched_call(fn, w, live, z_own_s, z_nbr_s, l_own_s,
+                              l_nbr_s, D_l, m_l, sx, mu, rho):
+    """Accept the canonical rowwise signature on a batched impl ``fn`` by
+    lifting single-row inputs to a batch of one."""
+    one = [a[None] for a in (w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s)]
+    D_b = jnp.asarray(D_l, jnp.float32)[None]
+    m_b = jnp.asarray(m_l, jnp.float32)[None]
+    theta, theta_js = fn(*one, D_b, m_b, sx[None], mu, rho)
+    return theta[0], theta_js[0]
+
+
 @register("admm_primal", "xla")
 def _admm_primal_xla(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
                      D_l, m_l, sx, mu, rho):
@@ -336,6 +347,25 @@ def _admm_primal_xla(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
     return theta_l, theta_js
 
 
+@register("admm_primal", "xla_sharded")
+def _admm_primal_xla_sharded(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
+                             D_l, m_l, sx, mu, rho):
+    """Agent-row-sharded primal over the sim mesh (per-shard vmap of the
+    fused XLA row solve — the solve is row-local, so no collective).
+
+    Accepts the canonical rowwise signature AND the stacked batched form
+    ((n, k), ... (n,), (n, p)); ``core.sparse.batched_admm_primal`` feeds
+    sharded impls the batched form directly instead of vmapping them.
+    """
+    run = functools.partial(_sh.sharded_admm_primal, inner=_admm_primal_xla)
+    if w.ndim == 1:
+        return _admm_primal_batched_call(
+            run, w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
+            D_l, m_l, sx, mu, rho)
+    return run(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s, D_l, m_l, sx,
+               mu, rho)
+
+
 # ---------------------------------------------------------------------------
 # admm_edge — fused CL-ADMM Z + dual update for a batch of edges
 # (paper §4.2 steps 2-3): 8 inputs (E, p), rho kw-only -> 6 outputs (E, p)
@@ -350,6 +380,16 @@ def _admm_edge_xla(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
                    l_own_j, l_nbr_i_of_j, *, rho: float):
     return ref.admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i,
                                 l_nbr_j_of_i, l_own_j, l_nbr_i_of_j, rho)
+
+
+@register("admm_edge", "xla_sharded")
+def _admm_edge_xla_sharded(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
+                           l_own_j, l_nbr_i_of_j, *, rho: float):
+    """Edge-axis-sharded Z/dual update over the sim mesh; per-shard math is
+    the reference expression, so parity with it is exact."""
+    return _sh.sharded_admm_edge(t_ii, t_ji, t_jj, t_ij, l_own_i,
+                                 l_nbr_j_of_i, l_own_j, l_nbr_i_of_j,
+                                 rho=rho, inner=ref.admm_edge_update)
 
 
 @register("admm_edge", "pallas", pallas=True)

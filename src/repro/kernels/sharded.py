@@ -61,6 +61,71 @@ def sharded_sparse_mix(table, idx, w, b, sol, *, inner: Callable, mesh=None):
     return run(*padded)[:n]
 
 
+def sharded_admm_primal(
+    w, live, z_own, z_nbr, l_own, l_nbr, D, m, sx, mu, rho, *, inner, mesh=None
+):
+    """Batched quadratic CL-ADMM primal with the agent axis sharded.
+
+    w, live: (n, k); z/l rows: (n, k, p); D, m: (n,); sx: (n, p) ->
+    (theta (n, p), theta_js (n, k, p)).  The primal is embarrassingly
+    row-parallel (each agent's solve reads only its own slot row), so no
+    collective is needed: every shard vmaps ``inner`` — any single-row
+    admm_primal impl — over its row block.  Pad rows carry D == 1 and an
+    all-False live mask so their (discarded) solves stay finite.
+    """
+    mesh = make_sim_mesh() if mesh is None else mesh
+    n = w.shape[0]
+    rows = mesh_shards(mesh) * math.ceil(n / mesh_shards(mesh))
+
+    def row_solve(w_, lv, zo, zn, lo, ln, D_, m_, sx_):
+        return inner(w_, lv, zo, zn, lo, ln, D_, m_, sx_, mu, rho)
+
+    spec = P(AGENT_AXIS)
+    run = shard_map_1d(
+        jax.vmap(row_solve), mesh, in_specs=(spec,) * 9, out_specs=(spec, spec)
+    )
+    D_pad = jnp.pad(D, (0, rows - n), constant_values=1.0)
+    padded = [_pad_rows(a, rows) for a in (w, live, z_own, z_nbr, l_own, l_nbr)]
+    theta, theta_js = run(*padded, D_pad, _pad_rows(m, rows), _pad_rows(sx, rows))
+    return theta[:n], theta_js[:n]
+
+
+def sharded_admm_edge(
+    t_ii,
+    t_ji,
+    t_jj,
+    t_ij,
+    l_own_i,
+    l_nbr_j_of_i,
+    l_own_j,
+    l_nbr_i_of_j,
+    *,
+    rho,
+    inner,
+    mesh=None,
+):
+    """Fused CL-ADMM Z + dual edge update with the edge axis sharded.
+
+    Eight (E, p) inputs -> six (E, p) outputs, signature-identical to the
+    single-device admm_edge impls; each shard runs ``inner`` on its edge
+    block (the update is independent per edge, so no collective).
+    """
+    mesh = make_sim_mesh() if mesh is None else mesh
+    n_edges = t_ii.shape[0]
+    rows = mesh_shards(mesh) * math.ceil(n_edges / mesh_shards(mesh))
+
+    def block(*args):
+        return inner(*args, rho=rho)
+
+    spec = P(AGENT_AXIS)
+    run = shard_map_1d(block, mesh, in_specs=(spec,) * 8, out_specs=(spec,) * 6)
+    padded = [
+        _pad_rows(a, rows)
+        for a in (t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i, l_own_j, l_nbr_i_of_j)
+    ]
+    return tuple(out[:n_edges] for out in run(*padded))
+
+
 def sharded_graph_mix(theta, theta_sol, A, b, *, inner: Callable, mesh=None):
     """Dense Eq. (5) mix with the agent (row) axis sharded over the sim mesh.
 

@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -66,6 +67,46 @@ def agent_sharding(mesh, *trailing_dims: Optional[str]) -> NamedSharding:
 
 def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def halo_exchange_fn(
+    bnd_pos, halo_src_shard, halo_src_pos, n_halo, n_shards, exchange="all_gather"
+):
+    """Build the per-shard halo exchange used by the partitioned simulators.
+
+    Returns ``run(x)`` mapping this shard's local rows ``x (m, ...)`` to the
+    extended buffer ``[local | halo (H, ...) | zero-row]`` of shape
+    ``(m + H + 1, ...)``: each shard publishes its boundary rows
+    (``x[bnd_pos]``) and pulls its halo from the gathered boundary buffers —
+    ``all_gather`` by default, or a P-1-step ``ppermute`` ring
+    (``exchange="ring"``).  Must be called inside a ``shard_map`` over
+    ``AGENT_AXIS``.  Works for any trailing shape, so the MP engine
+    exchanges (m, p) model rows and the CL-ADMM engine (m, 1 + 3k, p)
+    stacked model/dual payloads through the same code path.
+    """
+
+    def run(x):
+        zero = jnp.zeros((1,) + x.shape[1:], x.dtype)
+        if n_halo == 0:
+            return jnp.concatenate([x, zero])
+        send = x[bnd_pos]  # (B, ...)
+        if exchange == "ring":
+            ring = [(s, (s + 1) % n_shards) for s in range(n_shards)]
+            q_id = jax.lax.axis_index(AGENT_AXIS)
+            halo = jnp.zeros((n_halo,) + x.shape[1:], x.dtype)
+            buf = send
+            bcast = (n_halo,) + (1,) * (x.ndim - 1)
+            for step in range(1, n_shards):
+                buf = jax.lax.ppermute(buf, AGENT_AXIS, ring)
+                src = (q_id - step) % n_shards
+                mask = (halo_src_shard == src).reshape(bcast)
+                halo = jnp.where(mask, buf[halo_src_pos], halo)
+        else:
+            allb = jax.lax.all_gather(send, AGENT_AXIS)  # (P, B, ...)
+            halo = allb[halo_src_shard, halo_src_pos]
+        return jnp.concatenate([x, halo, zero])
+
+    return run
 
 
 def shard_map_1d(f, mesh, in_specs, out_specs):

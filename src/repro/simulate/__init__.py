@@ -10,13 +10,16 @@ from .topology import (SparseTopology, ring_topology,
                        random_geometric_topology, cluster_topology)
 from .scheduler import (NetworkConditions, EventBatch, EventStream,
                         draw_wakeups, draw_slots, draw_events,
-                        straggler_rates, churn_step, precompute_event_stream)
-from .engines import (SparseTrace, SimTrace, SparseADMMState, SparseCLTrace,
-                      sparse_async_gossip, sparse_sync_mp, run_mp_scenario,
-                      sparse_async_admm, init_sparse_admm)
+                        straggler_rates, churn_step, precompute_event_stream,
+                        stream_totals)
+from .engines import (SparseTrace, SimTrace, CLSimTrace, SparseADMMState,
+                      SparseCLTrace, sparse_async_gossip, sparse_sync_mp,
+                      run_mp_scenario, run_cl_scenario, sparse_async_admm,
+                      init_sparse_admm)
 from .partition import (GraphPartition, ShardedSimTrace, greedy_partition,
                         block_partition, edge_cut, run_mp_scenario_sharded,
-                        default_local_batch, default_local_events)
+                        run_cl_scenario_sharded, default_local_batch,
+                        default_local_events)
 from .scenarios import Scenario, SCENARIOS, get_scenario, list_scenarios
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -32,11 +32,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import AgentData
-from repro.core.sparse import (batched_model_update, neighbor_aggregate,
-                               quadratic_primal_core, sample_event)
+from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
+                               batched_model_update, neighbor_aggregate,
+                               quadratic_primal_core, record_chunks,
+                               sample_event)
 from repro.kernels.dispatch import ReproBackend, resolve
 from . import scheduler as sched
-from .scheduler import NetworkConditions
+from .scheduler import (EventStream, NetworkConditions,
+                        precompute_event_stream, stream_totals)
 from .topology import SparseTopology
 
 
@@ -69,22 +72,27 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
     n, p = theta0.shape
     abar = 1.0 - alpha
 
-    def local_update(theta, K, l):
+    def local_update(theta, K, l, tgt):
         agg = neighbor_aggregate(nbr_p[l], K[l], backend)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
-        return theta.at[l].set(new)
+        return theta.at[tgt].set(new, mode="drop")
 
     def step(carry, key):
         theta, K = carry
         i, s = sample_event(key, n, slot_cdf, deg_count)
+        # a degree-0 waker is a no-op: redirect every scatter out of bounds
+        # (dropped) instead of letting the clamped slot fabricate an edge
+        valid = deg_count[i] > 0
         j = nbr_idx[i, s]
         r = rev_slot[i, s]
+        ti = jnp.where(valid, i, n)
+        tj = jnp.where(valid, j, n)
         # communication step: exchange current self-models
-        K = K.at[i, s].set(theta[j])
-        K = K.at[j, r].set(theta[i])
+        K = K.at[ti, s].set(theta[j], mode="drop")
+        K = K.at[tj, r].set(theta[i], mode="drop")
         # update step for both endpoints
-        theta = local_update(theta, K, i)
-        theta = local_update(theta, K, j)
+        theta = local_update(theta, K, i, ti)
+        theta = local_update(theta, K, j, tj)
         return (theta, K), theta if record_every == 1 else None
 
     if record_every == 1:
@@ -92,6 +100,8 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
         (theta, K), hist = jax.lax.scan(step, (theta0, K0), keys)
         return theta, K, hist
 
+    # chunked recording; callers normalize (steps, record_every) through
+    # core.sparse.record_chunks, so the division here is exact
     n_rec = steps // record_every
 
     def outer(carry, key):
@@ -112,7 +122,9 @@ def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
 
     Bit-for-bit equal to ``core.model_propagation.async_gossip`` for the same
     (graph, seed) — same RNG stream, same shared slot arithmetic — while
-    scaling to tens of thousands of agents.
+    scaling to tens of thousands of agents.  The horizon follows the shared
+    recording policy (``core.sparse.record_chunks``): floored to a whole
+    number of record chunks, never zero.
     """
     tabs = topo.device_tables()
     n = topo.n
@@ -120,13 +132,12 @@ def sparse_async_gossip(topo: SparseTopology, theta_sol, c, alpha: float,
     c = jnp.asarray(c, jnp.float32)
     theta0, K0 = _mp_warm_start(tabs, theta_sol)
     key = jax.random.PRNGKey(seed)
+    record_every, n_rec = record_chunks(steps, record_every)
     theta, K, hist = _sparse_async_scan(
         tabs.nbr_idx, tabs.nbr_p, tabs.slot_cdf, tabs.deg_count,
-        tabs.rev_slot, theta_sol, c, alpha, key, steps, record_every,
-        theta0, K0, backend)
-    n_rec = hist.shape[0]
-    every = 1 if record_every == 1 else record_every
-    comms = 2 * every * (np.arange(n_rec) + 1)
+        tabs.rev_slot, theta_sol, c, alpha, key, n_rec * record_every,
+        record_every, theta0, K0, backend)
+    comms = 2 * record_every * (np.arange(hist.shape[0]) + 1)
     return SparseTrace(np.asarray(hist), comms, np.asarray(theta),
                        np.asarray(K))
 
@@ -184,6 +195,9 @@ class SimTrace:
     active_hist:  (n_records,) fraction of live agents
     delivered:    total messages delivered;  dropped: total lost
     rounds, events: totals (events = wake-ups = 2 attempted messages each)
+    invalid:      never-valid wake-ups (all-dead draws, degree-0 wakers) —
+                  excluded from delivered AND dropped, so the accounting
+                  invariant is  delivered + dropped == 2 * (events - invalid)
     """
 
     theta_hist: np.ndarray
@@ -192,6 +206,7 @@ class SimTrace:
     dropped: int
     rounds: int
     events: int
+    invalid: int = 0
 
 
 @partial(jax.jit, static_argnames=("conditions", "alpha", "batch",
@@ -205,7 +220,7 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
     n = theta_sol.shape[0]
 
     def round_fn(carry, inp):
-        theta, K, theta_prev, active, delivered, dropped = carry
+        theta, K, theta_prev, active, delivered, dropped, invalid = carry
         theta_in = theta                  # next round's "one-round-old" model
         t, key = inp
         k_ev, k_churn = jax.random.split(key)
@@ -232,9 +247,11 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
         theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
 
         delivered = delivered + jnp.sum(ev.deliver_ij) + jnp.sum(ev.deliver_ji)
-        dropped = dropped + jnp.sum(~ev.deliver_ij) + jnp.sum(~ev.deliver_ji)
+        dropped = dropped + jnp.sum(ev.valid & ~ev.deliver_ij) \
+            + jnp.sum(ev.valid & ~ev.deliver_ji)
+        invalid = invalid + jnp.sum(~ev.valid)
         active = sched.churn_step(k_churn, conditions, active)
-        return (theta, K, theta_in, active, delivered, dropped), None
+        return (theta, K, theta_in, active, delivered, dropped, invalid), None
 
     def outer(carry, inp):
         ks, t0 = inp
@@ -271,23 +288,22 @@ def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
     rates = sched.straggler_rates(k_strag, conditions, n)
 
     theta0, K0 = _mp_warm_start(tabs, theta_sol)
-    record_every = max(1, min(record_every, rounds))
-    n_rec = max(1, rounds // record_every)
+    record_every, n_rec = record_chunks(rounds, record_every)
 
     keys = jax.random.split(key, n_rec * record_every).reshape(
         n_rec, record_every, 2)
     ts = jnp.asarray((np.arange(n_rec) * record_every).astype(np.int32))
     carry0 = (theta0, K0, theta0, jnp.ones((n,), bool),
-              jnp.int32(0), jnp.int32(0))
+              jnp.int32(0), jnp.int32(0), jnp.int32(0))
     carry, (hist, active_hist) = _scenario_scan(
         tabs, part_half, rates, theta_sol, c, carry0, keys, ts,
         conditions=conditions, alpha=alpha, batch=batch,
         record_every=record_every, n_rec=n_rec)
-    theta, K, _, active, delivered, dropped = carry
+    theta, K, _, active, delivered, dropped, invalid = carry
     total_rounds = n_rec * record_every
     return SimTrace(np.asarray(hist), np.asarray(active_hist),
                     int(delivered), int(dropped), total_rounds,
-                    total_rounds * batch)
+                    total_rounds * batch, int(invalid))
 
 
 # ---------------------------------------------------------------------------
@@ -385,15 +401,18 @@ def sparse_async_admm(topo: SparseTopology, data: AgentData, mu: float,
 
     def tick(st: SparseADMMState, key):
         i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
-        j = tabs.nbr_idx[i, s]
+        # degree-0 waker -> no-op: out-of-bounds targets drop every scatter
+        valid = tabs.deg_count[i] > 0
+        ti = jnp.where(valid, i, n)
+        tj = jnp.where(valid, tabs.nbr_idx[i, s], n)
         r = tabs.rev_slot[i, s]
-        st = _sparse_primal_quadratic(st, i, tabs.nbr_w, tabs.deg_count, D,
+        st = _sparse_primal_quadratic(st, ti, tabs.nbr_w, tabs.deg_count, D,
                                       mu, rho, data, backend)
-        st = _sparse_primal_quadratic(st, j, tabs.nbr_w, tabs.deg_count, D,
+        st = _sparse_primal_quadratic(st, tj, tabs.nbr_w, tabs.deg_count, D,
                                       mu, rho, data, backend)
-        return _sparse_edge_zl(st, i, s, j, r, rho)
+        return _sparse_edge_zl(st, ti, s, tj, r, rho)
 
-    n_rec = max(1, steps // record_every)
+    record_every, n_rec = record_chunks(steps, record_every)
 
     @jax.jit
     def run(state, key):
@@ -407,3 +426,157 @@ def sparse_async_admm(topo: SparseTopology, data: AgentData, mu: float,
     final, hist = run(state, jax.random.PRNGKey(seed))
     comms = 2 * record_every * (np.arange(n_rec) + 1)
     return SparseCLTrace(np.asarray(hist), comms, final)
+
+
+# ---------------------------------------------------------------------------
+# Scenario engine: batched wake-ups + network conditions (CL-ADMM)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CLSimTrace(SimTrace):
+    """SimTrace plus the final sparse ADMM state (single-device runs)."""
+
+    final: Optional[SparseADMMState] = None
+
+
+def _reshape_stream(stream: EventStream, n_rec: int, record_every: int):
+    """(rounds, B) event arrays -> (n_rec, record_every, B) scan blocks."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape(n_rec, record_every, *x.shape[1:]),
+        stream._replace(active_frac=None))
+
+
+@partial(jax.jit, static_argnames=("mu", "rho", "backend"))
+def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev, *,
+                      mu: float, rho: float, backend=None):
+    """Batched-event CL-ADMM rounds over a precomputed event stream.
+
+    One round = one (record_every-chunked) EventStream slice of B wake-ups:
+
+    1. **primal phase** — every endpoint that completed its half of the
+       handshake (its partner's payload was delivered and both ends are
+       active, all folded into the stream's deliver flags) recomputes its
+       exact quadratic primal from its own round-start rows
+       (``core.sparse.batched_admm_primal``) and rewrites theta + its K row.
+       Duplicate endpoints in a batch read identical round-start state and
+       scatter identical values, so collisions are deterministic.
+    2. **publish** — the round's payload snapshot is (post-primal theta and
+       K, round-start duals); the previous round's snapshot serves the
+       one-round-stale deliveries (same convention as the MP engine).
+    3. **edge phase** — each delivered direction updates the *receiver's*
+       (Z_own, Z_nbr, L_own, L_nbr) slots via the shared
+       ``core.sparse.admm_edge_halfstep`` from its own post-primal values
+       and the partner's payload.  With both directions fresh this is
+       exactly ``_sparse_edge_zl``; a dropped direction leaves that side's
+       edge copies untouched (the mirrored copies may diverge — the
+       asynchronous regime of DJAM, arXiv:1803.09737).
+    """
+    n, k = nbr_w.shape
+
+    def round_fn(carry, ev_t):
+        st, pub_prev = carry
+        # --- primal phase: endpoints whose incoming payload was delivered
+        upd = jnp.concatenate([ev_t.i, ev_t.j])                    # (2B,)
+        got = jnp.concatenate([ev_t.deliver_ji, ev_t.deliver_ij])
+        live_rows = jnp.arange(k)[None, :] < deg_count[upd][:, None]
+        new_theta, theta_js = batched_admm_primal(
+            nbr_w[upd], live_rows, st.Z_own[upd], st.Z_nbr[upd],
+            st.L_own[upd], st.L_nbr[upd], D[upd], m_counts[upd], sx[upd],
+            mu, rho, backend)
+        new_K = jnp.where(live_rows[:, :, None], theta_js, st.K[upd])
+        rowu = jnp.where(got, upd, n)
+        theta = st.theta.at[rowu].set(new_theta, mode="drop")
+        K = st.K.at[rowu].set(new_K, mode="drop")
+
+        # --- publish: post-primal models, round-start duals
+        pub = (theta, K, st.L_own, st.L_nbr)
+
+        # --- edge phase: one half-step per delivered direction
+        own_s = jnp.concatenate([ev_t.s, ev_t.r])
+        oth_a = jnp.concatenate([ev_t.j, ev_t.i])
+        oth_s = jnp.concatenate([ev_t.r, ev_t.s])
+        stale = jnp.concatenate([ev_t.stale_ji, ev_t.stale_ij])[:, None]
+        pv_th, pv_K, pv_Lo, pv_Ln = pub_prev
+        th_pay = jnp.where(stale, pv_th[oth_a], theta[oth_a])
+        k_pay = jnp.where(stale, pv_K[oth_a, oth_s], K[oth_a, oth_s])
+        lo_pay = jnp.where(stale, pv_Lo[oth_a, oth_s],
+                           st.L_own[oth_a, oth_s])
+        ln_pay = jnp.where(stale, pv_Ln[oth_a, oth_s],
+                           st.L_nbr[oth_a, oth_s])
+        z_own, z_nbr, lo_new, ln_new = admm_edge_halfstep(
+            theta[upd], K[upd, own_s], st.L_own[upd, own_s],
+            st.L_nbr[upd, own_s], th_pay, k_pay, lo_pay, ln_pay, rho)
+        Z_own = st.Z_own.at[rowu, own_s].set(z_own, mode="drop")
+        Z_nbr = st.Z_nbr.at[rowu, own_s].set(z_nbr, mode="drop")
+        L_own = st.L_own.at[rowu, own_s].set(lo_new, mode="drop")
+        L_nbr = st.L_nbr.at[rowu, own_s].set(ln_new, mode="drop")
+
+        st = SparseADMMState(theta, K, Z_own, Z_nbr, L_own, L_nbr)
+        return (st, pub), None
+
+    def outer(carry, ev_blk):
+        carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
+        return carry, carry[0].theta
+
+    pub0 = (state0.theta, state0.K, state0.L_own, state0.L_nbr)
+    (st, _), hist = jax.lax.scan(outer, (state0, pub0), ev)
+    return st, hist
+
+
+def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
+                    rho: float, conditions: NetworkConditions, rounds: int,
+                    batch: int, seed: int = 0, record_every: int = 10,
+                    theta_sol=None, state: Optional[SparseADMMState] = None,
+                    stream: Optional[EventStream] = None,
+                    backend: Optional[ReproBackend] = None) -> CLSimTrace:
+    """Asynchronous CL-ADMM (paper §4.2) under a fault scenario.
+
+    The same batched-event substrate as ``run_mp_scenario``: the fault
+    process is materialized once (``scheduler.precompute_event_stream``,
+    identical RNG schedule) and replayed, B wake-ups per round, with drops,
+    staleness, stragglers, churn and partition windows all honored.  Pass
+    ``stream`` to replay an externally drawn schedule (e.g. the exact
+    engine's tick sequence) — its shape then fixes ``rounds`` x ``batch``.
+
+    With all-default ``NetworkConditions`` every handshake completes and a
+    round is exactly ``batch`` ticks of ``sparse_async_admm`` (same primal,
+    same edge update, collisions coalesced deterministically).  The horizon
+    follows the shared recording policy (``core.sparse.record_chunks``).
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    record_every, n_rec = record_chunks(rounds, record_every)
+    total_rounds = n_rec * record_every
+    if state is None:
+        if theta_sol is None:
+            raise ValueError("need theta_sol (warm start) or explicit state")
+        state = init_sparse_admm(topo, theta_sol)
+    if stream is None:
+        stream = precompute_event_stream(
+            tabs, jnp.asarray(topo.partition_halves()), conditions, batch,
+            seed, total_rounds)
+    else:
+        if stream.i.shape[0] != total_rounds:
+            raise ValueError(
+                f"stream covers {stream.i.shape[0]} rounds but the clamped "
+                f"horizon is {total_rounds}")
+        batch = int(stream.i.shape[1])
+
+    D = jnp.asarray(tabs.deg_w, jnp.float32)
+    mask = jnp.asarray(data.mask, jnp.float32)
+    x = jnp.asarray(data.x, jnp.float32)
+    m_counts = jnp.sum(mask, axis=1)
+    sx = jnp.sum(x * mask[:, :, None], axis=1)
+
+    ev = _reshape_stream(stream, n_rec, record_every)
+    st, hist = _cl_scenario_scan(
+        tabs.nbr_w, tabs.deg_count, D, m_counts, sx, state, ev,
+        mu=mu, rho=rho, backend=backend)
+    delivered, dropped, invalid = stream_totals(stream)
+    active_hist = np.asarray(stream.active_frac).reshape(
+        n_rec, record_every)[:, -1]
+    return CLSimTrace(theta_hist=np.asarray(hist), active_hist=active_hist,
+                      delivered=delivered, dropped=dropped,
+                      rounds=total_rounds, events=total_rounds * batch,
+                      invalid=invalid, final=st)

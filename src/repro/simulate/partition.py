@@ -50,11 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.sparse import batched_model_update
-from repro.launch.sim_mesh import (AGENT_AXIS, make_sim_mesh, mesh_shards,
-                                   shard_map_1d)
-from .engines import SimTrace
-from .scheduler import NetworkConditions, precompute_event_stream
+from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
+                               batched_model_update, record_chunks)
+from repro.launch.sim_mesh import (AGENT_AXIS, halo_exchange_fn,
+                                   make_sim_mesh, mesh_shards, shard_map_1d)
+from .engines import (SimTrace, _reshape_stream, init_sparse_admm)
+from .scheduler import (EventStream, NetworkConditions,
+                        precompute_event_stream, stream_totals)
 from .topology import SparseTopology
 
 
@@ -330,7 +332,6 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
     is either replicated (the event stream) or row-sharded (P * m leading
     axis); ``fetch``/``bnd_pos``/``halo_src_*`` carry one row per shard."""
     P_ = mesh_shards(mesh)
-    p = theta0.shape[1]
     batch = stream.i.shape[-1]
 
     def block_fn(ev, theta0_blk, K0_blk, nbr_p_blk, c_blk, sol_blk,
@@ -338,27 +339,9 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
-        zero_row = jnp.zeros((1, p), theta0_blk.dtype)
-
-        def exchange_halo(theta):
-            """Publish boundary rows, pull this shard's halo (round-start
-            snapshot of remote-neighbor models)."""
-            if H == 0:
-                return jnp.concatenate([theta, zero_row])
-            send = theta[bnd]                                  # (B, p)
-            if exchange == "ring":
-                ring = [(s, (s + 1) % P_) for s in range(P_)]
-                q_id = jax.lax.axis_index(AGENT_AXIS)
-                halo = jnp.zeros((H, p), theta.dtype)
-                buf = send
-                for step in range(1, P_):
-                    buf = jax.lax.ppermute(buf, AGENT_AXIS, ring)
-                    src = (q_id - step) % P_
-                    halo = jnp.where((hsrc == src)[:, None], buf[hpos], halo)
-            else:
-                allb = jax.lax.all_gather(send, AGENT_AXIS)    # (P, B, p)
-                halo = allb[hsrc, hpos]
-            return jnp.concatenate([theta, halo, zero_row])
+        # publish boundary rows, pull this shard's halo (round-start
+        # snapshot of remote-neighbor models)
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
 
         def round_fn(carry, ev_t):
             theta, K, ext_prev, overflow = carry
@@ -409,9 +392,7 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
         (theta, K, _, overflow), hist = jax.lax.scan(outer, carry0, ev)
         return hist, theta, overflow[None]
 
-    ev_scan = jax.tree_util.tree_map(
-        lambda x: x.reshape(n_rec, record_every, *x.shape[1:]),
-        stream._replace(active_frac=None))
+    ev_scan = _reshape_stream(stream, n_rec, record_every)
     run = shard_map_1d(
         block_fn, mesh,
         in_specs=(_scan_specs(P(), ev_scan), P(AGENT_AXIS), P(AGENT_AXIS),
@@ -456,8 +437,7 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
     n = topo.n
     theta_sol = np.asarray(theta_sol, np.float32).reshape(n, -1)
     c = np.asarray(c, np.float32)
-    record_every = max(1, min(record_every, rounds))
-    n_rec = max(1, rounds // record_every)
+    record_every, n_rec = record_chunks(rounds, record_every)
     total_rounds = n_rec * record_every
 
     stream = precompute_event_stream(
@@ -486,14 +466,236 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
         exchange=exchange)
 
-    delivered = int(np.asarray(stream.deliver_ij).sum()
-                    + np.asarray(stream.deliver_ji).sum())
-    dropped = 2 * total_rounds * batch - delivered
+    delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
         n_rec, record_every)[:, -1]
     return ShardedSimTrace(
         theta_hist=part.unshard_rows(np.asarray(hist)),
         active_hist=active_hist, delivered=delivered, dropped=dropped,
-        rounds=total_rounds, events=total_rounds * batch,
+        rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
+        n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
+        local_batch=U, overflow=int(np.asarray(overflow).sum()))
+
+
+# ---------------------------------------------------------------------------
+# Sharded CL-ADMM scenario engine (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "mu", "rho", "k", "m", "H", "E", "U",
+                          "n_rec", "record_every", "exchange"))
+def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
+                     nbr_w, deg_count, D, m_counts, sx,
+                     fetch, bnd_pos, halo_src_shard, halo_src_pos, *,
+                     mu: float, rho: float, k: int, m: int, H: int, E: int,
+                     U: int, n_rec: int, record_every: int, exchange: str):
+    """shard_map'd CL-ADMM rounds: the six ADMM state arrays are row-sharded
+    (P * m leading axis); the event stream is replicated and replayed per
+    shard exactly as the MP engine does.
+
+    Edge state never leaves its owner: for a cross-shard edge each endpoint
+    shard keeps its own (Z_own, Z_nbr, L_own, L_nbr) slots and mirrors the
+    partner's payload — post-primal theta + K plus round-start duals — into
+    its halo via one exchange per round, placed *between* the primal and
+    edge phases (the edge half-step reads post-primal remote models).  The
+    previous round's ext buffer serves the one-round-stale payloads.
+    """
+    P_ = mesh_shards(mesh)
+    batch = stream.i.shape[-1]
+
+    def block_fn(ev, theta0_blk, K0_blk, Zo_blk, Zn_blk, Lo_blk, Ln_blk,
+                 w_blk, degc_blk, D_blk, mc_blk, sx_blk,
+                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk):
+        fetch_q = fetch_blk[0]
+        bnd = bnd_blk[0]
+        hsrc, hpos = hsrc_blk[0], hpos_blk[0]
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
+        live_blk = jnp.arange(k)[None, :] < degc_blk[:, None]      # (m, k)
+
+        def publish(theta, K, Lo, Ln):
+            """Stacked payload rows [theta | K | L_own | L_nbr] -> ext."""
+            pub = jnp.concatenate([theta[:, None, :], K, Lo, Ln], axis=1)
+            return exchange_halo(pub)                  # (m + H + 1, 1+3k, p)
+
+        def round_fn(carry, ev_t):
+            theta, K, Zo, Zn, Lo, Ln, ext_prev, overflow = carry
+
+            # --- compact to the events touching this shard (O(E) ~ 2B/P)
+            rel = (fetch_q[ev_t.i] < m) | (fetch_q[ev_t.j] < m)
+            sel = jnp.nonzero(rel, size=E, fill_value=batch)[0]
+            i = _take_padded(ev_t.i, sel, 0)
+            j = _take_padded(ev_t.j, sel, 0)
+            s = _take_padded(ev_t.s, sel, 0)
+            r = _take_padded(ev_t.r, sel, 0)
+            d_ij = _take_padded(ev_t.deliver_ij, sel, False)
+            d_ji = _take_padded(ev_t.deliver_ji, sel, False)
+            st_ij = _take_padded(ev_t.stale_ij, sel, False)
+            st_ji = _take_padded(ev_t.stale_ji, sel, False)
+            overflow += jnp.maximum(jnp.sum(rel) - E, 0)
+
+            # --- primal phase: compact local handshake endpoints, shared
+            # exact quadratic step (core.sparse.batched_admm_primal)
+            f_i, f_j = fetch_q[i], fetch_q[j]
+            f_u = jnp.concatenate([f_i, f_j])                     # (2E,)
+            got = jnp.concatenate([d_ji, d_ij]) & (f_u < m)
+            usel = jnp.nonzero(got, size=U, fill_value=2 * E)[0]
+            lu = _take_padded(f_u, usel, m)
+            lu_c = jnp.minimum(lu, m - 1)
+            new_theta, theta_js = batched_admm_primal(
+                w_blk[lu_c], live_blk[lu_c], Zo[lu_c], Zn[lu_c], Lo[lu_c],
+                Ln[lu_c], D_blk[lu_c], mc_blk[lu_c], sx_blk[lu_c], mu, rho)
+            new_K = jnp.where(live_blk[lu_c][:, :, None], theta_js, K[lu_c])
+            rowp = jnp.where(lu < m, lu, m)
+            theta = theta.at[rowp].set(new_theta, mode="drop")
+            K = K.at[rowp].set(new_K, mode="drop")
+            overflow += jnp.maximum(jnp.sum(got) - U, 0)
+
+            # --- publish + halo exchange (post-primal models, round-start
+            # duals), then the edge phase reads payloads from ext
+            ext = publish(theta, K, Lo, Ln)
+
+            # --- edge phase: one half-step per delivered direction whose
+            # receiver is local
+            own_s = jnp.concatenate([s, r])
+            oth_f = jnp.concatenate([f_j, f_i])
+            oth_s = jnp.concatenate([r, s])
+            stale = jnp.concatenate([st_ji, st_ij])[:, None, None]
+            pay = jnp.where(stale, ext_prev[oth_f], ext[oth_f])
+            ar = jnp.arange(oth_s.shape[0])
+            th_pay = pay[:, 0]
+            k_pay = pay[ar, 1 + oth_s]
+            lo_pay = pay[ar, 1 + k + oth_s]
+            ln_pay = pay[ar, 1 + 2 * k + oth_s]
+            own_c = jnp.minimum(f_u, m - 1)
+            z_own, z_nbr, lo_new, ln_new = admm_edge_halfstep(
+                theta[own_c], K[own_c, own_s], Lo[own_c, own_s],
+                Ln[own_c, own_s], th_pay, k_pay, lo_pay, ln_pay, rho)
+            rowe = jnp.where(got, f_u, m)
+            Zo = Zo.at[rowe, own_s].set(z_own, mode="drop")
+            Zn = Zn.at[rowe, own_s].set(z_nbr, mode="drop")
+            Lo = Lo.at[rowe, own_s].set(lo_new, mode="drop")
+            Ln = Ln.at[rowe, own_s].set(ln_new, mode="drop")
+            return (theta, K, Zo, Zn, Lo, Ln, ext, overflow), None
+
+        def outer(carry, ev_blk):
+            carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
+            return carry, carry[0]
+
+        ext0 = publish(theta0_blk, K0_blk, Lo_blk, Ln_blk)  # warm-start halo
+        carry0 = (theta0_blk, K0_blk, Zo_blk, Zn_blk, Lo_blk, Ln_blk, ext0,
+                  jnp.int32(0))
+        (theta, *_, overflow), hist = jax.lax.scan(outer, carry0, ev)
+        return hist, theta, overflow[None]
+
+    ev_scan = _reshape_stream(stream, n_rec, record_every)
+    row = P(AGENT_AXIS)
+    per_shard = P(AGENT_AXIS, None)
+    run = shard_map_1d(
+        block_fn, mesh,
+        in_specs=(_scan_specs(P(), ev_scan),) + (row,) * 11
+        + (per_shard,) * 4,
+        out_specs=(P(None, AGENT_AXIS, None), row, row))
+    return run(ev_scan, theta0, K0, Zo0, Zn0, Lo0, Ln0, nbr_w, deg_count,
+               D, m_counts, sx, fetch, bnd_pos, halo_src_shard,
+               halo_src_pos)
+
+
+def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
+                            rho: float, conditions: NetworkConditions,
+                            rounds: int, batch: int, seed: int = 0,
+                            record_every: int = 10, *, theta_sol=None,
+                            n_shards: Optional[int] = None, mesh=None,
+                            assignment: Optional[np.ndarray] = None,
+                            local_batch: Optional[int] = None,
+                            exchange: str = "all_gather",
+                            partition_seed: int = 0,
+                            stream: Optional[EventStream] = None
+                            ) -> ShardedSimTrace:
+    """``simulate.engines.run_cl_scenario`` over a graph partitioned across
+    the sim mesh.
+
+    Same scenario semantics and RNG schedule as the single-device CL-ADMM
+    engine — ``trace.theta_hist`` reproduces it exactly whenever
+    ``trace.overflow`` is 0.  The six sparse ADMM state arrays are
+    row-sharded; per round one halo exchange mirrors each boundary agent's
+    post-primal (theta, K) and round-start (L_own, L_nbr) rows onto the
+    shards that hold the other endpoint of its cross-shard edges, and each
+    shard then applies the shared edge half-step to its own slots only
+    (DESIGN.md §12).  Knobs match ``run_mp_scenario_sharded``.
+    """
+    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
+    P_ = mesh_shards(mesh)
+    if assignment is None:
+        assignment = greedy_partition(topo, P_, seed=partition_seed)
+    elif int(np.max(assignment)) >= P_:
+        raise ValueError(
+            f"assignment uses shard {int(np.max(assignment))} but the mesh "
+            f"has only {P_} devices (start the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
+            f"fake host devices)")
+    part = GraphPartition.build(topo, assignment, P_)
+
+    tabs = topo.tables
+    record_every, n_rec = record_chunks(rounds, record_every)
+    total_rounds = n_rec * record_every
+
+    if stream is None:
+        stream = precompute_event_stream(
+            topo.device_tables(), jnp.asarray(topo.partition_halves()),
+            conditions, batch, seed, total_rounds)
+    else:
+        if stream.i.shape[0] != total_rounds:
+            raise ValueError(
+                f"stream covers {stream.i.shape[0]} rounds but the clamped "
+                f"horizon is {total_rounds}")
+        batch = int(stream.i.shape[1])
+
+    if theta_sol is None:
+        raise ValueError("need theta_sol (warm start)")
+    state0 = init_sparse_admm(topo, theta_sol)
+    # the local-data reductions use the same jnp expressions as the
+    # single-device engine (numpy's pairwise summation rounds differently,
+    # which would break the bit-for-bit parity)
+    mask = jnp.asarray(data.mask, jnp.float32)
+    x = jnp.asarray(data.x, jnp.float32)
+    m_counts = np.asarray(jnp.sum(mask, axis=1))
+    sx = np.asarray(jnp.sum(x * mask[:, :, None], axis=1))
+    sharded = dict(
+        theta0=part.shard_rows(np.asarray(state0.theta)),
+        K0=part.shard_rows(np.asarray(state0.K)),
+        Zo0=part.shard_rows(np.asarray(state0.Z_own)),
+        Zn0=part.shard_rows(np.asarray(state0.Z_nbr)),
+        Lo0=part.shard_rows(np.asarray(state0.L_own)),
+        Ln0=part.shard_rows(np.asarray(state0.L_nbr)),
+        nbr_w=part.shard_rows(tabs.nbr_w),
+        deg_count=part.shard_rows(tabs.deg_count),
+        D=part.shard_rows(tabs.deg_w.astype(np.float32)),
+        m_counts=part.shard_rows(m_counts),
+        sx=part.shard_rows(sx))
+    if local_batch is None:
+        E = default_local_events(batch, P_)
+        U = default_local_batch(batch, P_)
+    else:                      # explicit capacity: lossless event selection
+        E = batch
+        U = max(1, min(local_batch, 2 * batch))
+    U = min(U, 2 * E)
+
+    hist, theta, overflow = _sharded_cl_scan(
+        mesh, stream, **{k_: jnp.asarray(v) for k_, v in sharded.items()},
+        fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
+        halo_src_shard=jnp.asarray(part.halo_src_shard),
+        halo_src_pos=jnp.asarray(part.halo_src_pos),
+        mu=mu, rho=rho, k=topo.k_max, m=part.shard_size, H=part.halo_size,
+        E=E, U=U, n_rec=n_rec, record_every=record_every,
+        exchange=exchange)
+
+    delivered, dropped, invalid = stream_totals(stream)
+    active_hist = np.asarray(stream.active_frac).reshape(
+        n_rec, record_every)[:, -1]
+    return ShardedSimTrace(
+        theta_hist=part.unshard_rows(np.asarray(hist)),
+        active_hist=active_hist, delivered=delivered, dropped=dropped,
+        rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
         n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
         local_batch=U, overflow=int(np.asarray(overflow).sum()))

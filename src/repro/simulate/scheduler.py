@@ -38,6 +38,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +70,10 @@ class EventBatch(NamedTuple):
     deliver_ji: jnp.ndarray   # bool: j's model reached i
     stale_ij: jnp.ndarray     # bool: delivered value is one round old
     stale_ji: jnp.ndarray
+    valid: jnp.ndarray        # bool: a real wake-up (False for draws made
+                              # with every agent churned out, or for a
+                              # degree-0 waker) — excluded from the
+                              # delivered/dropped accounting entirely
 
 
 def straggler_rates(key, cond: NetworkConditions, n: int) -> jnp.ndarray:
@@ -79,21 +84,36 @@ def straggler_rates(key, cond: NetworkConditions, n: int) -> jnp.ndarray:
     return jnp.where(mask, jnp.float32(cond.straggler_factor), 1.0)
 
 
-def draw_wakeups(key, weights, batch: int) -> jnp.ndarray:
-    """B wake-ups ~ categorical(weights) via inverse-cdf (O(n + B log n))."""
+def draw_wakeups(key, weights, batch: int):
+    """B wake-ups ~ categorical(weights) via inverse-cdf (O(n + B log n)).
+
+    Returns ``(i, alive)``: the (B,) agent draws and a scalar bool that is
+    False when the weight vector is all zero (e.g. every agent churned
+    out).  In that degenerate case searchsorted lands past the end of the
+    flat cdf and the clip would deterministically select agent n-1; callers
+    must treat the whole batch as never-valid instead of charging those
+    phantom events to an arbitrary agent.
+    """
     n = weights.shape[0]
     cdf = jnp.cumsum(weights)
+    alive = cdf[-1] > 0
     total = jnp.maximum(cdf[-1], 1e-30)
     u = jax.random.uniform(key, (batch,)) * total
     i = jnp.searchsorted(cdf, u, side="right")
-    return jnp.clip(i, 0, n - 1).astype(jnp.int32)
+    return jnp.clip(i, 0, n - 1).astype(jnp.int32), alive
 
 
 def draw_slots(key, i, deg_count) -> jnp.ndarray:
-    """Uniform neighbor slot per event (pi_i uniform over N_i)."""
+    """Uniform neighbor slot per event (pi_i uniform over N_i).
+
+    Degree-0 wakers are clamped to slot 0 instead of ``deg - 1 = -1`` (the
+    negative index would wrap into the last pad slot and fabricate a
+    phantom edge); ``draw_events`` marks such events invalid.
+    """
     u = jax.random.uniform(key, i.shape)
     deg = deg_count[i].astype(jnp.float32)
-    return jnp.minimum((u * deg).astype(jnp.int32), deg_count[i] - 1)
+    s = jnp.minimum((u * deg).astype(jnp.int32), deg_count[i] - 1)
+    return jnp.maximum(s, 0)
 
 
 def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
@@ -104,13 +124,16 @@ def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
     rates: (n,) f32 base rates; t: scalar round index.
     """
     kw, ks, k1, k2, k3, k4 = jax.random.split(key, 6)
-    i = draw_wakeups(kw, rates * active.astype(jnp.float32), batch)
+    i, alive = draw_wakeups(kw, rates * active.astype(jnp.float32), batch)
     s = draw_slots(ks, i, tabs.deg_count)
     j = tabs.nbr_idx[i, s]
     r = tabs.rev_slot[i, s]
 
     B = i.shape[0]
-    ok = jnp.ones((B,), bool)
+    # never-valid events: the all-dead draw, or an isolated (degree-0)
+    # waker — these are artifacts of the sampler, not lost messages
+    valid = alive & (tabs.deg_count[i] > 0)
+    ok = valid
     if cond.drop_prob > 0.0:
         drop_ij = jax.random.bernoulli(k1, cond.drop_prob, (B,))
         drop_ji = jax.random.bernoulli(k2, cond.drop_prob, (B,))
@@ -132,7 +155,7 @@ def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
     else:
         stale_ij = stale_ji = jnp.zeros((B,), bool)
     return EventBatch(i, s, j, r, ok & ~drop_ij, ok & ~drop_ji,
-                      stale_ij, stale_ji)
+                      stale_ij, stale_ji, valid)
 
 
 def churn_step(key, cond: NetworkConditions, active) -> jnp.ndarray:
@@ -162,7 +185,24 @@ class EventStream(NamedTuple):
     deliver_ji: jnp.ndarray
     stale_ij: jnp.ndarray
     stale_ji: jnp.ndarray
+    valid: jnp.ndarray
     active_frac: jnp.ndarray
+
+
+def stream_totals(stream: EventStream) -> tuple:
+    """(delivered, dropped, invalid) accounting of a materialized stream.
+
+    Never-valid events (all-dead draws, degree-0 wakers) are excluded from
+    both delivered and dropped, so for every stream
+
+        delivered + dropped == 2 * (events - invalid).
+    """
+    d_ij = np.asarray(stream.deliver_ij)
+    d_ji = np.asarray(stream.deliver_ji)
+    valid = np.asarray(stream.valid)
+    delivered = int(d_ij.sum() + d_ji.sum())
+    dropped = int((valid & ~d_ij).sum() + (valid & ~d_ji).sum())
+    return delivered, dropped, int((~valid).sum())
 
 
 @partial(jax.jit, static_argnames=("conditions", "batch", "rounds"))

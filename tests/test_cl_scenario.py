@@ -1,0 +1,162 @@
+"""Batched-event CL-ADMM scenario engine (``run_cl_scenario``): parity with
+the exact one-event-per-tick engine on an identical schedule, fault-model
+behavior (drops, staleness, churn, partitions), accounting invariants, and
+the shared recording policy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import pad_datasets, solitary_mean
+from repro.core.sparse import record_chunks, sample_event
+from repro.simulate import (EventStream, NetworkConditions,
+                            random_geometric_topology, run_cl_scenario,
+                            sparse_async_admm)
+
+
+def exact_admm_stream(topo, steps, record_every, seed) -> EventStream:
+    """Replay ``sparse_async_admm``'s exact tick schedule as a B = 1 stream:
+    same PRNG key tree (split per record chunk, then per tick), all
+    deliveries clean."""
+    tabs = topo.device_tables()
+    n = topo.n
+    re_, n_rec = record_chunks(steps, record_every)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_rec)
+    tick_keys = jnp.concatenate([jax.random.split(k, re_) for k in keys])
+    i, s = jax.vmap(lambda k: sample_event(k, n, tabs.slot_cdf,
+                                           tabs.deg_count))(tick_keys)
+    i = np.asarray(i)[:, None]
+    s = np.asarray(s)[:, None]
+    j = np.asarray(tabs.nbr_idx)[i, s]
+    r = np.asarray(tabs.rev_slot)[i, s]
+    t = np.ones(i.shape, bool)
+    return EventStream(i, s, j, r, t, t, ~t, ~t, t,
+                       np.ones(i.shape[0], np.float32))
+
+
+@pytest.fixture(scope="module")
+def problem():
+    topo = random_geometric_topology(150, k=4, seed=0)
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal((int(rng.integers(1, 8)), 3))
+          for _ in range(150)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    sol = np.asarray(solitary_mean(data), np.float32)
+    return topo, data, sol
+
+
+class TestExactScheduleParity:
+    def test_matches_sparse_async_admm(self, problem):
+        """Tentpole acceptance: with all-default NetworkConditions and the
+        exact engine's event schedule, the batched engine reproduces
+        ``sparse_async_admm``'s trajectory (to f32 rounding — the batched
+        phases vmap the identical per-row primal/edge expressions)."""
+        topo, data, sol = problem
+        steps, re_ = 300, 50
+        stream = exact_admm_stream(topo, steps, re_, seed=5)
+        exact = sparse_async_admm(topo, data, 0.1, 1.0, steps=steps, seed=5,
+                                  record_every=re_, theta_sol=sol)
+        batched = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                                  rounds=steps, batch=1, seed=5,
+                                  record_every=re_, theta_sol=sol,
+                                  stream=stream)
+        assert batched.theta_hist.shape == exact.theta_hist.shape
+        np.testing.assert_allclose(batched.theta_hist, exact.theta_hist,
+                                   atol=1e-5, rtol=1e-5)
+        # full edge state agrees too, not just the self models
+        for a, b in [(batched.final.theta, exact.final.theta),
+                     (batched.final.K, exact.final.K),
+                     (batched.final.Z_own, exact.final.Z_own),
+                     (batched.final.Z_nbr, exact.final.Z_nbr),
+                     (batched.final.L_own, exact.final.L_own),
+                     (batched.final.L_nbr, exact.final.L_nbr)]:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_stream_shape_mismatch_raises(self, problem):
+        topo, data, sol = problem
+        stream = exact_admm_stream(topo, 20, 10, seed=0)
+        with pytest.raises(ValueError, match="rounds"):
+            run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                            rounds=40, batch=1, record_every=10,
+                            theta_sol=sol, stream=stream)
+
+
+class TestCLScenarioFaults:
+    def test_clean_counters_and_convergence(self, problem):
+        topo, data, sol = problem
+        tr = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                             rounds=200, batch=32, seed=0, record_every=50,
+                             theta_sol=sol)
+        assert tr.dropped == 0 and tr.invalid == 0
+        assert tr.delivered == 2 * tr.events
+        assert np.isfinite(tr.theta_hist).all()
+        # CL-ADMM should move every agent off its solitary model and shrink
+        # the neighbor disagreement term over the run
+        d0 = np.linalg.norm(tr.theta_hist[0] - sol)
+        assert d0 > 0
+        tabs = topo.tables
+        live = np.arange(topo.k_max)[None, :] < tabs.deg_count[:, None]
+
+        def disagreement(theta):
+            diff = theta[:, None, :] - theta[tabs.nbr_idx]
+            return float((live[:, :, None] * diff ** 2).sum())
+
+        assert disagreement(tr.theta_hist[-1]) \
+            < 0.5 * disagreement(np.asarray(sol))
+
+    def test_accounting_invariant_under_faults(self, problem):
+        topo, data, sol = problem
+        cond = NetworkConditions(drop_prob=0.2, stale_prob=0.3,
+                                 straggler_frac=0.3, straggler_factor=0.1,
+                                 churn_rate=0.02, partition_start=5,
+                                 partition_end=25)
+        tr = run_cl_scenario(topo, data, 0.1, 1.0, cond, rounds=60,
+                             batch=32, seed=1, record_every=20,
+                             theta_sol=sol)
+        assert tr.dropped > 0
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+        assert np.isfinite(tr.theta_hist).all()
+        assert tr.active_hist[-1] <= 1.0
+
+    def test_staleness_changes_trajectory(self, problem):
+        topo, data, sol = problem
+        kw = dict(rounds=80, batch=16, seed=3, record_every=20,
+                  theta_sol=sol)
+        clean = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                                **kw)
+        stale = run_cl_scenario(topo, data, 0.1, 1.0,
+                                NetworkConditions(stale_prob=1.0), **kw)
+        assert not np.array_equal(clean.theta_hist, stale.theta_hist)
+        assert np.isfinite(stale.theta_hist).all()
+
+    def test_drops_slow_consensus(self, problem):
+        """Heavy loss must leave the run finite and measurably further from
+        consensus than the clean run."""
+        topo, data, sol = problem
+        kw = dict(rounds=120, batch=16, seed=4, record_every=40,
+                  theta_sol=sol)
+        clean = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                                **kw)
+        lossy = run_cl_scenario(topo, data, 0.1, 1.0,
+                                NetworkConditions(drop_prob=0.6), **kw)
+        tabs = topo.tables
+        live = np.arange(topo.k_max)[None, :] < tabs.deg_count[:, None]
+
+        def disagreement(theta):
+            diff = theta[:, None, :] - theta[tabs.nbr_idx]
+            return float((live[:, :, None] * diff ** 2).sum())
+
+        assert disagreement(lossy.theta_hist[-1]) \
+            > disagreement(clean.theta_hist[-1])
+
+    def test_recording_policy_clamped(self, problem):
+        """rounds < record_every must not silently run zero rounds."""
+        topo, data, sol = problem
+        tr = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                             rounds=5, batch=4, seed=0, record_every=100,
+                             theta_sol=sol)
+        assert tr.rounds == 5 and tr.events == 20
+        assert tr.theta_hist.shape[0] == 1
+        assert not np.array_equal(tr.theta_hist[-1], sol)

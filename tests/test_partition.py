@@ -14,6 +14,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core.losses import pad_datasets, solitary_mean
 from repro.core.sparse import tables_from_adjacency
 from repro.simulate import (GraphPartition, NetworkConditions, SparseTopology,
                             block_partition, cluster_topology,
@@ -21,7 +22,9 @@ from repro.simulate import (GraphPartition, NetworkConditions, SparseTopology,
                             edge_cut, greedy_partition,
                             precompute_event_stream,
                             random_geometric_topology, ring_topology,
-                            run_mp_scenario, run_mp_scenario_sharded)
+                            run_cl_scenario, run_cl_scenario_sharded,
+                            run_mp_scenario, run_mp_scenario_sharded,
+                            stream_totals)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -229,6 +232,87 @@ class TestShardedParity:
             run_mp_scenario_sharded(topo, sol, c, 0.9, CONDITIONS["clean"],
                                     rounds=10, batch=8, assignment=bad)
 
+    def test_replay_parity_churn_and_partition_together(self, problem):
+        """EventStream replay with churn AND a partition window active at
+        once: the materialized stream and the inline engine agree on every
+        counter and on the trajectory replayed from it."""
+        topo, sol, c = problem
+        cond = NetworkConditions(churn_rate=0.03, partition_start=5,
+                                 partition_end=25)
+        tr = run_mp_scenario(topo, sol, c, 0.9, cond, rounds=40, batch=32,
+                             seed=11, record_every=10)
+        stream = precompute_event_stream(
+            topo.device_tables(), np.asarray(topo.partition_halves()),
+            cond, 32, 11, 40)
+        delivered, dropped, invalid = stream_totals(stream)
+        assert (delivered, dropped, invalid) \
+            == (tr.delivered, tr.dropped, tr.invalid)
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+        sh = run_mp_scenario_sharded(topo, sol, c, 0.9, cond, rounds=40,
+                                     batch=32, seed=11, record_every=10)
+        assert sh.overflow == 0
+        np.testing.assert_allclose(sh.theta_hist, tr.theta_hist, atol=1e-5)
+        np.testing.assert_allclose(sh.active_hist, tr.active_hist)
+
+
+# ---------------------------------------------------------------------------
+# sharded CL-ADMM parity (in-process device count; 8 devices in the
+# multi-device CI lane and in the subprocess below)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedCLParity:
+    @pytest.fixture(scope="class")
+    def problem(self):
+        topo = random_geometric_topology(300, k=5, seed=0)
+        rng = np.random.default_rng(0)
+        xs = [rng.standard_normal((int(rng.integers(1, 8)), 4))
+              for _ in range(300)]
+        data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+        sol = np.asarray(solitary_mean(data), np.float32)
+        return topo, data, sol
+
+    @pytest.mark.parametrize("name", sorted(CONDITIONS))
+    def test_matches_single_device_bitwise(self, problem, name):
+        """Tentpole acceptance: the sharded CL-ADMM trajectory is
+        bit-for-bit the single-device one (maxerr 0.0) with zero buffer
+        overflow, on whatever mesh this process has."""
+        topo, data, sol = problem
+        cond = CONDITIONS[name]
+        tr = run_cl_scenario(topo, data, 0.1, 1.0, cond, rounds=60,
+                             batch=48, seed=3, record_every=20,
+                             theta_sol=sol)
+        sh = run_cl_scenario_sharded(topo, data, 0.1, 1.0, cond, rounds=60,
+                                     batch=48, seed=3, record_every=20,
+                                     theta_sol=sol)
+        assert sh.overflow == 0
+        assert sh.n_shards == jax.device_count()
+        assert np.abs(sh.theta_hist - tr.theta_hist).max() == 0.0
+        np.testing.assert_allclose(sh.active_hist, tr.active_hist)
+        assert (sh.delivered, sh.dropped, sh.invalid, sh.rounds, sh.events) \
+            == (tr.delivered, tr.dropped, tr.invalid, tr.rounds, tr.events)
+
+    def test_ring_exchange_matches(self, problem):
+        topo, data, sol = problem
+        kw = dict(rounds=40, batch=32, seed=1, record_every=20,
+                  theta_sol=sol)
+        a = run_cl_scenario_sharded(topo, data, 0.1, 1.0,
+                                    CONDITIONS["faulty"], **kw)
+        b = run_cl_scenario_sharded(topo, data, 0.1, 1.0,
+                                    CONDITIONS["faulty"], exchange="ring",
+                                    **kw)
+        assert np.array_equal(a.theta_hist, b.theta_hist)
+
+    def test_overflow_counted_not_crashed(self, problem):
+        topo, data, sol = problem
+        tr = run_cl_scenario_sharded(topo, data, 0.1, 1.0,
+                                     CONDITIONS["clean"], rounds=20,
+                                     batch=64, seed=0, record_every=20,
+                                     local_batch=1, theta_sol=sol)
+        if jax.device_count() == 1:
+            assert tr.overflow > 0          # U = 1 cannot hold 2B updates
+        assert np.isfinite(tr.theta_hist).all()
+
 
 # ---------------------------------------------------------------------------
 # 8-fake-device subprocess: true multi-shard execution wherever the suite
@@ -287,6 +371,67 @@ SUBPROC = textwrap.dedent("""
         topo3, sol3, c3, 0.9, sweeps=15,
         backend=ReproBackend.using(sparse_mix="xla_sharded")))
     assert np.abs(got - want).max() <= 1e-5
+
+    # sharded ADMM primal/edge dispatch impls match their row-wise forms
+    import jax.numpy as jnp
+    from repro.kernels.dispatch import resolve
+    k_, p_ = 6, 16
+    w_ = jnp.asarray(rng.uniform(0.1, 1, (40, k_)), jnp.float32)
+    lv = jnp.asarray(rng.uniform(size=(40, k_)) < 0.8)
+    zo, zn, lo, ln = (jnp.asarray(rng.standard_normal((40, k_, p_)),
+                                  jnp.float32) for _ in range(4))
+    D_ = jnp.asarray(rng.uniform(1, 4, 40), jnp.float32)
+    m_ = jnp.asarray(rng.integers(1, 20, 40), jnp.float32)
+    sx_ = jnp.asarray(rng.standard_normal((40, p_)), jnp.float32)
+    xla = resolve("admm_primal", ReproBackend.using(admm_primal="xla"))
+    shd = resolve("admm_primal",
+                  ReproBackend.using(admm_primal="xla_sharded"))
+    want_t, want_js = jax.vmap(
+        lambda *a: xla(*a, 0.05, 1.0))(w_, lv, zo, zn, lo, ln, D_, m_, sx_)
+    got_t, got_js = shd(w_, lv, zo, zn, lo, ln, D_, m_, sx_, 0.05, 1.0)
+    assert np.abs(np.asarray(got_t) - np.asarray(want_t)).max() <= 1e-5
+    assert np.abs(np.asarray(got_js) - np.asarray(want_js)).max() <= 1e-5
+    e_args = tuple(jnp.asarray(rng.standard_normal((40, p_)), jnp.float32)
+                   for _ in range(8))
+    ref_e = resolve("admm_edge", ReproBackend.using(admm_edge="reference"))
+    shd_e = resolve("admm_edge", ReproBackend.using(admm_edge="xla_sharded"))
+    for a, b in zip(ref_e(*e_args, rho=1.5), shd_e(*e_args, rho=1.5)):
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() <= 1e-5
+
+    # CL-ADMM sharded parity across the 8-shard mesh (faulty conditions)
+    from repro.core.losses import pad_datasets, solitary_mean
+    from repro.simulate import run_cl_scenario, run_cl_scenario_sharded
+    xs = [rng.standard_normal((int(rng.integers(1, 8)), 4))
+          for _ in range(203)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    soln = np.asarray(solitary_mean(data), np.float32)
+    cl = run_cl_scenario(topo, data, 0.1, 1.0, cond, rounds=40, batch=32,
+                         seed=3, record_every=10, theta_sol=soln)
+    for exchange in ("all_gather", "ring"):
+        sh_cl = run_cl_scenario_sharded(topo, data, 0.1, 1.0, cond,
+                                        rounds=40, batch=32, seed=3,
+                                        record_every=10, theta_sol=soln,
+                                        exchange=exchange)
+        assert sh_cl.n_shards == 8 and sh_cl.overflow == 0, exchange
+        assert np.abs(sh_cl.theta_hist - cl.theta_hist).max() == 0.0, exchange
+
+    # acceptance run: n = 10k agents, 8 shards, bit-for-bit, zero overflow
+    topo4 = random_geometric_topology(10000, k=6, seed=2)
+    m4 = 3
+    x4 = rng.standard_normal((10000, m4, 4)).astype(np.float32)
+    data4 = pad_datasets(list(x4), [np.zeros(m4)] * 10000)
+    sol4 = np.asarray(solitary_mean(data4), np.float32)
+    cond4 = NetworkConditions(drop_prob=0.1, stale_prob=0.2,
+                              churn_rate=0.005, straggler_frac=0.2,
+                              partition_start=4, partition_end=12)
+    cl4 = run_cl_scenario(topo4, data4, 0.1, 1.0, cond4, rounds=24,
+                          batch=1000, seed=0, record_every=8,
+                          theta_sol=sol4)
+    sh4 = run_cl_scenario_sharded(topo4, data4, 0.1, 1.0, cond4, rounds=24,
+                                  batch=1000, seed=0, record_every=8,
+                                  theta_sol=sol4)
+    assert sh4.n_shards == 8 and sh4.overflow == 0
+    assert np.abs(sh4.theta_hist - cl4.theta_hist).max() == 0.0
     print("SHARDED-8DEV-OK")
 """)
 

@@ -1,6 +1,9 @@
 """Sparse event-driven simulator: sparse<->dense equivalence, topology
-generators, fault scenarios, and the edge-coloring matching property."""
+generators, fault scenarios, event-sampling edge cases (degree-0 agents,
+all-churned wake draws, the shared recording policy), and the edge-coloring
+matching property."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,12 +11,35 @@ import pytest
 from repro.core import (async_admm, async_gossip, gaussian_kernel_graph,
                         pad_datasets, random_geometric_graph, ring_graph,
                         solitary_mean, synchronous)
+from repro.core.sparse import (record_chunks, sample_event,
+                               tables_from_adjacency)
 from repro.kernels import ops, ref
 from repro.simulate import (NetworkConditions, SparseTopology,
-                            cluster_topology, get_scenario, list_scenarios,
+                            cluster_topology, draw_events, draw_slots,
+                            draw_wakeups, get_scenario, list_scenarios,
+                            precompute_event_stream,
                             random_geometric_topology, ring_topology,
                             run_mp_scenario, sparse_async_admm,
                             sparse_async_gossip, sparse_sync_mp)
+
+
+def isolated_agent_topology(n: int = 12, iso: int = 5) -> SparseTopology:
+    """A ring over all agents except ``iso``, which has degree 0."""
+    nbrs, wts = [], []
+    ring = [v for v in range(n) if v != iso]
+    pos = {v: t for t, v in enumerate(ring)}
+    m = len(ring)
+    for v in range(n):
+        if v == iso:
+            nbrs.append(np.array([], np.int64))
+            wts.append(np.ones(0))
+            continue
+        t = pos[v]
+        nb = np.sort(np.unique([ring[(t - 1) % m], ring[(t + 1) % m]]))
+        nbrs.append(nb)
+        wts.append(np.ones(len(nb)))
+    tabs = tables_from_adjacency(nbrs, wts, allow_isolated=True)
+    return SparseTopology(tabs, (np.arange(n) * 2 >= n).astype(np.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +300,217 @@ class TestScenarios:
         e_fast = np.linalg.norm(fast.theta_hist[-1] - star)
         e_slow = np.linalg.norm(slow.theta_hist[-1] - star)
         assert e_slow > e_fast
+
+
+# ---------------------------------------------------------------------------
+# event-sampling edge cases (ISSUE 4 bugfixes) + accounting invariants
+# ---------------------------------------------------------------------------
+
+
+class TestDegreeZeroEvents:
+    """A degree-0 agent's wake-up must be a no-op, not a phantom edge.
+
+    Pre-fix, ``min(s, deg - 1) = -1`` wrapped via negative indexing into the
+    last pad slot and fabricated an edge to whatever id the zero-initialized
+    pad row held (agent 0)."""
+
+    def test_sample_event_slot_never_negative(self):
+        topo = isolated_agent_topology(12, iso=5)
+        tabs = topo.device_tables()
+        hit_iso = False
+        for seed in range(200):
+            i, s = sample_event(jax.random.PRNGKey(seed), 12, tabs.slot_cdf,
+                                tabs.deg_count)
+            assert int(s) >= 0, seed
+            hit_iso |= int(i) == 5
+        assert hit_iso          # the draw does reach the isolated agent
+
+    def test_draw_slots_degree_zero_clamped(self):
+        deg = jnp.asarray([3, 0, 1], jnp.int32)
+        i = jnp.asarray([1, 1, 0, 2], jnp.int32)
+        s = draw_slots(jax.random.PRNGKey(0), i, deg)
+        assert (np.asarray(s) >= 0).all()
+
+    def test_exact_gossip_isolated_agent_untouched(self):
+        topo = isolated_agent_topology(12, iso=5)
+        rng = np.random.default_rng(0)
+        sol = rng.standard_normal((12, 3)).astype(np.float32)
+        c = rng.uniform(0.1, 1.0, 12).astype(np.float32)
+        tr = sparse_async_gossip(topo, sol, c, 0.9, steps=400, seed=0,
+                                 record_every=100)
+        # the isolated agent keeps its solitary model (pre-fix, its wake-ups
+        # fabricated an edge to agent 0 — the zero-initialized pad row id —
+        # and both endpoints' models moved)
+        np.testing.assert_array_equal(tr.final_theta[5], sol[5])
+        assert np.isfinite(tr.theta_hist).all()
+
+    def test_exact_admm_isolated_agent_untouched(self):
+        topo = isolated_agent_topology(10, iso=3)
+        rng = np.random.default_rng(1)
+        xs = [rng.standard_normal((int(rng.integers(1, 6)), 2))
+              for _ in range(10)]
+        data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+        sol = np.asarray(solitary_mean(data), np.float32)
+        tr = sparse_async_admm(topo, data, 0.1, 1.0, steps=200, seed=0,
+                               record_every=50, theta_sol=sol)
+        np.testing.assert_array_equal(np.asarray(tr.final.theta)[3], sol[3])
+        assert np.isfinite(tr.theta_hist).all()
+
+    def test_scenario_isolated_agent_is_invalid_not_dropped(self):
+        topo = isolated_agent_topology(12, iso=5)
+        rng = np.random.default_rng(0)
+        sol = rng.standard_normal((12, 2)).astype(np.float32)
+        c = rng.uniform(0.1, 1.0, 12).astype(np.float32)
+        tr = run_mp_scenario(topo, sol, c, 0.9, NetworkConditions(),
+                             rounds=50, batch=8, seed=0, record_every=10)
+        # the isolated agent wakes sometimes: those events are invalid, not
+        # lost messages, and its model never moves
+        assert tr.invalid > 0
+        assert tr.dropped == 0
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+        np.testing.assert_array_equal(tr.theta_hist[-1][5], sol[5])
+
+
+class TestAllChurnedWakeups:
+    """When every agent is churned out the wake CDF is all-zero; pre-fix
+    searchsorted deterministically picked agent n-1 and the dead events
+    inflated ``dropped``."""
+
+    def test_draw_wakeups_flags_dead_network(self):
+        i, alive = draw_wakeups(jax.random.PRNGKey(0), jnp.zeros(16), 8)
+        assert not bool(alive)
+        i2, alive2 = draw_wakeups(jax.random.PRNGKey(0), jnp.ones(16), 8)
+        assert bool(alive2)
+
+    def test_draw_events_all_inactive_marks_invalid(self):
+        topo = ring_topology(16)
+        tabs = topo.device_tables()
+        ev = draw_events(jax.random.PRNGKey(1), NetworkConditions(), tabs,
+                         jnp.asarray(topo.partition_halves()),
+                         jnp.zeros(16, bool), jnp.ones(16), 0, 8)
+        assert not np.asarray(ev.valid).any()
+        assert not np.asarray(ev.deliver_ij).any()
+
+    def test_emptied_network_excluded_from_counters(self):
+        """churn_rate high enough to empty a 4-agent ring for some rounds:
+        the dead-round draws are invalid and charged to neither counter."""
+        topo = ring_topology(4)
+        sol = np.ones((4, 2), np.float32)
+        c = np.ones(4, np.float32)
+        tr = run_mp_scenario(topo, sol, c, 0.9,
+                             NetworkConditions(churn_rate=0.9), rounds=60,
+                             batch=4, seed=0, record_every=10)
+        assert tr.invalid > 0
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+        assert np.isfinite(tr.theta_hist).all()
+        # the materialized stream agrees event-for-event
+        stream = precompute_event_stream(
+            topo.device_tables(), jnp.asarray(topo.partition_halves()),
+            NetworkConditions(churn_rate=0.9), 4, 0, tr.rounds)
+        assert int((~np.asarray(stream.valid)).sum()) == tr.invalid
+        delivered = int(np.asarray(stream.deliver_ij).sum()
+                        + np.asarray(stream.deliver_ji).sum())
+        assert delivered == tr.delivered
+
+
+class TestRecordingPolicy:
+    """All six ``// record_every`` sites share ``record_chunks``: clamp to
+    [1, steps], floor to whole chunks — never zero steps, never an overrun."""
+
+    def test_record_chunks_contract(self):
+        assert record_chunks(5, 100) == (5, 1)      # clamp: steps < every
+        assert record_chunks(7, 5) == (5, 1)        # floor: non-divisible
+        assert record_chunks(100, 10) == (10, 10)   # divisible: unchanged
+        assert record_chunks(1, 1) == (1, 1)
+        with pytest.raises(ValueError):
+            record_chunks(0, 10)
+
+    def test_short_horizon_gossip_runs_steps_not_zero(self):
+        """Pre-fix: steps < record_every silently ran ZERO steps and
+        returned an empty history."""
+        g = ring_graph(8)
+        rng = np.random.default_rng(1)
+        sol = rng.standard_normal((8, 2)).astype(np.float32)
+        c = np.ones(8, np.float32)
+        short = sparse_async_gossip(SparseTopology.from_graph(g), sol, c,
+                                    0.8, steps=5, seed=0, record_every=100)
+        explicit = sparse_async_gossip(SparseTopology.from_graph(g), sol, c,
+                                       0.8, steps=5, seed=0, record_every=5)
+        assert short.theta_hist.shape[0] == 1
+        np.testing.assert_array_equal(short.theta_hist, explicit.theta_hist)
+        assert not np.array_equal(short.theta_hist[-1], sol)   # it DID run
+        dense = async_gossip(g, sol, c, 0.8, steps=5, seed=0,
+                             record_every=100)
+        np.testing.assert_array_equal(dense.theta_hist, short.theta_hist)
+
+    def test_short_horizon_admm_does_not_overrun(self):
+        """Pre-fix: ``max(1, steps // record_every)`` ran a full oversized
+        chunk — 50 ticks for a 5-step request."""
+        n = 8
+        rng = np.random.default_rng(2)
+        pts = rng.standard_normal((n, 2)) * 0.5
+        g = gaussian_kernel_graph(pts, sigma=1.0)
+        xs = [rng.standard_normal((int(rng.integers(1, 6)), 1))
+              for _ in range(n)]
+        data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+        sol = solitary_mean(data)
+        topo = SparseTopology.from_graph(g)
+        short = sparse_async_admm(topo, data, 0.1, 1.0, steps=5, seed=0,
+                                  record_every=50, theta_sol=sol)
+        explicit = sparse_async_admm(topo, data, 0.1, 1.0, steps=5, seed=0,
+                                     record_every=5, theta_sol=sol)
+        np.testing.assert_array_equal(short.theta_hist, explicit.theta_hist)
+        dense = async_admm(g, data, 0.1, 1.0, "quadratic", steps=5, seed=0,
+                           record_every=50, theta_sol=sol)
+        np.testing.assert_array_equal(dense.theta_hist, short.theta_hist)
+
+    def test_non_divisible_steps_floored(self):
+        g = ring_graph(8)
+        rng = np.random.default_rng(3)
+        sol = rng.standard_normal((8, 2)).astype(np.float32)
+        c = np.ones(8, np.float32)
+        a = sparse_async_gossip(SparseTopology.from_graph(g), sol, c, 0.8,
+                                steps=17, seed=0, record_every=5)
+        b = sparse_async_gossip(SparseTopology.from_graph(g), sol, c, 0.8,
+                                steps=15, seed=0, record_every=5)
+        assert a.theta_hist.shape[0] == 3
+        np.testing.assert_array_equal(a.theta_hist, b.theta_hist)
+
+
+class TestAccountingInvariant:
+    """delivered + dropped == 2 * (events - invalid) for ``run_mp_scenario``
+    across every NetworkConditions field (satellite: test each in
+    isolation; invalid == 0 whenever the network never empties)."""
+
+    FIELD_CONDITIONS = {
+        "clean": NetworkConditions(),
+        "drop": NetworkConditions(drop_prob=0.3),
+        "stale": NetworkConditions(stale_prob=0.5),
+        "straggler": NetworkConditions(straggler_frac=0.4,
+                                       straggler_factor=0.05),
+        "churn": NetworkConditions(churn_rate=0.02),
+        "partition": NetworkConditions(partition_start=5, partition_end=25),
+        "all": NetworkConditions(drop_prob=0.15, stale_prob=0.2,
+                                 straggler_frac=0.3, straggler_factor=0.1,
+                                 churn_rate=0.02, partition_start=5,
+                                 partition_end=25),
+    }
+
+    @pytest.mark.parametrize("name", sorted(FIELD_CONDITIONS))
+    def test_invariant(self, name):
+        cond = self.FIELD_CONDITIONS[name]
+        topo = random_geometric_topology(150, k=4, seed=0)
+        rng = np.random.default_rng(0)
+        sol = rng.standard_normal((150, 3)).astype(np.float32)
+        c = rng.uniform(0.05, 1.0, 150).astype(np.float32)
+        tr = run_mp_scenario(topo, sol, c, 0.9, cond, rounds=40, batch=32,
+                             seed=7, record_every=10)
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+        assert tr.invalid == 0          # 150 agents never all churn out
+        if name == "clean":
+            assert tr.dropped == 0 and tr.delivered == 2 * tr.events
+        if name in ("drop", "partition", "all"):
+            assert tr.dropped > 0
 
 
 # ---------------------------------------------------------------------------
