@@ -208,6 +208,39 @@ def bench_admm_edge(smoke: bool, interpret: bool, repeats: int) -> dict:
     return {"shape": {"E": E, "p": p}, "impls": impls}
 
 
+def bench_edge_reweight(smoke: bool, interpret: bool, repeats: int) -> dict:
+    n, k = (512, 8) if smoke else (8192, 16)
+    loops = 5 if smoke else 50
+    rng = np.random.default_rng(3)
+    live = jnp.asarray(rng.uniform(size=(n, k)) < 0.8)
+    w0 = rng.uniform(0, 1, (n, k)) * np.asarray(live)
+    w0 = jnp.asarray(w0 / np.maximum(w0.sum(axis=1, keepdims=True), 1e-9),
+                     jnp.float32)
+    d = jnp.asarray(rng.uniform(0, 4, (n, k)), jnp.float32)
+    eta, lam = 0.3, 1.0
+    want = resolve("edge_reweight", ReproBackend.using(
+        edge_reweight="reference"))(d, w0, live, eta=eta, lam=lam)
+    impls = {}
+    for name, backend, skip in _runnable_impls("edge_reweight", interpret):
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        rw = resolve("edge_reweight", backend)
+
+        def body(w, _, rw=rw):
+            # feed the learned weights back for a real dependency chain
+            return rw(d, w, live, eta=eta, lam=lam), None
+
+        loop = jax.jit(lambda w, body=body: jax.lax.scan(
+            body, w, None, length=loops)[0])
+        impls[name] = {
+            "maxerr": _maxerr(rw(d, w0, live, eta=eta, lam=lam), want),
+            "us_per_loop": _time_loop(lambda: loop(w0), repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"n": n, "k": k}, "impls": impls}
+
+
 PARITY_FLOOR = 1e-5          # drift below this is float noise, never gated
 MAX_SLOWDOWN = 2.0           # vs baseline, after machine-speed normalization
 
@@ -278,6 +311,8 @@ def main(argv=None) -> int:
             "sparse_mix": bench_sparse_mix(args.smoke, interpret, repeats),
             "admm_primal": bench_admm_primal(args.smoke, interpret, repeats),
             "admm_edge": bench_admm_edge(args.smoke, interpret, repeats),
+            "edge_reweight": bench_edge_reweight(args.smoke, interpret,
+                                                 repeats),
         },
     }
 

@@ -52,8 +52,14 @@ from common import emit  # noqa: E402
 from repro.core.losses import pad_datasets, solitary_mean  # noqa: E402
 from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
                             random_geometric_topology, run_cl_scenario,
-                            run_cl_scenario_sharded, run_mp_scenario,
+                            run_cl_scenario_sharded, run_joint_scenario,
+                            run_joint_scenario_sharded, run_mp_scenario,
                             run_mp_scenario_sharded)
+
+#: graph-learning knobs for --algo joint (rate/temperature/cadence chosen so
+#: the learned graph moves every few rounds without pruning the whole
+#: candidate set; see DESIGN.md §13)
+JOINT_KW = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
 
 
 def peak_rss_mb() -> float:
@@ -77,6 +83,9 @@ def _single_runner(algo: str, topo, p: int, seed: int):
                                                   cond, theta_sol=sol, **kw)
     theta_sol = rng.standard_normal((topo.n, p)).astype(np.float32)
     c = rng.uniform(0.05, 1.0, topo.n).astype(np.float32)
+    if algo == "joint":
+        return lambda cond, **kw: run_joint_scenario(
+            topo, theta_sol, c, 0.9, cond, **JOINT_KW, **kw)
     return lambda cond, **kw: run_mp_scenario(topo, theta_sol, c, 0.9,
                                               cond, **kw)
 
@@ -90,6 +99,9 @@ def _sharded_runner(algo: str, topo, p: int, seed: int):
             topo, data, 0.1, 1.0, cond, theta_sol=sol, **kw)
     theta_sol = rng.standard_normal((topo.n, p)).astype(np.float32)
     c = rng.uniform(0.05, 1.0, topo.n).astype(np.float32)
+    if algo == "joint":
+        return lambda cond, **kw: run_joint_scenario_sharded(
+            topo, theta_sol, c, 0.9, cond, **JOINT_KW, **kw)
     return lambda cond, **kw: run_mp_scenario_sharded(topo, theta_sol, c,
                                                       0.9, cond, **kw)
 
@@ -115,10 +127,13 @@ def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
     tr = run(cond, **kw)
     dt = time.perf_counter() - t1
 
-    # the ADMM state carries 5 extra (n, k, p) arrays beyond MP's one
+    # the ADMM state carries 5 extra (n, k, p) arrays beyond MP's one; the
+    # joint engine adds the learned (n, k) weight + liveness tables
     state_mb = topo.state_bytes(p) / 2**20
     if algo == "admm":
         state_mb += 4 * 4 * n * topo.k_max * p / 2**20
+    elif algo == "joint":
+        state_mb += 5 * n * topo.k_max / 2**20
     return {
         "n": n, "k_max": topo.k_max, "p": p, "scenario": scenario_name,
         "rounds": tr.rounds, "batch": batch, "events": tr.events,
@@ -171,9 +186,10 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="wake-ups per round (default n // 10)")
     ap.add_argument("--scenarios", default="clean,lossy-10")
-    ap.add_argument("--algo", default="mp", choices=("mp", "admm"),
-                    help="engine: MP gossip (run_mp_scenario) or CL-ADMM "
-                         "(run_cl_scenario)")
+    ap.add_argument("--algo", default="mp", choices=("mp", "admm", "joint"),
+                    help="engine: MP gossip (run_mp_scenario), CL-ADMM "
+                         "(run_cl_scenario), or joint model+graph learning "
+                         "(run_joint_scenario)")
     ap.add_argument("--sharded", action="store_true",
                     help="also run the partitioned engine and report the "
                          "event-throughput ratio over one device")

@@ -1,0 +1,65 @@
+"""Joint graph + model learning recovering planted clusters (DESIGN.md §13).
+
+Two clusters of agents estimate opposite means (the §5.1 mean-estimation
+task with cluster structure planted in the targets).  The candidate
+collaboration graph is deliberately polluted: every agent carries a few
+links into the *wrong* cluster.  Running ``run_joint_scenario`` with graph
+learning enabled, the agents re-estimate their outgoing edge weights from
+local model distances (Zantedeschi et al. 2019-style sparse simplex
+projection) while gossiping — and the learned graph drops the planted
+inter-cluster edges while keeping >= 90% of the intra-cluster ones.
+
+    PYTHONPATH=src python examples/joint_graph_demo.py            # full
+    PYTHONPATH=src python examples/joint_graph_demo.py --smoke    # docs lane
+"""
+
+import argparse
+
+from repro.core.graph_learning import cluster_edge_recovery
+from repro.data.synthetic import two_cluster_mean_problem
+from repro.simulate import (NetworkConditions, planted_partition_topology,
+                            run_joint_scenario)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=400)
+    ap.add_argument("--eta", type=float, default=0.3)
+    ap.add_argument("--lam", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem (CI docs lane)")
+    args = ap.parse_args()
+    n = 60 if args.smoke else args.n
+    rounds = 150 if args.smoke else args.rounds
+
+    topo = planted_partition_topology(n, 2, k_intra=5, k_inter=2,
+                                      seed=args.seed)
+    labels, _, theta_sol, c = two_cluster_mean_problem(n, p=4,
+                                                       seed=args.seed)
+    tabs = topo.tables
+    base = cluster_edge_recovery(tabs.nbr_idx, tabs.deg_count, tabs.nbr_p,
+                                 labels)
+    print(f"candidate graph: n={n} directed slots={int(tabs.deg_count.sum())}"
+          f" intra={base.n_intra} inter={base.n_inter}"
+          f" (inter weight mass before learning: {base.inter_mass:.2f})")
+
+    for eta in (0.0, args.eta):
+        tr = run_joint_scenario(
+            topo, theta_sol, c, 0.9, NetworkConditions(), rounds=rounds,
+            batch=n // 2, seed=args.seed, record_every=rounds // 3,
+            eta_graph=eta, lam=args.lam, graph_every=5, prune_eps=1e-3)
+        rec = cluster_edge_recovery(tabs.nbr_idx, tabs.deg_count,
+                                    tr.final_w, labels)
+        tag = "frozen graph (eta=0)" if eta == 0 else f"learned (eta={eta})"
+        print(f"{tag:22s} intra_recovered={rec.intra_recovered:5.1%} "
+              f"inter_suppressed={rec.inter_suppressed:5.1%} "
+              f"inter_mass={rec.inter_mass:.4f} "
+              f"live_slots={int(tr.live_edges_hist[-1])}")
+    assert rec.intra_recovered >= 0.9, "cluster recovery regressed"
+    print("OK: learned graph recovers the planted clusters")
+
+
+if __name__ == "__main__":
+    main()

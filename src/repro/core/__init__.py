@@ -11,7 +11,10 @@ from .model_propagation import (closed_form, synchronous, async_gossip,
                                 label_propagation, AsyncTrace)
 from .sparse import (NeighborTables, DeviceTables, padded_neighbor_tables,
                      tables_from_adjacency, to_device, sample_event,
-                     neighbor_aggregate, quadratic_primal_core)
+                     live_slots, neighbor_aggregate, quadratic_primal_core)
+from .graph_learning import (GraphRecovery, cluster_edge_recovery,
+                             learned_weight_tables, prune_rows,
+                             reweight_rows, slot_sq_distances)
 from .collaborative import (cl_objective, direct_minimize, init_state,
                             async_admm, sync_admm, ADMMState, CLTrace)
 from .consensus import consensus_model, consensus_mean

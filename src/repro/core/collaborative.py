@@ -65,6 +65,7 @@ def direct_minimize(graph: Graph, data: AgentData, mu: float, loss: str,
     grad = jax.grad(obj)
 
     def step(th, _):
+        """One gradient-descent step on Q_CL."""
         return th - lr * grad(th), None
 
     theta, _ = jax.lax.scan(step, jnp.zeros((n, p)), None, length=steps)
@@ -79,6 +80,14 @@ def direct_minimize(graph: Graph, data: AgentData, mu: float, loss: str,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class ADMMState:
+    """Dense partial-consensus ADMM state (paper §4.2).
+
+    T[l] is agent l's primal block (its own model at T[l, l], copies of its
+    neighbors elsewhere); Z_own/Z_nbr are the per-edge secondary variables
+    and L_own/L_nbr the scaled duals, one (n, n, p) array each (the sparse
+    engines store the same five blocks as (n, k, p) slot rows).
+    """
+
     T: jnp.ndarray       # (n, n, p)
     Z_own: jnp.ndarray   # (n, n, p)
     Z_nbr: jnp.ndarray   # (n, n, p)
@@ -86,6 +95,7 @@ class ADMMState:
     L_nbr: jnp.ndarray   # (n, n, p)
 
     def models(self) -> jnp.ndarray:
+        """(n, p) personal models — the diagonal blocks Theta_l^l."""
         n = self.T.shape[0]
         return self.T[jnp.arange(n), jnp.arange(n)]
 
@@ -220,6 +230,8 @@ def _all_zl_update(state: ADMMState, mask, rho) -> ADMMState:
 
 @dataclasses.dataclass
 class CLTrace:
+    """CL-ADMM run record: model snapshots + cumulative communications."""
+
     theta_hist: np.ndarray   # (n_records, n, p)
     comms_hist: np.ndarray   # cumulative pairwise communications
     final: "ADMMState"
@@ -259,6 +271,8 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
                           backend)
 
     def tick(st: ADMMState, key):
+        """One wake-up (§4.2): both endpoints primal-update, then the
+        waking edge's Z/dual update."""
         i, s = sample_event(key, n, tabs.slot_cdf, tabs.deg_count)
         # degree-0 waker -> no-op: out-of-bounds targets drop every scatter
         valid = tabs.deg_count[i] > 0
@@ -276,7 +290,9 @@ def async_admm(graph: Graph, data: AgentData, mu: float, rho: float,
 
     @jax.jit
     def run(state, key):
+        """Scan ``n_rec`` record chunks of ``record_every`` ticks."""
         def outer(st, key):
+            """One record chunk; emits a model snapshot."""
             keys = jax.random.split(key, record_every)
             st = jax.lax.scan(lambda s, k: (tick(s, k), None), st, keys)[0]
             return st, st.models()
@@ -312,8 +328,11 @@ def sync_admm(graph: Graph, data: AgentData, mu: float, rho: float,
 
     @jax.jit
     def run(state):
+        """Scan ``steps`` synchronous App. D iterations."""
         def it(st, _):
+            """One iteration: all primals, then all Z/dual updates."""
             def body(l, s):
+                """Agent l's exact primal block update."""
                 T = primal(s, l)
                 return ADMMState(T, s.Z_own, s.Z_nbr, s.L_own, s.L_nbr)
             st = jax.lax.fori_loop(0, n, body, st)

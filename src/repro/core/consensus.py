@@ -26,6 +26,7 @@ def consensus_model(data: AgentData, loss: str = "hinge", steps: int = 500,
     total = jnp.maximum(jnp.sum(data.mask), 1.0)
 
     def obj(theta):
+        """Pooled objective: mean loss over every agent's samples."""
         per_agent = jax.vmap(lambda x, y, m: loss_fn(theta, x, y, m))(
             data.x, data.y, data.mask)
         return jnp.sum(per_agent) / total + 0.5 * l2 * jnp.sum(theta * theta)
@@ -33,6 +34,7 @@ def consensus_model(data: AgentData, loss: str = "hinge", steps: int = 500,
     grad = jax.grad(obj)
 
     def step(theta, _):
+        """One gradient-descent step on the pooled objective."""
         return theta - lr * grad(theta), None
 
     theta, _ = jax.lax.scan(step, jnp.zeros(p), None, length=steps)

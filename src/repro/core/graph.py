@@ -14,6 +14,7 @@ Everything here is plain numpy/jnp; graphs are small (n = #agents).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Tuple
 
 import jax.numpy as jnp
@@ -22,7 +23,21 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Weighted undirected graph over ``n`` agents."""
+    """Weighted undirected graph over ``n`` agents (paper §2.1).
+
+    ``W`` is validated once here, so every derived quantity (``P``,
+    ``laplacian``, the neighbor tables of ``core.sparse``) can assume a
+    finite, nonnegative, exactly symmetric, zero-diagonal matrix:
+
+    * non-finite or negative entries raise ``ValueError``;
+    * an asymmetry beyond float tolerance raises; an asymmetry *within*
+      tolerance (e.g. a kernel evaluated in a non-symmetric expression
+      order) is silently-dangerous no more — it is symmetrized to
+      ``(W + W.T) / 2`` with a ``UserWarning`` (previously such matrices
+      were accepted as-is and leaked row-dependent ``P`` matrices into the
+      engines);
+    * the diagonal is zeroed (self-loops carry no information in Eq. (1)).
+    """
 
     W: np.ndarray  # (n, n) symmetric, nonnegative, zero diagonal
 
@@ -30,22 +45,32 @@ class Graph:
         W = np.asarray(self.W, dtype=np.float64)
         if W.ndim != 2 or W.shape[0] != W.shape[1]:
             raise ValueError(f"W must be square, got {W.shape}")
-        if not np.allclose(W, W.T):
-            raise ValueError("W must be symmetric")
+        if not np.isfinite(W).all():
+            raise ValueError("W must be finite (contains NaN or inf)")
         if (W < 0).any():
             raise ValueError("W must be nonnegative")
+        if not np.array_equal(W, W.T):
+            if not np.allclose(W, W.T):
+                raise ValueError("W must be symmetric")
+            warnings.warn(
+                "W is asymmetric within float tolerance; symmetrizing to "
+                "(W + W.T) / 2", UserWarning, stacklevel=3)
+            W = 0.5 * (W + W.T)
         object.__setattr__(self, "W", W * (1.0 - np.eye(W.shape[0])))
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.W.shape[0]
 
     @property
     def degrees(self) -> np.ndarray:
+        """(n,) weighted degrees D_ii = sum_j W_ij (paper §2.1)."""
         return self.W.sum(axis=1)
 
     @property
     def D(self) -> np.ndarray:
+        """Degree diagonal matrix D (paper Prop. 1)."""
         return np.diag(self.degrees)
 
     @property
@@ -58,6 +83,8 @@ class Graph:
 
     @property
     def laplacian(self) -> np.ndarray:
+        """Graph Laplacian L = D - W (the smoothness operator of
+        Eq. (1)'s quadratic term)."""
         return self.D - self.W
 
     def edges(self) -> List[Tuple[int, int]]:
@@ -66,6 +93,7 @@ class Graph:
         return list(zip(iu.tolist(), ju.tolist()))
 
     def neighbors(self, i: int) -> np.ndarray:
+        """Ids of N_i — agents sharing a positive-weight edge with i."""
         return np.nonzero(self.W[i])[0]
 
     def neighbor_distribution(self) -> np.ndarray:
@@ -80,6 +108,7 @@ class Graph:
         return A / deg[:, None]
 
     def is_connected(self) -> bool:
+        """Whether the positive-weight edge set connects all agents."""
         n = self.n
         seen = np.zeros(n, dtype=bool)
         stack = [0]
@@ -130,8 +159,13 @@ def gaussian_kernel_graph(points: np.ndarray, sigma: float = 0.1,
 
     Used in the mean-estimation task (paper §5.1) over 2-D auxiliary vectors.
     ``threshold`` zeroes negligible weights (paper §5.2 'edges with negligible
-    weights are ignored').
+    weights are ignored').  ``sigma`` must be positive: the sigma -> 0 limit
+    is a graph of isolated agents for distinct points and 0/0 for identical
+    ones, so it is rejected rather than silently producing NaN weights.
+    Exactly identical points get the kernel's supremum weight 1.
     """
+    if sigma <= 0:
+        raise ValueError(f"sigma must be > 0, got {sigma}")
     v = np.asarray(points, dtype=np.float64)
     sq = ((v[:, None, :] - v[None, :, :]) ** 2).sum(-1)
     W = np.exp(-sq / (2.0 * sigma ** 2))
@@ -143,7 +177,13 @@ def gaussian_kernel_graph(points: np.ndarray, sigma: float = 0.1,
 
 def angular_kernel_graph(models: np.ndarray, sigma: float = 0.1,
                          threshold: float = 1e-3) -> Graph:
-    """W_ij = exp((cos(phi_ij) - 1)/sigma) over target-model angles (§5.2)."""
+    """W_ij = exp((cos(phi_ij) - 1)/sigma) over target-model angles (§5.2).
+
+    ``sigma`` must be positive (see :func:`gaussian_kernel_graph`);
+    zero-norm model rows are treated as unit-norm so the cosine is defined.
+    """
+    if sigma <= 0:
+        raise ValueError(f"sigma must be > 0, got {sigma}")
     m = np.asarray(models, dtype=np.float64)
     norms = np.linalg.norm(m, axis=1, keepdims=True)
     norms = np.where(norms == 0, 1.0, norms)

@@ -31,10 +31,12 @@ class AgentData:
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.x.shape[0]
 
     @property
     def counts(self) -> jnp.ndarray:
+        """(n,) live-sample counts m_i (drives confidences, §2.2)."""
         return self.mask.sum(axis=1)
 
 
@@ -124,12 +126,14 @@ def solitary_gd(data: AgentData, loss: str = "hinge", steps: int = 200,
     n, _, p = data.x.shape
 
     def agent_obj(theta, x, y, mask):
+        """One agent's mean local loss over its live samples."""
         m = jnp.maximum(jnp.sum(mask), 1.0)
         return loss_fn(theta, x, y, mask) / m + 0.5 * l2 * jnp.sum(theta * theta)
 
     grad = jax.grad(agent_obj)
 
     def step(thetas, _):
+        """One vmapped gradient-descent step, all agents at once."""
         g = jax.vmap(grad)(thetas, data.x, data.y, data.mask)
         return thetas - lr * g, None
 

@@ -98,6 +98,7 @@ def synchronous(graph: Graph, theta_sol, c, alpha: float, steps: int,
     mix = resolve("mix", backend)
 
     def step(theta, _):
+        """One Eq. (5) iterate (the "mix" op)."""
         return mix(theta, theta_sol, A_mix, b), None
 
     theta, _ = jax.lax.scan(step, theta, None, length=steps)
@@ -139,6 +140,8 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
         return T.at[tgt, l].set(new, mode="drop")
 
     def step(carry, key):
+        """One wake-up tick (§3.2): exchange self-models, update both
+        endpoints via Eq. (6)."""
         T = carry
         i, s = sample_event(key, n, slot_cdf, deg_count)
         # degree-0 waker -> no-op (same masking as the sparse engines):
@@ -165,6 +168,7 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
     n_rec = steps // record_every
 
     def outer(T, key):
+        """One record chunk; emits a model snapshot."""
         keys = jax.random.split(key, record_every)
         T, _ = jax.lax.scan(lambda c, k: (step(c, k)[0], None), T, keys)
         return T, T[jnp.arange(n), jnp.arange(n)]

@@ -50,11 +50,32 @@ class NeighborTables(NamedTuple):
 
     @property
     def n(self) -> int:
+        """Number of agents (rows)."""
         return self.nbr_idx.shape[0]
 
     @property
     def k_max(self) -> int:
+        """Padded slot count (max degree over agents)."""
         return self.nbr_idx.shape[1]
+
+    def with_weights(self, nbr_w_new: np.ndarray) -> "NeighborTables":
+        """New tables carrying updated per-slot weights (time-varying graphs).
+
+        The *candidate* structure — ``nbr_idx``, ``rev_slot``, ``deg_count``
+        and the uniform wake-up cdf ``slot_cdf`` (pi_i, paper §3.2) — is kept
+        frozen: the joint graph-learning engines (DESIGN.md §13) only move
+        the weights within a fixed candidate support, which is what keeps
+        the event process precomputable and replayable.  ``nbr_w``,
+        ``nbr_p`` and ``deg_w`` are recomputed from ``nbr_w_new`` (dead
+        slots zeroed; zero-degree rows get an all-zero stochastic row).
+        """
+        live = np.arange(self.k_max)[None, :] < self.deg_count[:, None]
+        w = np.where(live, np.asarray(nbr_w_new, np.float64), 0.0)
+        deg_w = w.sum(axis=1)
+        nbr_p = np.where(live, w / np.where(deg_w > 0, deg_w, 1.0)[:, None],
+                         0.0)
+        return self._replace(nbr_w=w.astype(np.float32),
+                             nbr_p=nbr_p.astype(np.float32), deg_w=deg_w)
 
 
 def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
@@ -126,12 +147,20 @@ def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
                           slot_cdf, deg_w)
 
 
-def padded_neighbor_tables(graph) -> NeighborTables:
-    """NeighborTables of a ``core.graph.Graph`` (small/medium n only)."""
+def padded_neighbor_tables(graph, allow_isolated: bool = False
+                           ) -> NeighborTables:
+    """NeighborTables of a ``core.graph.Graph`` (small/medium n only).
+
+    ``allow_isolated`` passes through to :func:`tables_from_adjacency`:
+    graphs with zero-degree agents (e.g. a thresholded kernel graph that
+    disconnected a point) are rejected by default, admitted as no-op rows
+    when True.
+    """
     W = np.asarray(graph.W)
     nbrs = [np.nonzero(W[i])[0] for i in range(W.shape[0])]
     wts = [W[i, nb] for i, nb in enumerate(nbrs)]
-    return tables_from_adjacency(nbrs, wts, deg_w=W.sum(axis=1))
+    return tables_from_adjacency(nbrs, wts, deg_w=W.sum(axis=1),
+                                 allow_isolated=allow_isolated)
 
 
 class DeviceTables(NamedTuple):
@@ -147,6 +176,8 @@ class DeviceTables(NamedTuple):
 
 
 def to_device(tables: NeighborTables, dtype=jnp.float32) -> DeviceTables:
+    """Mirror host-side tables onto the default device (weights cast to
+    ``dtype``)."""
     return DeviceTables(
         jnp.asarray(tables.nbr_idx), jnp.asarray(tables.rev_slot),
         jnp.asarray(tables.deg_count), jnp.asarray(tables.nbr_w, dtype),
@@ -157,6 +188,16 @@ def to_device(tables: NeighborTables, dtype=jnp.float32) -> DeviceTables:
 # ---------------------------------------------------------------------------
 # Shared jnp building blocks (used verbatim by dense AND sparse engines)
 # ---------------------------------------------------------------------------
+
+
+def live_slots(deg_count, k_max: int):
+    """(n, k_max) bool mask of live (non-pad) slots — ``slot < deg_count``.
+
+    The expression every engine previously inlined; exposed so the joint
+    graph-learning state (``w``, ``live``) initializes identically on the
+    single-device and partitioned paths.
+    """
+    return jnp.arange(k_max)[None, :] < deg_count[:, None]
 
 
 def sample_event(key, n: int, slot_cdf, deg_count):

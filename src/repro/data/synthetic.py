@@ -48,6 +48,29 @@ def mean_estimation_problem(n: int = 300, eps: float = 1.0, sigma: float = 0.1,
     return graph, data, targets, c
 
 
+def two_cluster_mean_problem(n: int, p: int = 4, sep: float = 2.0,
+                             noise: float = 0.5, seed: int = 0):
+    """Two planted clusters of agents estimating opposite means — the
+    synthetic task the joint graph-learning acceptance runs on (ISSUE 5 /
+    DESIGN.md §13; the mean-estimation analogue of §5.1 with cluster
+    structure in the *targets* instead of the two-moons geometry).
+
+    Agents in cluster 0 target ``+sep/2 * 1``, cluster 1 ``-sep/2 * 1`` (in
+    R^p); solitary models are the targets plus N(0, noise^2) estimation
+    noise.  Returns ``(labels, targets, theta_sol, c)`` with labels the
+    contiguous-block cluster ids matching
+    ``simulate.topology.planted_partition_topology(n, 2, ...)``.
+    """
+    rng = np.random.default_rng(seed)
+    labels = (np.arange(n) >= n // 2).astype(np.int32)
+    targets = np.where(labels[:, None] == 0, sep / 2.0, -sep / 2.0) \
+        * np.ones((n, p))
+    theta_sol = (targets + noise * rng.standard_normal((n, p))) \
+        .astype(np.float32)
+    c = rng.uniform(0.3, 1.0, n).astype(np.float32)
+    return labels, targets.astype(np.float32), theta_sol, c
+
+
 # ---------------------------------------------------------------------------
 # Paper §5.2 — collaborative linear classification
 # ---------------------------------------------------------------------------

@@ -1,7 +1,9 @@
 """Paper-style experiment drivers (vmapped multi-trial sweeps)."""
 
-from .sweep import (ADMMSweepResult, ADMMTrials, MPSweepResult, MPTrials,
+from .sweep import (ADMMSweepResult, ADMMTrials, JointSweepResult,
+                    JointTrials, MPSweepResult, MPTrials,
                     admm_mean_estimation_trials, closed_form_comparison,
-                    mean_estimation_trials, run_admm_sweep, run_mp_sweep)
+                    joint_mean_estimation_trials, mean_estimation_trials,
+                    run_admm_sweep, run_joint_sweep, run_mp_sweep)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

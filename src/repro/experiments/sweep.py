@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.collaborative import ADMMState, _all_zl_update, cl_objective
+from repro.core.graph_learning import DEAD_DISTANCE
 from repro.core.losses import LOSSES, AgentData, solitary_mean, \
     confidences_from_counts
 from repro.core.model_propagation import mp_mix_operator, mp_objective
@@ -262,6 +263,158 @@ def closed_form_comparison(trials: MPTrials) -> Tuple[np.ndarray, np.ndarray,
         jnp.asarray(trials.c), jnp.asarray(trials.alpha),
         jnp.asarray(trials.targets))
     return np.asarray(e_c), np.asarray(e_nc), np.asarray(win)
+
+
+# ---------------------------------------------------------------------------
+# Joint graph-learning sweep — synchronous alternation over a
+# (seed × alpha × graph-learning strength) grid (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JointTrials:
+    """T stacked §5.1 instances with a graph-learning-strength axis.
+
+    ``labels`` carries the two-moons cluster of each agent so the sweep can
+    report how much learned weight stays on intra-cluster candidate edges.
+    """
+
+    W: np.ndarray          # (T, n, n) candidate edge weights
+    P: np.ndarray          # (T, n, n) initial stochastic mixing matrices
+    adj: np.ndarray        # (T, n, n) bool candidate support
+    theta_sol: np.ndarray  # (T, n, p)
+    c: np.ndarray          # (T, n)
+    alpha: np.ndarray      # (T,)
+    eta: np.ndarray        # (T,)  graph-learning rate (0 = frozen graph)
+    lam: np.ndarray        # (T,)  simplex-projection temperature
+    targets: np.ndarray    # (T, n, p)
+    labels: np.ndarray     # (T, n) two-moons cluster ids
+    seed: np.ndarray       # (T,)
+
+    @property
+    def n_trials(self) -> int:
+        return self.W.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class JointSweepResult:
+    """Per-trial trajectories from one vmapped joint sweep."""
+
+    trials: JointTrials
+    objective_hist: np.ndarray   # (T, sweeps) Q_MP under the candidate W
+    err_hist: np.ndarray         # (T, sweeps) mean L2 error to targets
+    intra_mass_hist: np.ndarray  # (T, sweeps) learned weight share on
+    #                              intra-cluster candidate edges
+    theta_final: np.ndarray      # (T, n, p)
+    P_final: np.ndarray          # (T, n, n) learned mixing matrices
+
+
+def joint_mean_estimation_trials(seeds: Sequence[int],
+                                 alphas: Sequence[float],
+                                 etas: Sequence[float],
+                                 lams: Sequence[float] = (1.0,),
+                                 n: int = 100, eps: float = 1.0
+                                 ) -> JointTrials:
+    """Cartesian (seed × alpha × eta × lam) grid of §5.1 instances for the
+    joint sweep — ``etas`` is the graph-learning-strength axis."""
+    Ws, Ps, adjs, sols, cs, als, ets, lms, tgts, lbls, sds = (
+        [] for _ in range(11))
+    for seed in seeds:
+        g, data, targets, _ = mean_estimation_problem(n=n, eps=eps,
+                                                      seed=seed)
+        W = np.asarray(g.W, np.float64)
+        P = W / W.sum(axis=1)[:, None]
+        sol = np.asarray(solitary_mean(data), np.float32)
+        conf = np.asarray(confidences_from_counts(data.counts), np.float32)
+        labels = (targets < 0).astype(np.int32)
+        for alpha, eta, lam in itertools.product(alphas, etas, lams):
+            Ws.append(W.astype(np.float32))
+            Ps.append(P.astype(np.float32))
+            adjs.append(W > 0)
+            sols.append(sol)
+            cs.append(conf)
+            als.append(np.float32(alpha))
+            ets.append(np.float32(eta))
+            lms.append(np.float32(lam))
+            tgts.append(targets[:, None].astype(np.float32))
+            lbls.append(labels)
+            sds.append(seed)
+    return JointTrials(np.stack(Ws), np.stack(Ps), np.stack(adjs),
+                       np.stack(sols), np.stack(cs), np.asarray(als),
+                       np.asarray(ets), np.asarray(lms), np.stack(tgts),
+                       np.stack(lbls), np.asarray(sds, np.int64))
+
+
+@partial(jax.jit, static_argnames=("sweeps", "graph_every", "backend"))
+def _joint_sweep_prog(P, W, adj, sol, c, alpha, eta, lam, targets, intra, *,
+                      sweeps: int, graph_every: int,
+                      backend: Optional[ReproBackend]):
+    mix = resolve("mix", backend)
+    reweight = resolve("edge_reweight", backend)
+
+    def one_trial(P0, W, adj, sol, c, alpha, eta, lam, targets, intra):
+        mu = (1.0 - alpha) / alpha
+
+        def step(carry, t):
+            """One mix iterate + (every graph_every-th step) a graph step."""
+            def do_graph(Pr):
+                """Re-estimate all rows from current pairwise distances."""
+                diff = theta[:, None, :] - theta[None, :, :]
+                d = jnp.where(adj, jnp.sum(diff * diff, axis=-1),
+                              DEAD_DISTANCE)
+                return reweight(d, Pr, adj, eta=eta, lam=lam)
+
+            theta, Pr = carry
+            A_mix, b = mp_mix_operator(Pr, c, alpha)
+            theta = mix(theta, sol, A_mix, b)
+            # the predicate is batch-invariant, so under vmap this stays a
+            # real cond: the O(n^2 p) distance matrix + projection only run
+            # on graph rounds (same pattern as the scenario engines)
+            Pr = jax.lax.cond((t + 1) % graph_every == 0, do_graph,
+                              lambda Pr: Pr, Pr)
+            # Q_MP under the fixed candidate W (mp_objective assumes a
+            # symmetric W; the learned Pr is tracked via intra-mass instead)
+            # — this also keeps the eta = 0 column an exact run_mp_sweep
+            # anchor for the objective, not just theta/err
+            obj = mp_objective(theta, sol, W, c, mu)
+            err = jnp.mean(jnp.sum((theta - targets) ** 2, axis=-1))
+            mass = jnp.sum(Pr * intra) / jnp.maximum(jnp.sum(Pr), 1e-30)
+            return (theta, Pr), (obj, err, mass)
+
+        (theta, Pr), (objs, errs, masses) = jax.lax.scan(
+            step, (sol, P0), jnp.arange(sweeps))
+        return theta, Pr, objs, errs, masses
+
+    return jax.vmap(one_trial)(P, W, adj, sol, c, alpha, eta, lam, targets,
+                               intra)
+
+
+def run_joint_sweep(trials: JointTrials, sweeps: int = 300,
+                    graph_every: int = 10,
+                    backend: Optional[ReproBackend] = None
+                    ) -> JointSweepResult:
+    """Synchronous joint MP + graph learning on every trial at once.
+
+    Each iterate is one Eq. (5) "mix" op under the *current* learned
+    mixing matrix, followed (every ``graph_every`` iterates) by the
+    "edge_reweight" op on the dense candidate rows — the dense mirror of
+    ``simulate.engines.run_joint_scenario``'s alternation, vmapped over the
+    (seed × alpha × eta × lam) grid in one jitted call.  Trials with
+    ``eta == 0`` reproduce :func:`run_mp_sweep` exactly (the blend is the
+    identity), so the frozen-graph column doubles as a regression anchor.
+    """
+    intra = (trials.labels[:, :, None] == trials.labels[:, None, :]) \
+        & trials.adj
+    theta, Pf, objs, errs, masses = _joint_sweep_prog(
+        jnp.asarray(trials.P), jnp.asarray(trials.W),
+        jnp.asarray(trials.adj), jnp.asarray(trials.theta_sol),
+        jnp.asarray(trials.c), jnp.asarray(trials.alpha),
+        jnp.asarray(trials.eta), jnp.asarray(trials.lam),
+        jnp.asarray(trials.targets), jnp.asarray(intra, jnp.float32),
+        sweeps=sweeps, graph_every=graph_every, backend=backend)
+    return JointSweepResult(trials, np.asarray(objs), np.asarray(errs),
+                            np.asarray(masses), np.asarray(theta),
+                            np.asarray(Pf))
 
 
 # ---------------------------------------------------------------------------

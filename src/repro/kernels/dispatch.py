@@ -398,6 +398,33 @@ def _admm_edge_pallas(interpret):
 
 
 # ---------------------------------------------------------------------------
+# edge_reweight — local collaboration-graph re-estimation (Zantedeschi et
+# al. 2019): sparse simplex projection of per-slot dissimilarities, blended
+# into the current row-stochastic weights:
+#   (d (B, k), w (B, k), live (B, k) bool, *, eta, lam) -> (B, k)
+#   out = (1 - eta) * w + eta * proj_simplex(-d / (2 lam), live)
+# ---------------------------------------------------------------------------
+
+
+register("edge_reweight", "reference")(ref.edge_reweight)
+# The sort/cumsum projection already lowers to one fused XLA program; the
+# reference expression IS the fused form (same precedent as
+# neighbor_aggregate), and registering the identical callable keeps the
+# joint engines' bit-for-bit trajectory match intact whichever name
+# resolves.
+register("edge_reweight", "xla")(ref.edge_reweight)
+
+
+@register("edge_reweight", "xla_sharded")
+def _edge_reweight_xla_sharded(d, w, live, *, eta: float, lam: float):
+    """Agent-row-sharded re-weighting over the sim mesh (the projection is
+    row-local, so no collective); per-shard math is the reference
+    expression, so parity with it is exact."""
+    return _sh.sharded_edge_reweight(d, w, live, eta=eta, lam=lam,
+                                     inner=ref.edge_reweight)
+
+
+# ---------------------------------------------------------------------------
 # neighbor_aggregate — per-agent slot reduction shared by the dense and
 # sparse engines:  (w (k,), theta (k, p)) -> (p,)
 # ---------------------------------------------------------------------------

@@ -87,6 +87,51 @@ def flash_attention(q, k, v, *, window: Optional[int] = None):
     return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
 
 
+def simplex_project_rows(v, live):
+    """Euclidean projection of each row of ``v`` onto the probability
+    simplex restricted to its ``live`` slots (Held et al. 1974 / Duchi et
+    al. 2008 sort-and-threshold form, vectorized over rows).
+
+    v, live: (..., k).  Dead slots are excluded from the support and get an
+    exact 0; rows with no live slot return all zeros.
+    """
+    f = jnp.float32
+    vm = jnp.where(live, v.astype(f), NEG_INF)                 # (..., k)
+    u = -jnp.sort(-vm, axis=-1)                                # descending
+    css = jnp.cumsum(u, axis=-1)
+    r = jnp.arange(1, v.shape[-1] + 1, dtype=f)
+    cond = u * r > css - 1.0                                   # support test
+    rho_n = jnp.sum(cond, axis=-1).astype(jnp.int32)           # support size
+    idx = jnp.maximum(rho_n - 1, 0)
+    tau = (jnp.take_along_axis(css, idx[..., None], axis=-1)[..., 0] - 1.0) \
+        / jnp.maximum(rho_n, 1).astype(f)
+    out = jnp.maximum(vm - tau[..., None], 0.0)
+    return jnp.where(live & (rho_n > 0)[..., None], out, 0.0)
+
+
+def edge_reweight(d, w, live, *, eta: float, lam: float):
+    """Local collaboration-graph re-estimation step (Zantedeschi et al.
+    2019, arXiv:1901.08460, graph block of the alternating scheme).
+
+    Each agent row solves  min_{w in simplex(live)}  <w, d> + lam ||w||^2
+    over its live candidate slots — the closed form is the sparse simplex
+    projection of ``-d / (2 lam)`` — and relaxes toward it with step
+    ``eta``:  w' = (1 - eta) w + eta proj(-d / (2 lam)).
+
+    d: (..., k) per-slot dissimilarities (squared model distances; ignored
+    at dead slots); w: (..., k) current row-stochastic weights; live:
+    (..., k) bool candidate mask.  Returns the (..., k) updated weights —
+    convex blending keeps each live row on the simplex, slots outside the
+    live mask are forced to an exact 0, and small ``lam`` yields exact
+    zeros inside it (the sparsity the projection is chosen for).  Rows with
+    no live slot come back all-zero.
+    """
+    f = jnp.float32
+    target = simplex_project_rows(-d.astype(f) / (2.0 * lam), live)
+    out = (1.0 - eta) * w.astype(f) + eta * target
+    return jnp.where(live, out, 0.0).astype(w.dtype)
+
+
 def admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
                      l_own_j, l_nbr_i_of_j, rho: float):
     """Fused CL-ADMM Z + dual update for a batch of edges (paper steps 2-3).

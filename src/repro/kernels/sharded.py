@@ -126,6 +126,28 @@ def sharded_admm_edge(
     return tuple(out[:n_edges] for out in run(*padded))
 
 
+def sharded_edge_reweight(d, w, live, *, eta, lam, inner: Callable, mesh=None):
+    """Collaboration-graph re-estimation with the agent (row) axis sharded.
+
+    d, w: (n, k); live: (n, k) bool -> (n, k).  The simplex projection is
+    row-local (each agent re-estimates only its own outgoing weights), so
+    no collective is needed: every shard runs ``inner`` — any single-device
+    edge_reweight impl — on its row block.  Pad rows carry an all-False
+    live mask and come back all-zero.
+    """
+    mesh = make_sim_mesh() if mesh is None else mesh
+    n = d.shape[0]
+    rows = mesh_shards(mesh) * math.ceil(n / mesh_shards(mesh))
+
+    def block(d_blk, w_blk, live_blk):
+        return inner(d_blk, w_blk, live_blk, eta=eta, lam=lam)
+
+    spec = P(AGENT_AXIS)
+    run = shard_map_1d(block, mesh, in_specs=(spec,) * 3, out_specs=spec)
+    padded = [_pad_rows(a, rows) for a in (d, w, live)]
+    return run(*padded)[:n]
+
+
 def sharded_graph_mix(theta, theta_sol, A, b, *, inner: Callable, mesh=None):
     """Dense Eq. (5) mix with the agent (row) axis sharded over the sim mesh.
 

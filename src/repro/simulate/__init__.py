@@ -7,18 +7,21 @@ staleness, stragglers, churn, partitions).
 """
 
 from .topology import (SparseTopology, ring_topology,
-                       random_geometric_topology, cluster_topology)
+                       random_geometric_topology, cluster_topology,
+                       planted_partition_topology)
 from .scheduler import (NetworkConditions, EventBatch, EventStream,
                         draw_wakeups, draw_slots, draw_events,
                         straggler_rates, churn_step, precompute_event_stream,
                         stream_totals)
-from .engines import (SparseTrace, SimTrace, CLSimTrace, SparseADMMState,
-                      SparseCLTrace, sparse_async_gossip, sparse_sync_mp,
-                      run_mp_scenario, run_cl_scenario, sparse_async_admm,
+from .engines import (SparseTrace, SimTrace, CLSimTrace, JointSimTrace,
+                      SparseADMMState, SparseCLTrace, sparse_async_gossip,
+                      sparse_sync_mp, run_mp_scenario, run_cl_scenario,
+                      run_joint_scenario, sparse_async_admm,
                       init_sparse_admm)
-from .partition import (GraphPartition, ShardedSimTrace, greedy_partition,
-                        block_partition, edge_cut, run_mp_scenario_sharded,
-                        run_cl_scenario_sharded, default_local_batch,
+from .partition import (GraphPartition, ShardedSimTrace, JointShardedTrace,
+                        greedy_partition, block_partition, edge_cut,
+                        run_mp_scenario_sharded, run_cl_scenario_sharded,
+                        run_joint_scenario_sharded, default_local_batch,
                         default_local_events)
 from .scenarios import Scenario, SCENARIOS, get_scenario, list_scenarios
 

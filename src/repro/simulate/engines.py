@@ -14,11 +14,13 @@ Two operating modes:
   ``core.model_propagation.async_gossip`` / ``core.collaborative.async_admm``
   bit-for-bit given the same seed (tests/test_simulate.py).
 
-* **scenario** (``run_mp_scenario``): batched wake-ups from the scheduler
-  with message drops, staleness, stragglers, churn and partitions.  All
-  communication scatters of a round land before any model update reads, so
-  batch collisions are deterministic (duplicate updates compute identical
-  values from the same post-communication state).
+* **scenario** (``run_mp_scenario`` / ``run_cl_scenario`` /
+  ``run_joint_scenario``): batched wake-ups from the scheduler with message
+  drops, staleness, stragglers, churn and partitions.  All communication
+  scatters of a round land before any model update reads, so batch
+  collisions are deterministic (duplicate updates compute identical values
+  from the same post-communication state).  The joint engine additionally
+  re-estimates the collaboration graph online (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -31,11 +33,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph_learning import prune_rows, reweight_rows
 from repro.core.losses import AgentData
 from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
-                               batched_model_update, neighbor_aggregate,
-                               quadratic_primal_core, record_chunks,
-                               sample_event)
+                               batched_model_update, live_slots,
+                               neighbor_aggregate, quadratic_primal_core,
+                               record_chunks, sample_event)
 from repro.kernels.dispatch import ReproBackend, resolve
 from . import scheduler as sched
 from .scheduler import (EventStream, NetworkConditions,
@@ -580,3 +583,173 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
                       delivered=delivered, dropped=dropped,
                       rounds=total_rounds, events=total_rounds * batch,
                       invalid=invalid, final=st)
+
+
+# ---------------------------------------------------------------------------
+# Joint model + collaboration-graph learning (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JointSimTrace(SimTrace):
+    """SimTrace plus the graph-learning outputs.
+
+    final_w / final_live: (n, k) learned row-stochastic weights and the
+        surviving-candidate mask (live == candidate mask when pruning is
+        off);
+    live_edges_hist: (n_records,) live directed-slot count per snapshot;
+    suppressed: deliveries voided because the *receiver* had pruned the
+        edge — a subset of ``delivered`` (the stream-level accounting
+        invariant is unchanged).
+    """
+
+    final_w: Optional[np.ndarray] = None
+    final_live: Optional[np.ndarray] = None
+    live_edges_hist: Optional[np.ndarray] = None
+    suppressed: int = 0
+
+
+@partial(jax.jit, static_argnames=("alpha", "eta_graph", "lam", "graph_every",
+                                   "prune_eps", "backend"))
+def _joint_scenario_scan(w0, live0, theta0, K0, c, theta_sol, ev, ts, *,
+                         alpha: float, eta_graph: float, lam: float,
+                         graph_every: int, prune_eps, backend=None):
+    """Batched-event joint MP + graph-learning rounds over a precomputed
+    event stream (Zantedeschi-style alternation; DESIGN.md §13).
+
+    One round = the MP-gossip round of ``_scenario_scan`` — communication
+    scatters, then the shared Eq. (6) update — except that the mixing
+    weights are the *learned* row-stochastic ``w`` carried in the scan
+    state rather than the frozen ``tabs.nbr_p``, and deliveries into a
+    pruned receiver slot are voided (counted in ``suppressed``).  Every
+    ``graph_every``-th round ends with the graph step
+    (``core.graph_learning.reweight_rows`` + optional ``prune_rows``) over
+    all agent rows.
+
+    With ``eta_graph == 0`` (a static argument) the graph step is compiled
+    out and ``w`` stays the initial ``nbr_p`` array: the round body is the
+    identical arithmetic of ``_scenario_scan``, which is what makes the
+    rate-0 trajectory bit-for-bit equal to ``run_mp_scenario``'s
+    (tests/test_joint.py).
+    """
+    n = theta0.shape[0]
+    prune = eta_graph > 0.0 and prune_eps is not None
+
+    def round_fn(carry, inp):
+        theta, K, theta_prev, w, live, suppressed = carry
+        theta_in = theta
+        ev_t, t = inp
+
+        # --- communication: all scatters land before any update reads
+        msg_i = jnp.where(ev_t.stale_ij[:, None], theta_prev[ev_t.i],
+                          theta[ev_t.i])
+        msg_j = jnp.where(ev_t.stale_ji[:, None], theta_prev[ev_t.j],
+                          theta[ev_t.j])
+        if prune:
+            ok_ij = ev_t.deliver_ij & live[ev_t.j, ev_t.r]
+            ok_ji = ev_t.deliver_ji & live[ev_t.i, ev_t.s]
+            suppressed = suppressed \
+                + jnp.sum(ev_t.deliver_ij & ~ok_ij) \
+                + jnp.sum(ev_t.deliver_ji & ~ok_ji)
+        else:
+            ok_ij, ok_ji = ev_t.deliver_ij, ev_t.deliver_ji
+        row_j = jnp.where(ok_ij, ev_t.j, n)
+        row_i = jnp.where(ok_ji, ev_t.i, n)
+        K = K.at[row_j, ev_t.r].set(msg_i, mode="drop")
+        K = K.at[row_i, ev_t.s].set(msg_j, mode="drop")
+
+        # --- update: Eq. (6) under the current learned weights
+        upd = jnp.concatenate([ev_t.i, ev_t.j])
+        got = jnp.concatenate([ok_ji, ok_ij])
+        new = batched_model_update(w[upd], K[upd], c[upd], theta_sol[upd],
+                                   alpha, backend)
+        theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
+
+        # --- graph step (compiled out entirely at rate 0)
+        if eta_graph > 0.0:
+            def do_graph(w, live):
+                w2 = reweight_rows(theta, K, w, live, eta=eta_graph,
+                                   lam=lam, backend=backend)
+                if prune_eps is not None:
+                    return prune_rows(w2, live, prune_eps)
+                return w2, live
+
+            w, live = jax.lax.cond(
+                (t + 1) % graph_every == 0, do_graph,
+                lambda w, live: (w, live), w, live)
+
+        return (theta, K, theta_in, w, live, suppressed), None
+
+    def outer(carry, inp):
+        carry, _ = jax.lax.scan(round_fn, carry, inp)
+        theta, _, _, w, live, _ = carry
+        return carry, (theta, jnp.sum(live & (w > 0)))
+
+    carry0 = (theta0, K0, theta0, w0, live0, jnp.int32(0))
+    return jax.lax.scan(outer, carry0, (ev, ts))
+
+
+def run_joint_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
+                       conditions: NetworkConditions, rounds: int,
+                       batch: int, seed: int = 0, record_every: int = 10, *,
+                       eta_graph: float = 0.0, lam: float = 1.0,
+                       graph_every: int = 1,
+                       prune_eps: Optional[float] = None,
+                       stream: Optional[EventStream] = None,
+                       backend: Optional[ReproBackend] = None
+                       ) -> JointSimTrace:
+    """Joint MP gossip + collaboration-graph learning under a fault scenario
+    (Zantedeschi et al. 2019 alternation on the DJAM-style asynchronous
+    substrate; DESIGN.md §13).
+
+    The same batched-event machinery as ``run_mp_scenario`` — identical RNG
+    schedule, same ``NetworkConditions`` — with the topology itself now
+    state: the *candidate* slot tables stay frozen (wake-ups remain uniform
+    over the candidate neighbors, so the event stream is precomputed and
+    replayable), while the mixing weights start at ``tabs.nbr_p`` and are
+    re-estimated every ``graph_every`` rounds from local model distances
+    (rate ``eta_graph``, sparsity temperature ``lam``).  ``prune_eps``
+    permanently drops slots whose weight falls below it — the edge churn
+    the partitioned engine's halo re-compaction keys off.
+
+    ``eta_graph=0`` reproduces ``run_mp_scenario`` bit-for-bit on the
+    identical event schedule (the graph step is compiled out).  The horizon
+    follows the shared recording policy (``core.sparse.record_chunks``).
+    """
+    tabs = topo.device_tables()
+    n = topo.n
+    theta_sol = jnp.asarray(theta_sol, jnp.float32).reshape(n, -1)
+    c = jnp.asarray(c, jnp.float32)
+    record_every, n_rec = record_chunks(rounds, record_every)
+    total_rounds = n_rec * record_every
+    if stream is None:
+        stream = precompute_event_stream(
+            tabs, jnp.asarray(topo.partition_halves()), conditions, batch,
+            seed, total_rounds)
+    else:
+        if stream.i.shape[0] != total_rounds:
+            raise ValueError(
+                f"stream covers {stream.i.shape[0]} rounds but the clamped "
+                f"horizon is {total_rounds}")
+        batch = int(stream.i.shape[1])
+
+    theta0, K0 = _mp_warm_start(tabs, theta_sol)
+    w0 = tabs.nbr_p
+    live0 = live_slots(tabs.deg_count, topo.k_max)
+    ev = _reshape_stream(stream, n_rec, record_every)
+    ts = jnp.arange(total_rounds, dtype=jnp.int32).reshape(
+        n_rec, record_every)
+    carry, (hist, live_hist) = _joint_scenario_scan(
+        w0, live0, theta0, K0, c, theta_sol, ev, ts, alpha=alpha,
+        eta_graph=eta_graph, lam=lam, graph_every=graph_every,
+        prune_eps=prune_eps, backend=backend)
+    theta, K, _, w, live, suppressed = carry
+    delivered, dropped, invalid = stream_totals(stream)
+    active_hist = np.asarray(stream.active_frac).reshape(
+        n_rec, record_every)[:, -1]
+    return JointSimTrace(
+        theta_hist=np.asarray(hist), active_hist=active_hist,
+        delivered=delivered, dropped=dropped, rounds=total_rounds,
+        events=total_rounds * batch, invalid=invalid,
+        final_w=np.asarray(w), final_live=np.asarray(live),
+        live_edges_hist=np.asarray(live_hist), suppressed=int(suppressed))

@@ -50,8 +50,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.graph_learning import prune_rows, reweight_rows
 from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
-                               batched_model_update, record_chunks)
+                               batched_model_update, live_slots,
+                               record_chunks)
 from repro.launch.sim_mesh import (AGENT_AXIS, halo_exchange_fn,
                                    make_sim_mesh, mesh_shards, shard_map_1d)
 from .engines import (SimTrace, _reshape_stream, init_sparse_admm)
@@ -149,11 +151,19 @@ def block_partition(topo: SparseTopology, n_shards: int) -> np.ndarray:
     return (np.arange(topo.n) // m).astype(np.int32)
 
 
-def _directed_edges(tabs):
-    src = np.repeat(np.arange(tabs.n, dtype=np.int64), tabs.deg_count)
-    live = np.arange(tabs.k_max)[None, :] < tabs.deg_count[:, None]
-    dst = tabs.nbr_idx[live].astype(np.int64)
-    return src, dst
+def _directed_edges(tabs, live=None):
+    """Directed (receiver, sender) pairs of the candidate slot tables.
+
+    src = the row owner (the agent whose slot it is — the *receiver* of
+    messages on that slot), dst = the slot's neighbor (the sender).  An
+    optional (n, k_max) bool ``live`` mask restricts to surviving slots
+    (joint graph learning prunes slots; DESIGN.md §13).
+    """
+    cand = np.arange(tabs.k_max)[None, :] < tabs.deg_count[:, None]
+    if live is not None:
+        cand = cand & np.asarray(live, bool)
+    rows, slots = np.nonzero(cand)
+    return rows.astype(np.int64), tabs.nbr_idx[rows, slots].astype(np.int64)
 
 
 def edge_cut(topo: SparseTopology, assignment: np.ndarray) -> int:
@@ -201,7 +211,20 @@ class GraphPartition:
 
     @classmethod
     def build(cls, topo: SparseTopology, assignment: np.ndarray,
-              n_shards: Optional[int] = None) -> "GraphPartition":
+              n_shards: Optional[int] = None,
+              live: Optional[np.ndarray] = None) -> "GraphPartition":
+        """Shard/halo layout of ``topo`` under ``assignment``.
+
+        ``live`` (optional, (n, k_max) bool) restricts the layout to the
+        surviving directed slots of a joint graph-learning run: the halo
+        of a shard then holds only the remote *senders* some local live
+        slot still reads, and the boundary only the local agents some
+        remote live slot still needs — the halo re-compaction the joint
+        sharded engine performs when enough cross edges have been pruned
+        (DESIGN.md §13).  The local block layout (owner / local_pos /
+        perm_slot) depends only on ``assignment``, so re-compacted layouts
+        are drop-in replacements for each other's sharded state.
+        """
         tabs = topo.tables
         n = topo.n
         owner = np.asarray(assignment, np.int32)
@@ -218,13 +241,16 @@ class GraphPartition:
         local_ids[owner, local_pos] = np.arange(n, dtype=np.int32)
         perm_slot = owner.astype(np.int64) * m + local_pos
 
-        src, dst = _directed_edges(tabs)
+        src, dst = _directed_edges(tabs, live)
         cross = owner[src] != owner[dst]
         cut = int(cross.sum()) // 2
 
-        # boundary: local agents with any cross edge, id-sorted per shard
+        # boundary: local agents some remote live slot reads (the *senders*
+        # published each round), id-sorted per shard.  For the symmetric
+        # live=None candidate tables this is exactly "local agents with any
+        # cross edge".
         is_bnd = np.zeros(n, bool)
-        is_bnd[src[cross]] = True
+        is_bnd[dst[cross]] = True
         bnd_lists = [np.where(is_bnd & (owner == q))[0] for q in range(P_)]
         B = max((len(b) for b in bnd_lists), default=0)
         bnd_pos = np.zeros((P_, B), np.int32)
@@ -699,3 +725,307 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
         n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
         local_batch=U, overflow=int(np.asarray(overflow).sum()))
+
+
+# ---------------------------------------------------------------------------
+# Sharded joint model + collaboration-graph learning (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JointShardedTrace(ShardedSimTrace):
+    """ShardedSimTrace plus graph-learning outputs and re-compaction stats.
+
+    Fields mirror ``engines.JointSimTrace``; ``recompactions`` counts halo
+    re-compactions performed (each shrinks ``halo_size`` to the live cross
+    edges at that point — the reported ``halo_size`` is the final one).
+    """
+
+    final_w: Optional[np.ndarray] = None
+    final_live: Optional[np.ndarray] = None
+    live_edges_hist: Optional[np.ndarray] = None
+    suppressed: int = 0
+    recompactions: int = 0
+
+
+def _slice_stream(stream: EventStream, lo: int, hi: int):
+    """Rounds [lo, hi) of a materialized stream (active_frac dropped)."""
+    return jax.tree_util.tree_map(lambda x: x[lo:hi],
+                                  stream._replace(active_frac=None))
+
+
+def _live_cross_edges(tabs, owner: np.ndarray, live: np.ndarray) -> int:
+    """Directed live candidate slots whose sender lives on another shard
+    (the same edge enumeration ``GraphPartition.build`` compacts halos
+    from, so the re-compaction trigger and the rebuild always agree)."""
+    src, dst = _directed_edges(tabs, live)
+    return int((owner[src] != owner[dst]).sum())
+
+
+@partial(jax.jit,
+         static_argnames=("mesh", "alpha", "eta_graph", "lam", "graph_every",
+                          "prune_eps", "m", "H", "E", "U", "n_rec",
+                          "record_every", "exchange", "backend"))
+def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
+                        live0, c, sol, fetch, bnd_pos, halo_src_shard,
+                        halo_src_pos, *, alpha: float, eta_graph: float,
+                        lam: float, graph_every: int, prune_eps, m: int,
+                        H: int, E: int, U: int, n_rec: int,
+                        record_every: int, exchange: str, backend=None):
+    """One jitted *segment* of the sharded joint engine.
+
+    The MP round structure of ``_sharded_scenario_scan`` with the mixing
+    weights ``w`` and candidate-liveness ``live`` promoted to row-sharded
+    scan state, the shared graph step (``core.graph_learning``) applied to
+    each shard's local rows every ``graph_every``-th global round, and
+    deliveries into pruned receiver slots voided (counted in
+    ``suppressed``).  ``theta_prev`` (the previous round's round-start
+    models) rides the carry so the driver can rebuild the stale-payload
+    ext buffer after a halo re-compaction changes ``H`` between segments.
+    """
+    P_ = mesh_shards(mesh)
+    batch = stream.i.shape[-1]
+    prune = eta_graph > 0.0 and prune_eps is not None
+
+    def block_fn(ev, ts_blk, theta0_blk, K0_blk, thp0_blk, w0_blk, live0_blk,
+                 c_blk, sol_blk, fetch_blk, bnd_blk, hsrc_blk, hpos_blk):
+        fetch_q = fetch_blk[0]
+        bnd = bnd_blk[0]
+        hsrc, hpos = hsrc_blk[0], hpos_blk[0]
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
+
+        def round_fn(carry, inp):
+            theta, K, theta_prev, w, live, ext_prev, suppressed, overflow \
+                = carry
+            ev_t, t = inp
+            theta_in = theta
+            ext = exchange_halo(theta)
+
+            # --- compact to the events touching this shard (O(E) ~ 2B/P)
+            rel = (fetch_q[ev_t.i] < m) | (fetch_q[ev_t.j] < m)
+            sel = jnp.nonzero(rel, size=E, fill_value=batch)[0]
+            i = _take_padded(ev_t.i, sel, 0)
+            j = _take_padded(ev_t.j, sel, 0)
+            s = _take_padded(ev_t.s, sel, 0)
+            r = _take_padded(ev_t.r, sel, 0)
+            d_ij = _take_padded(ev_t.deliver_ij, sel, False)
+            d_ji = _take_padded(ev_t.deliver_ji, sel, False)
+            st_ij = _take_padded(ev_t.stale_ij, sel, False)
+            st_ji = _take_padded(ev_t.stale_ji, sel, False)
+            overflow += jnp.maximum(jnp.sum(rel) - E, 0)
+
+            # --- communication (receiver-side pruning voids a delivery)
+            f_i, f_j = fetch_q[i], fetch_q[j]
+            if prune:
+                lv_j = live[jnp.minimum(f_j, m - 1), r] & (f_j < m)
+                lv_i = live[jnp.minimum(f_i, m - 1), s] & (f_i < m)
+                ok_ij = d_ij & lv_j
+                ok_ji = d_ji & lv_i
+                suppressed = suppressed \
+                    + jnp.sum(d_ij & (f_j < m) & ~lv_j) \
+                    + jnp.sum(d_ji & (f_i < m) & ~lv_i)
+            else:
+                ok_ij, ok_ji = d_ij, d_ji
+            msg_i = jnp.where(st_ij[:, None], ext_prev[f_i], ext[f_i])
+            msg_j = jnp.where(st_ji[:, None], ext_prev[f_j], ext[f_j])
+            row_j = jnp.where(ok_ij & (f_j < m), f_j, m)
+            row_i = jnp.where(ok_ji & (f_i < m), f_i, m)
+            K = K.at[row_j, r].set(msg_i, mode="drop")
+            K = K.at[row_i, s].set(msg_j, mode="drop")
+
+            # --- update: compact local endpoints, shared Eq. (6) step
+            # under the current learned weights
+            f_u = jnp.concatenate([f_i, f_j])
+            got = jnp.concatenate([ok_ji, ok_ij]) & (f_u < m)
+            usel = jnp.nonzero(got, size=U, fill_value=2 * E)[0]
+            lu = _take_padded(f_u, usel, m)
+            lu_c = jnp.minimum(lu, m - 1)
+            new = batched_model_update(w[lu_c], K[lu_c], c_blk[lu_c],
+                                       sol_blk[lu_c], alpha, backend)
+            theta = theta.at[jnp.where(lu < m, lu, m)].set(new, mode="drop")
+            overflow += jnp.maximum(jnp.sum(got) - U, 0)
+
+            # --- graph step over this shard's local rows (compiled out at
+            # rate 0; identical row arithmetic to the single-device engine)
+            if eta_graph > 0.0:
+                def do_graph(w, live):
+                    w2 = reweight_rows(theta, K, w, live, eta=eta_graph,
+                                       lam=lam, backend=backend)
+                    if prune_eps is not None:
+                        return prune_rows(w2, live, prune_eps)
+                    return w2, live
+
+                w, live = jax.lax.cond(
+                    (t + 1) % graph_every == 0, do_graph,
+                    lambda w, live: (w, live), w, live)
+
+            return (theta, K, theta_in, w, live, ext, suppressed,
+                    overflow), None
+
+        def outer(carry, inp):
+            carry, _ = jax.lax.scan(round_fn, carry, inp)
+            theta, _, _, w, live = carry[:5]
+            return carry, (theta, jnp.sum(live & (w > 0))[None])
+
+        ext_prev0 = exchange_halo(thp0_blk)
+        carry0 = (theta0_blk, K0_blk, thp0_blk, w0_blk, live0_blk, ext_prev0,
+                  jnp.int32(0), jnp.int32(0))
+        carry, (hist, live_hist) = jax.lax.scan(outer, carry0,
+                                                (ev, ts_blk))
+        theta, K, theta_prev, w, live, _, suppressed, overflow = carry
+        return (hist, live_hist, theta, K, theta_prev, w, live,
+                suppressed[None], overflow[None])
+
+    ev_scan = _reshape_stream(stream, n_rec, record_every)
+    row = P(AGENT_AXIS)
+    per_shard = P(AGENT_AXIS, None)
+    run = shard_map_1d(
+        block_fn, mesh,
+        in_specs=(_scan_specs(P(), ev_scan), P()) + (row,) * 7
+        + (per_shard,) * 4,
+        out_specs=(P(None, AGENT_AXIS, None), P(None, AGENT_AXIS))
+        + (row,) * 5 + (P(AGENT_AXIS),) * 2)
+    return run(ev_scan, ts, theta0, K0, theta_prev0, w0, live0, c, sol,
+               fetch, bnd_pos, halo_src_shard, halo_src_pos)
+
+
+def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
+                               alpha: float, conditions: NetworkConditions,
+                               rounds: int, batch: int, seed: int = 0,
+                               record_every: int = 10, *,
+                               eta_graph: float = 0.0, lam: float = 1.0,
+                               graph_every: int = 1,
+                               prune_eps: Optional[float] = None,
+                               recompact_every: Optional[int] = None,
+                               recompact_frac: float = 0.25,
+                               n_shards: Optional[int] = None, mesh=None,
+                               assignment: Optional[np.ndarray] = None,
+                               local_batch: Optional[int] = None,
+                               exchange: str = "all_gather",
+                               partition_seed: int = 0,
+                               stream: Optional[EventStream] = None,
+                               backend=None) -> JointShardedTrace:
+    """``engines.run_joint_scenario`` over a graph partitioned across the
+    sim mesh (DESIGN.md §13).
+
+    Same scenario semantics and RNG schedule as the single-device joint
+    engine — ``trace.theta_hist`` (and the learned ``final_w``/``final_live``)
+    reproduce it exactly whenever ``trace.overflow`` is 0.  The learned
+    weights and candidate-liveness are row-sharded scan state; the graph
+    step is row-local, so it needs no extra collective.
+
+    **Halo re-compaction**: with pruning enabled (``prune_eps``) and a
+    ``recompact_every`` (rounds) cadence, the driver pauses between jitted
+    segments, measures how many *cross-shard* candidate slots the graph
+    step has pruned, and — once the live cross-edge count has dropped by
+    ``recompact_frac`` since the last layout — rebuilds the halo/boundary
+    tables restricted to live edges (``GraphPartition.build(live=...)``).
+    Pruning is monotone (``core.graph_learning.prune_rows``), so dropped
+    halo rows are never needed again and the trajectory is unaffected;
+    only the exchange volume shrinks.  ``rounds`` is first floored by the
+    shared recording policy; segment boundaries land on record chunks.
+    """
+    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
+    P_ = mesh_shards(mesh)
+    if assignment is None:
+        assignment = greedy_partition(topo, P_, seed=partition_seed)
+    elif int(np.max(assignment)) >= P_:
+        raise ValueError(
+            f"assignment uses shard {int(np.max(assignment))} but the mesh "
+            f"has only {P_} devices (start the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
+            f"fake host devices)")
+    owner = np.asarray(assignment, np.int32)
+    part = GraphPartition.build(topo, assignment, P_)
+    full_cut = part.edge_cut
+
+    tabs = topo.tables
+    n = topo.n
+    theta_sol = np.asarray(theta_sol, np.float32).reshape(n, -1)
+    c = np.asarray(c, np.float32)
+    record_every, n_rec = record_chunks(rounds, record_every)
+    total_rounds = n_rec * record_every
+
+    if stream is None:
+        stream = precompute_event_stream(
+            topo.device_tables(), jnp.asarray(topo.partition_halves()),
+            conditions, batch, seed, total_rounds)
+    else:
+        if stream.i.shape[0] != total_rounds:
+            raise ValueError(
+                f"stream covers {stream.i.shape[0]} rounds but the clamped "
+                f"horizon is {total_rounds}")
+        batch = int(stream.i.shape[1])
+
+    K0 = theta_sol[tabs.nbr_idx]                     # warm start (§3.2)
+    live0 = np.asarray(live_slots(tabs.deg_count, tabs.k_max))
+    theta = jnp.asarray(part.shard_rows(theta_sol))
+    K = jnp.asarray(part.shard_rows(K0))
+    theta_prev = theta
+    w = jnp.asarray(part.shard_rows(tabs.nbr_p))
+    live = jnp.asarray(part.shard_rows(live0))
+    c_sh = jnp.asarray(part.shard_rows(c))
+    sol_sh = jnp.asarray(part.shard_rows(theta_sol))
+    if local_batch is None:
+        E = default_local_events(batch, P_)
+        U = default_local_batch(batch, P_)
+    else:                      # explicit capacity: lossless event selection
+        E = batch
+        U = max(1, min(local_batch, 2 * batch))
+    U = min(U, 2 * E)
+
+    # segment schedule (record chunks per jitted call)
+    can_recompact = (eta_graph > 0.0 and prune_eps is not None
+                     and recompact_every is not None)
+    seg_rec = n_rec if not can_recompact else \
+        max(1, min(n_rec, recompact_every // record_every))
+    cross_at_compact = _live_cross_edges(tabs, owner, live0)
+
+    hists, live_hists = [], []
+    suppressed = overflow = recompactions = 0
+    done = 0
+    while done < n_rec:
+        seg = min(seg_rec, n_rec - done)
+        ev_seg = _slice_stream(stream, done * record_every,
+                               (done + seg) * record_every)
+        ts_seg = jnp.arange(done * record_every,
+                            (done + seg) * record_every,
+                            dtype=jnp.int32).reshape(seg, record_every)
+        (hist, live_hist, theta, K, theta_prev, w, live, sup, ovf) = \
+            _sharded_joint_scan(
+                mesh, ev_seg, ts_seg, theta, K, theta_prev, w, live,
+                c_sh, sol_sh, jnp.asarray(part.fetch),
+                jnp.asarray(part.bnd_pos),
+                jnp.asarray(part.halo_src_shard),
+                jnp.asarray(part.halo_src_pos), alpha=alpha,
+                eta_graph=eta_graph, lam=lam, graph_every=graph_every,
+                prune_eps=prune_eps, m=part.shard_size, H=part.halo_size,
+                E=E, U=U, n_rec=seg, record_every=record_every,
+                exchange=exchange, backend=backend)
+        hists.append(np.asarray(hist))
+        live_hists.append(np.asarray(live_hist).sum(axis=1))
+        suppressed += int(np.asarray(sup).sum())
+        overflow += int(np.asarray(ovf).sum())
+        done += seg
+        if done < n_rec and can_recompact and cross_at_compact > 0:
+            live_host = part.unshard_rows(np.asarray(live))
+            cur_cross = _live_cross_edges(tabs, owner, live_host)
+            if cur_cross <= (1.0 - recompact_frac) * cross_at_compact:
+                part = GraphPartition.build(topo, assignment, P_,
+                                            live=live_host)
+                cross_at_compact = cur_cross
+                recompactions += 1
+
+    delivered, dropped, invalid = stream_totals(stream)
+    active_hist = np.asarray(stream.active_frac).reshape(
+        n_rec, record_every)[:, -1]
+    return JointShardedTrace(
+        theta_hist=part.unshard_rows(np.concatenate(hists, axis=0)),
+        active_hist=active_hist, delivered=delivered, dropped=dropped,
+        rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
+        n_shards=P_, edge_cut=full_cut, halo_size=part.halo_size,
+        local_batch=U, overflow=overflow,
+        final_w=part.unshard_rows(np.asarray(w)),
+        final_live=part.unshard_rows(np.asarray(live)),
+        live_edges_hist=np.concatenate(live_hists),
+        suppressed=suppressed, recompactions=recompactions)

@@ -77,7 +77,12 @@ class EventBatch(NamedTuple):
 
 
 def straggler_rates(key, cond: NetworkConditions, n: int) -> jnp.ndarray:
-    """Per-agent base wake rates: 1.0, or straggler_factor for stragglers."""
+    """Per-agent base wake rates: 1.0, or straggler_factor for stragglers.
+
+    Non-uniform rates generalize the paper's unit-rate Poisson clocks
+    (§3.2): conditioned on a tick, the waking agent is categorical in the
+    rates, which is exactly what :func:`draw_wakeups` samples.
+    """
     if cond.straggler_frac <= 0.0:
         return jnp.ones((n,), jnp.float32)
     mask = jax.random.bernoulli(key, cond.straggler_frac, (n,))
@@ -104,7 +109,11 @@ def draw_wakeups(key, weights, batch: int):
 
 
 def draw_slots(key, i, deg_count) -> jnp.ndarray:
-    """Uniform neighbor slot per event (pi_i uniform over N_i).
+    """Uniform neighbor slot per event (pi_i uniform over N_i — the
+    neighbor-selection distribution of paper §3.2, also used for the §4.2
+    edge wake-ups; the joint engines keep it frozen over the *candidate*
+    slots so learned weights never perturb the event process,
+    DESIGN.md §13).
 
     Degree-0 wakers are clamped to slot 0 instead of ``deg - 1 = -1`` (the
     negative index would wrap into the last pad slot and fabricate a

@@ -148,6 +148,45 @@ def random_geometric_topology(n: int, k: int = 8,
     return _from_pairs(n, src, dst, groups)
 
 
+def planted_partition_topology(n: int, n_clusters: int = 2,
+                               k_intra: int = 6, k_inter: int = 2,
+                               seed: int = 0) -> SparseTopology:
+    """Planted-partition candidate graph for joint graph learning
+    (DESIGN.md §13): a ring inside each cluster (connectivity), ``k_intra``
+    random same-cluster links per agent, and ``k_inter`` random
+    *other*-cluster links per agent — the noise edges a graph learner
+    should drive to zero while keeping the intra-cluster ones.
+
+    Groups = planted cluster id (``tests/test_joint.py`` and
+    ``examples/joint_graph_demo.py`` score recovery against it).
+    """
+    rng = np.random.default_rng(seed)
+    bounds = np.linspace(0, n, n_clusters + 1).astype(np.int64)
+    groups = np.zeros(n, np.int32)
+    src_all: List[np.ndarray] = []
+    dst_all: List[np.ndarray] = []
+    for ci in range(n_clusters):
+        lo, hi = bounds[ci], bounds[ci + 1]
+        m = hi - lo
+        groups[lo:hi] = ci
+        ids = np.arange(lo, hi)
+        src_all.append(ids)
+        dst_all.append(lo + (ids - lo + 1) % m)          # intra ring
+        if m > 2 and k_intra > 0:
+            partners = lo + rng.integers(0, m, size=(m, k_intra))
+            src_all.append(np.repeat(ids, k_intra))
+            dst_all.append(partners.ravel())
+        if n_clusters > 1 and k_inter > 0:
+            # k_inter links per agent into the other clusters
+            others = np.concatenate([np.arange(bounds[cj], bounds[cj + 1])
+                                     for cj in range(n_clusters) if cj != ci])
+            partners = rng.choice(others, size=(m, k_inter))
+            src_all.append(np.repeat(ids, k_inter))
+            dst_all.append(partners.ravel())
+    return _from_pairs(n, np.concatenate(src_all), np.concatenate(dst_all),
+                       groups)
+
+
 def cluster_topology(n: int, n_clusters: int = 8, k_intra: int = 6,
                      bridges: int = 4, seed: int = 0) -> SparseTopology:
     """Clustered small-world topology: a ring inside each cluster (guarantees

@@ -52,6 +52,15 @@ def _make_args(op, seed=0):
         E, p = 9, 33
         return tuple(jnp.asarray(rng.standard_normal((E, p)), f32)
                      for _ in range(8)), {"rho": 1.5}
+    if op == "edge_reweight":
+        B, k = 40, 7
+        live = rng.uniform(size=(B, k)) < 0.8
+        live[0] = False                       # an all-dead row stays zero
+        w = rng.uniform(0, 1, (B, k)) * live
+        w /= np.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        return (jnp.asarray(rng.uniform(0, 4, (B, k)), f32),
+                jnp.asarray(w, f32), jnp.asarray(live)), \
+            {"eta": 0.3, "lam": 0.7}
     if op == "neighbor_aggregate":
         k, p = 9, 25
         return (jnp.asarray(rng.uniform(0, 1, k), f32),

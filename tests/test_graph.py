@@ -1,0 +1,135 @@
+"""core.graph constructors: kNN symmetry/self-loop invariants, kernel edge
+cases (sigma -> 0, identical points), allow_isolated paths, fixed-seed
+determinism, and the Graph.__post_init__ validation regressions (asymmetric
+/ negative / non-finite W)."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph import (Graph, angular_kernel_graph,
+                              gaussian_kernel_graph,
+                              knn_graph_from_similarity,
+                              random_geometric_graph, ring_graph)
+from repro.core.sparse import padded_neighbor_tables
+
+
+class TestGraphValidation:
+    """Regressions for the silent-accept paths in Graph.__post_init__."""
+
+    def test_exact_symmetric_accepted_unchanged(self):
+        W = np.array([[0.0, 2.0], [2.0, 0.0]])
+        g = Graph(W)
+        assert np.array_equal(g.W, W)
+
+    def test_asymmetric_within_tolerance_symmetrized_with_warning(self):
+        """The bug: W asymmetric by ~1e-6 relative used to pass allclose and
+        flow into P as-is, giving row-dependent mixing matrices."""
+        W = np.array([[0.0, 1.0], [1.0 + 1e-9, 0.0]])
+        with pytest.warns(UserWarning, match="symmetrizing"):
+            g = Graph(W)
+        assert np.array_equal(g.W, g.W.T)
+        assert g.W[0, 1] == pytest.approx(1.0 + 5e-10)
+
+    def test_asymmetric_beyond_tolerance_raises(self):
+        W = np.array([[0.0, 1.0], [2.0, 0.0]])
+        with pytest.raises(ValueError, match="symmetric"):
+            Graph(W)
+
+    def test_negative_raises(self):
+        W = np.array([[0.0, -1.0], [-1.0, 0.0]])
+        with pytest.raises(ValueError, match="nonnegative"):
+            Graph(W)
+
+    def test_nan_and_inf_raise(self):
+        """NaN previously died inside allclose with a misleading 'must be
+        symmetric'; inf sailed through entirely."""
+        for bad in (np.nan, np.inf):
+            W = np.array([[0.0, bad], [bad, 0.0]])
+            with pytest.raises(ValueError, match="finite"):
+                Graph(W)
+
+    def test_nonsquare_raises(self):
+        with pytest.raises(ValueError, match="square"):
+            Graph(np.zeros((2, 3)))
+
+    def test_diagonal_zeroed(self):
+        g = Graph(np.array([[5.0, 1.0], [1.0, 7.0]]))
+        assert np.array_equal(np.diag(g.W), [0.0, 0.0])
+
+
+class TestKnnGraph:
+    def test_symmetric_self_loop_free(self):
+        rng = np.random.default_rng(0)
+        s = rng.standard_normal((30, 30))
+        g = knn_graph_from_similarity((s + s.T) / 2, k=4)
+        assert np.array_equal(g.W, g.W.T)
+        assert np.array_equal(np.diag(g.W), np.zeros(30))
+        assert set(np.unique(g.W)) <= {0.0, 1.0}
+
+    def test_every_agent_keeps_at_least_k_links(self):
+        """Symmetrization can only add edges: degree >= k everywhere."""
+        rng = np.random.default_rng(1)
+        s = rng.standard_normal((25, 25))
+        g = knn_graph_from_similarity(s, k=3)
+        assert ((g.W > 0).sum(axis=1) >= 3).all()
+
+    def test_k_one_is_nearest_neighbor_matching(self):
+        sim = np.array([[0.0, 5.0, 1.0],
+                        [5.0, 0.0, 2.0],
+                        [1.0, 2.0, 0.0]])
+        g = knn_graph_from_similarity(sim, k=1)
+        assert g.W[0, 1] == 1.0 and g.W[1, 0] == 1.0
+        assert g.W[2, 1] == 1.0          # 2's nearest, symmetrized back
+
+
+class TestKernelGraphs:
+    def test_gaussian_sigma_zero_raises(self):
+        pts = np.random.default_rng(0).standard_normal((5, 2))
+        with pytest.raises(ValueError, match="sigma"):
+            gaussian_kernel_graph(pts, sigma=0.0)
+        with pytest.raises(ValueError, match="sigma"):
+            angular_kernel_graph(pts, sigma=-1.0)
+
+    def test_gaussian_identical_points_get_unit_weight(self):
+        pts = np.zeros((3, 2))
+        g = gaussian_kernel_graph(pts, sigma=0.5)
+        off = g.W[~np.eye(3, dtype=bool)]
+        assert np.allclose(off, 1.0)
+
+    def test_gaussian_threshold_can_isolate_and_tables_gate_it(self):
+        """allow_isolated paths: a far-away point loses every edge under a
+        threshold; the default table constructor rejects the graph, the
+        explicit opt-in admits it as a degree-0 row."""
+        pts = np.array([[0.0, 0.0], [0.1, 0.0], [100.0, 0.0]])
+        g = gaussian_kernel_graph(pts, sigma=0.1, threshold=1e-6)
+        assert (g.W[2] == 0).all()
+        with pytest.raises(ValueError, match="isolated"):
+            g.P
+        with pytest.raises(ValueError, match="at least one neighbor"):
+            padded_neighbor_tables(g)
+        tabs = padded_neighbor_tables(g, allow_isolated=True)
+        assert tabs.deg_count[2] == 0
+        assert tabs.nbr_w[2].sum() == 0.0
+        assert tabs.slot_cdf[2, -1] == 0.0      # flat cdf: never selected
+
+    def test_angular_zero_norm_models_defined(self):
+        m = np.array([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0]])
+        g = angular_kernel_graph(m, sigma=0.5, threshold=0.0)
+        assert np.isfinite(g.W).all()
+
+
+class TestDeterminism:
+    def test_random_geometric_graph_fixed_seed(self):
+        a = random_geometric_graph(50, k=3, seed=7)
+        b = random_geometric_graph(50, k=3, seed=7)
+        assert np.array_equal(a.W, b.W)
+
+    def test_random_geometric_graph_seed_changes_graph(self):
+        a = random_geometric_graph(50, k=3, seed=7)
+        b = random_geometric_graph(50, k=3, seed=8)
+        assert not np.array_equal(a.W, b.W)
+
+    def test_ring_degrees(self):
+        g = ring_graph(6, weight=2.0)
+        assert np.allclose(g.degrees, 4.0)
+        assert g.is_connected()

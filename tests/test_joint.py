@@ -1,0 +1,322 @@
+"""Joint model + collaboration-graph learning (DESIGN.md §13): the
+edge_reweight op's simplex invariants, the rate-0 bit-for-bit equivalence of
+``run_joint_scenario`` with ``run_mp_scenario``, planted-cluster recovery
+(the >= 90% acceptance bar), sharded parity incl. halo re-compaction, and
+the joint sweep's frozen-graph anchor — plus an 8-fake-device subprocess
+acceptance run."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph_learning import (cluster_edge_recovery,
+                                       learned_weight_tables, prune_rows,
+                                       reweight_rows)
+from repro.kernels import ref
+from repro.simulate import (NetworkConditions, SparseTopology,
+                            planted_partition_topology, run_joint_scenario,
+                            run_joint_scenario_sharded, run_mp_scenario)
+from repro.data.synthetic import two_cluster_mean_problem
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: tuned operating point for the two-cluster recovery runs (DESIGN.md §13)
+LEARN_KW = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+
+FAULTY = NetworkConditions(drop_prob=0.1, stale_prob=0.3, churn_rate=0.01,
+                           straggler_frac=0.3, partition_start=10,
+                           partition_end=30)
+
+
+def _two_cluster(n=80, k_intra=5, k_inter=2, seed=0):
+    topo = planted_partition_topology(n, 2, k_intra=k_intra,
+                                      k_inter=k_inter, seed=seed)
+    labels, targets, sol, c = two_cluster_mean_problem(n, p=4, seed=seed)
+    assert np.array_equal(labels, topo.groups)
+    return topo, labels, sol, c
+
+
+# ---------------------------------------------------------------------------
+# edge_reweight op invariants
+# ---------------------------------------------------------------------------
+
+
+class TestEdgeReweight:
+    def _rows(self, seed=0, B=30, k=6):
+        rng = np.random.default_rng(seed)
+        live = rng.uniform(size=(B, k)) < 0.8
+        live[0] = False
+        w = rng.uniform(0, 1, (B, k)) * live
+        w = w / np.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        d = rng.uniform(0, 4, (B, k)).astype(np.float32)
+        return jnp.asarray(d), jnp.asarray(w, jnp.float32), jnp.asarray(live)
+
+    def test_rows_stay_on_simplex(self):
+        d, w, live = self._rows()
+        out = np.asarray(ref.edge_reweight(d, w, live, eta=0.5, lam=0.7))
+        assert (out >= 0).all()
+        assert (out[~np.asarray(live)] == 0).all()
+        sums = out.sum(axis=1)
+        has_live = np.asarray(live).any(axis=1)
+        np.testing.assert_allclose(sums[has_live], 1.0, atol=1e-5)
+        assert (sums[~has_live] == 0).all()
+
+    def test_eta_zero_is_identity_eta_one_is_projection(self):
+        d, w, live = self._rows(1)
+        out0 = np.asarray(ref.edge_reweight(d, w, live, eta=0.0, lam=0.7))
+        np.testing.assert_array_equal(out0, np.asarray(w))
+        out1 = np.asarray(ref.edge_reweight(d, w, live, eta=1.0, lam=0.7))
+        want = np.asarray(ref.simplex_project_rows(-d / 1.4, live))
+        np.testing.assert_allclose(out1, want, atol=1e-6)
+
+    def test_small_lam_concentrates_large_lam_spreads(self):
+        d, w, live = self._rows(2)
+        sharp = np.asarray(ref.edge_reweight(d, w, live, eta=1.0, lam=1e-3))
+        flat = np.asarray(ref.edge_reweight(d, w, live, eta=1.0, lam=1e3))
+        lv = np.asarray(live)
+        # tiny lam: all mass on the closest live slot
+        row = 1
+        assert sharp[row].max() == pytest.approx(1.0)
+        # huge lam: near-uniform over live slots
+        deg = lv[row].sum()
+        np.testing.assert_allclose(flat[row][lv[row]], 1.0 / deg, atol=1e-3)
+
+    def test_projection_prefers_small_distances(self):
+        d = jnp.asarray([[0.1, 0.2, 5.0, 5.0]], jnp.float32)
+        live = jnp.ones((1, 4), bool)
+        w = jnp.full((1, 4), 0.25, jnp.float32)
+        out = np.asarray(ref.edge_reweight(d, w, live, eta=1.0, lam=0.5))
+        assert out[0, :2].sum() == pytest.approx(1.0)
+        assert (out[0, 2:] == 0).all()
+
+    def test_prune_rows_monotone(self):
+        w = jnp.asarray([[0.5, 0.4, 1e-5, 0.0]], jnp.float32)
+        live = jnp.asarray([[True, True, True, False]])
+        w2, live2 = prune_rows(w, live, 1e-3)
+        assert np.array_equal(np.asarray(live2), [[True, True, False, False]])
+        assert np.asarray(w2)[0, 2] == 0.0
+        # a pruned slot never comes back, even at zero model distance
+        out = reweight_rows(jnp.zeros((1, 2)), jnp.zeros((1, 4, 2)),
+                            w2, live2, eta=1.0, lam=1.0)
+        assert np.asarray(out)[0, 2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# single-device joint engine
+# ---------------------------------------------------------------------------
+
+
+class TestJointScenario:
+    @pytest.mark.parametrize("cond", [NetworkConditions(), FAULTY],
+                             ids=["clean", "faulty"])
+    def test_rate_zero_reproduces_mp_bitwise(self, cond):
+        """Acceptance: eta_graph=0 on an identical event schedule is
+        bit-for-bit run_mp_scenario (the graph step is compiled out)."""
+        topo, _, sol, c = _two_cluster()
+        mp = run_mp_scenario(topo, sol, c, 0.9, cond, rounds=60, batch=24,
+                             seed=3, record_every=20)
+        jt = run_joint_scenario(topo, sol, c, 0.9, cond, rounds=60,
+                                batch=24, seed=3, record_every=20)
+        assert np.abs(jt.theta_hist - mp.theta_hist).max() == 0.0
+        assert (jt.delivered, jt.dropped, jt.invalid, jt.rounds, jt.events) \
+            == (mp.delivered, mp.dropped, mp.invalid, mp.rounds, mp.events)
+        assert jt.suppressed == 0
+        # the frozen graph is exactly the initial stochastic table
+        np.testing.assert_array_equal(
+            jt.final_w, np.asarray(topo.device_tables().nbr_p))
+
+    def test_two_cluster_recovery(self):
+        """Acceptance: >= 90% of planted intra-cluster candidate edges keep
+        positive weight while inter-cluster edges are suppressed."""
+        topo, labels, sol, c = _two_cluster()
+        tr = run_joint_scenario(topo, sol, c, 0.9, NetworkConditions(),
+                                rounds=300, batch=40, seed=1,
+                                record_every=50, **LEARN_KW)
+        rec = cluster_edge_recovery(topo.tables.nbr_idx,
+                                    topo.tables.deg_count, tr.final_w,
+                                    labels)
+        assert rec.intra_recovered >= 0.9, rec
+        assert rec.inter_suppressed >= 0.9, rec
+        assert rec.inter_mass <= 0.05, rec
+        # pruning shows up in the trace: live slots decrease, deliveries on
+        # pruned slots are voided but stream-level accounting still holds
+        assert tr.live_edges_hist[-1] < tr.live_edges_hist[0]
+        assert tr.suppressed > 0
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+
+    def test_learning_under_faults_still_recovers(self):
+        topo, labels, sol, c = _two_cluster(seed=1)
+        tr = run_joint_scenario(topo, sol, c, 0.9,
+                                NetworkConditions(drop_prob=0.1,
+                                                  stale_prob=0.2),
+                                rounds=300, batch=40, seed=2,
+                                record_every=100, **LEARN_KW)
+        rec = cluster_edge_recovery(topo.tables.nbr_idx,
+                                    topo.tables.deg_count, tr.final_w,
+                                    labels)
+        assert rec.intra_recovered >= 0.9, rec
+        assert rec.inter_mass <= 0.1, rec
+
+    def test_learned_tables_round_trip(self):
+        """learned_weight_tables folds the learned rows back into
+        NeighborTables usable by the fixed-graph engines."""
+        topo, _, sol, c = _two_cluster()
+        tr = run_joint_scenario(topo, sol, c, 0.9, NetworkConditions(),
+                                rounds=100, batch=40, seed=1,
+                                record_every=50, **LEARN_KW)
+        tabs = learned_weight_tables(topo.tables, tr.final_w, tr.final_live)
+        assert tabs.nbr_idx is topo.tables.nbr_idx     # candidate structure
+        live = np.asarray(tr.final_live)
+        assert (tabs.nbr_w[~live] == 0).all()
+        topo2 = SparseTopology(tabs, topo.groups)
+        tr2 = run_mp_scenario(topo2, sol, c, 0.9, NetworkConditions(),
+                              rounds=20, batch=16, seed=0, record_every=20)
+        assert np.isfinite(tr2.theta_hist).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded joint engine
+# ---------------------------------------------------------------------------
+
+
+class TestJointSharded:
+    @pytest.mark.parametrize("cond", [NetworkConditions(), FAULTY],
+                             ids=["clean", "faulty"])
+    def test_matches_single_device_bitwise(self, cond):
+        """Acceptance: learned-graph runs match the single-device engine on
+        whatever mesh this process has (8 devices in the CI lane)."""
+        topo, _, sol, c = _two_cluster()
+        kw = dict(rounds=120, batch=32, seed=3, record_every=40, **LEARN_KW)
+        tr = run_joint_scenario(topo, sol, c, 0.9, cond, **kw)
+        sh = run_joint_scenario_sharded(topo, sol, c, 0.9, cond, **kw)
+        assert sh.overflow == 0
+        assert sh.n_shards == jax.device_count()
+        assert np.abs(sh.theta_hist - tr.theta_hist).max() == 0.0
+        assert np.abs(sh.final_w - tr.final_w).max() == 0.0
+        np.testing.assert_array_equal(sh.final_live, tr.final_live)
+        np.testing.assert_array_equal(sh.live_edges_hist, tr.live_edges_hist)
+        assert sh.suppressed == tr.suppressed
+
+    def test_recompaction_shrinks_halo_and_preserves_trajectory(self):
+        topo, _, sol, c = _two_cluster()
+        kw = dict(rounds=300, batch=40, seed=1, record_every=50, **LEARN_KW)
+        tr = run_joint_scenario(topo, sol, c, 0.9, NetworkConditions(), **kw)
+        sh = run_joint_scenario_sharded(
+            topo, sol, c, 0.9, NetworkConditions(), **kw,
+            recompact_every=100, recompact_frac=0.05,
+            n_shards=min(2, jax.device_count()))
+        assert np.abs(sh.theta_hist - tr.theta_hist).max() == 0.0
+        assert np.abs(sh.final_w - tr.final_w).max() == 0.0
+        if jax.device_count() > 1:
+            # cross edges were pruned, so re-compaction must have fired and
+            # the final halo must be smaller than the full candidate halo
+            full = run_joint_scenario_sharded(
+                topo, sol, c, 0.9, NetworkConditions(), rounds=10, batch=8,
+                seed=1, record_every=10,
+                n_shards=min(2, jax.device_count()))
+            assert sh.recompactions >= 1
+            assert sh.halo_size < full.halo_size
+
+    def test_rate_zero_matches_mp_sharded(self):
+        topo, _, sol, c = _two_cluster()
+        from repro.simulate import run_mp_scenario_sharded
+        kw = dict(rounds=40, batch=16, seed=5, record_every=20)
+        mp = run_mp_scenario_sharded(topo, sol, c, 0.9, FAULTY, **kw)
+        jt = run_joint_scenario_sharded(topo, sol, c, 0.9, FAULTY, **kw)
+        assert np.abs(jt.theta_hist - mp.theta_hist).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# joint sweep
+# ---------------------------------------------------------------------------
+
+
+class TestJointSweep:
+    def test_eta_zero_anchor_and_learning_helps(self):
+        from repro.experiments import (joint_mean_estimation_trials,
+                                       mean_estimation_trials,
+                                       run_joint_sweep, run_mp_sweep)
+        jt = joint_mean_estimation_trials(seeds=[0, 1], alphas=[0.9],
+                                          etas=[0.0, 0.3], lams=[1.0], n=40)
+        res = run_joint_sweep(jt, sweeps=60, graph_every=5)
+        mp = run_mp_sweep(mean_estimation_trials(seeds=[0, 1], alphas=[0.9],
+                                                 n=40), sweeps=60)
+        # trials 0/2 are the eta=0 column for seeds 0/1: exact MP anchor
+        # for the trajectory AND the objective
+        np.testing.assert_array_equal(res.err_hist[[0, 2]], mp.err_hist)
+        np.testing.assert_array_equal(res.objective_hist[[0, 2]],
+                                      mp.objective_hist)
+        # learning keeps at least as much weight on intra-cluster edges
+        assert res.intra_mass_hist[1, -1] >= \
+            res.intra_mass_hist[0, -1] - 1e-3
+        assert np.isfinite(res.objective_hist).all()
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device subprocess acceptance (mirrors test_partition's pattern)
+# ---------------------------------------------------------------------------
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    assert jax.device_count() == 8
+    from repro.core.graph_learning import cluster_edge_recovery
+    from repro.data.synthetic import two_cluster_mean_problem
+    from repro.simulate import (NetworkConditions,
+                                planted_partition_topology,
+                                run_joint_scenario,
+                                run_joint_scenario_sharded)
+
+    # n = 203 not divisible by 8; two planted clusters
+    n = 203
+    topo = planted_partition_topology(n, 2, k_intra=5, k_inter=2, seed=0)
+    labels, _, sol, c = two_cluster_mean_problem(n, p=4, seed=0)
+    kw = dict(rounds=300, batch=64, seed=1, record_every=50,
+              eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+    tr = run_joint_scenario(topo, sol, c, 0.9, NetworkConditions(), **kw)
+    sh = run_joint_scenario_sharded(topo, sol, c, 0.9, NetworkConditions(),
+                                    recompact_every=100,
+                                    recompact_frac=0.05, **kw)
+    assert sh.n_shards == 8 and sh.overflow == 0
+    assert np.abs(sh.theta_hist - tr.theta_hist).max() == 0.0
+    assert np.abs(sh.final_w - tr.final_w).max() == 0.0
+    assert sh.recompactions >= 1
+    rec = cluster_edge_recovery(topo.tables.nbr_idx, topo.tables.deg_count,
+                                sh.final_w, labels)
+    assert rec.intra_recovered >= 0.9, rec
+    assert rec.inter_mass <= 0.05, rec
+
+    # rate 0 == MP, sharded, under faults
+    from repro.simulate import run_mp_scenario_sharded
+    cond = NetworkConditions(drop_prob=0.1, stale_prob=0.3,
+                             churn_rate=0.01, straggler_frac=0.3,
+                             partition_start=5, partition_end=20)
+    mp = run_mp_scenario_sharded(topo, sol, c, 0.9, cond, rounds=40,
+                                 batch=32, seed=3, record_every=10)
+    jt = run_joint_scenario_sharded(topo, sol, c, 0.9, cond, rounds=40,
+                                    batch=32, seed=3, record_every=10)
+    assert np.abs(jt.theta_hist - mp.theta_hist).max() == 0.0
+    print("JOINT-8DEV-OK", rec.intra_recovered)
+""")
+
+
+def test_eight_device_joint_subprocess():
+    """Full 8-shard joint-learning acceptance in a subprocess (the XLA
+    device-count flag must precede jax init, which pytest already did)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "JOINT-8DEV-OK" in out.stdout

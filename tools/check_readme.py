@@ -1,0 +1,98 @@
+"""Execute every fenced ``bash``/``python`` block in README.md (docs lane).
+
+The documented quickstart commands must keep working: this script extracts
+each fenced code block, skips the ones explicitly annotated with an HTML
+comment ``<!-- docs-lane: skip -->`` on one of the three lines above the
+fence (reserved for heavy lanes and illustrative fragments), and executes
+the rest from the repository root with ``PYTHONPATH=src`` — bash blocks
+via ``bash -euo pipefail``, python blocks via ``python -c``.  Any nonzero
+exit fails the lane.
+
+    python tools/check_readme.py [--file README.md] [--timeout 600]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import time
+
+SKIP_MARK = "docs-lane: skip"
+FENCE = re.compile(r"^```(\w+)?\s*$")
+
+
+def extract_blocks(text: str):
+    """(lang, code, start_line, skipped) for every fenced block."""
+    lines = text.splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if not m or not m.group(1):
+            i += 1
+            continue
+        lang = m.group(1)
+        skip = any(SKIP_MARK in lines[j]
+                   for j in range(max(0, i - 3), i))
+        body = []
+        j = i + 1
+        while j < len(lines) and not lines[j].startswith("```"):
+            body.append(lines[j])
+            j += 1
+        blocks.append((lang, "\n".join(body), i + 1, skip))
+        i = j + 1
+    return blocks
+
+
+def run_block(lang: str, code: str, repo: str, timeout: int) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    if lang == "bash":
+        argv = ["bash", "-euo", "pipefail", "-c", code]
+    else:
+        argv = [sys.executable, "-c", code]
+    proc = subprocess.run(argv, cwd=repo, env=env, timeout=timeout)
+    return proc.returncode
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--file", default="README.md")
+    ap.add_argument("--timeout", type=int, default=600,
+                    help="per-block timeout (s)")
+    args = ap.parse_args()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(repo, args.file)
+    with open(path) as f:
+        blocks = extract_blocks(f.read())
+
+    runnable = [(lng, c, ln) for lng, c, ln, skip in blocks
+                if not skip and lng in ("bash", "python")]
+    skipped = sum(1 for *_, skip in blocks if skip)
+    if not runnable:
+        print(f"ERROR: {args.file} has no executable bash/python blocks "
+              f"(all {len(blocks)} skipped?) — the docs lane would be "
+              f"vacuous")
+        return 1
+
+    failures = 0
+    for lang, code, line in runnable:
+        head = code.strip().splitlines()[0] if code.strip() else "<empty>"
+        print(f"--- {args.file}:{line} [{lang}] {head}", flush=True)
+        t0 = time.perf_counter()
+        rc = run_block(lang, code, repo, args.timeout)
+        dt = time.perf_counter() - t0
+        status = "OK" if rc == 0 else f"FAIL (rc={rc})"
+        print(f"--- {status} in {dt:.1f}s", flush=True)
+        failures += rc != 0
+    print(f"{len(runnable)} blocks executed, {skipped} skipped, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
