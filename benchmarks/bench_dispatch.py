@@ -26,27 +26,23 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import dispatch
-from repro.kernels.dispatch import ReproBackend, resolve
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import time_call  # noqa: E402
+
+from repro.kernels import dispatch  # noqa: E402
+from repro.kernels.dispatch import ReproBackend, resolve  # noqa: E402
 
 
 def _time_loop(fn, repeats: int) -> float:
-    """Best wall-time (us) of ``fn()`` after one warmup.  Min, not median:
-    scheduler noise only ever adds time, so the minimum is the stable
-    estimator — which is what the baseline gate needs on shared runners."""
-    jax.block_until_ready(fn())
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append((time.perf_counter() - t0) * 1e6)
-    return min(ts)
+    """Shared min-of-repeats estimator, synced through the device queue."""
+    return time_call(fn, repeats=repeats, sync=jax.block_until_ready)
 
 
 def _runnable_impls(op: str, interpret: bool):
@@ -293,11 +289,30 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=None,
                     help="committed baseline JSON to gate against (fail on "
                          "parity drift or >2x normalized slowdown)")
+    ap.add_argument("--profile", default=None,
+                    help="wrap the op sweep in jax.profiler.trace writing "
+                         "to this directory (kernels are attributable via "
+                         "the repro/<op>/<impl> named scopes)")
     args = ap.parse_args(argv)
     # gating needs stable medians; plain smoke stays cheap
     repeats = args.repeats or (5 if args.baseline or not args.smoke else 1)
     interpret = args.smoke or args.interpret
 
+    def sweep():
+        return {
+            "mix": bench_mix(args.smoke, interpret, repeats),
+            "sparse_mix": bench_sparse_mix(args.smoke, interpret, repeats),
+            "admm_primal": bench_admm_primal(args.smoke, interpret, repeats),
+            "admm_edge": bench_admm_edge(args.smoke, interpret, repeats),
+            "edge_reweight": bench_edge_reweight(args.smoke, interpret,
+                                                 repeats),
+        }
+
+    if args.profile:
+        with jax.profiler.trace(args.profile):
+            ops = sweep()
+    else:
+        ops = sweep()
     report = {
         "meta": {
             "platform": jax.default_backend(),
@@ -306,14 +321,7 @@ def main(argv=None) -> int:
             "interpret": interpret,
             "repeats": repeats,
         },
-        "ops": {
-            "mix": bench_mix(args.smoke, interpret, repeats),
-            "sparse_mix": bench_sparse_mix(args.smoke, interpret, repeats),
-            "admm_primal": bench_admm_primal(args.smoke, interpret, repeats),
-            "admm_edge": bench_admm_edge(args.smoke, interpret, repeats),
-            "edge_reweight": bench_edge_reweight(args.smoke, interpret,
-                                                 repeats),
-        },
+        "ops": ops,
     }
 
     worst = 0.0

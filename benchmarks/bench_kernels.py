@@ -23,8 +23,8 @@ def main(fast: bool = True):
     got = ops.graph_mix(theta, sol, A, b)
     want = ref.graph_mix(theta, sol, A, b)
     err = float(jnp.abs(got - want).max())
-    us = time_call(lambda: jax.block_until_ready(
-        ops.graph_mix(theta, sol, A, b)))
+    us = time_call(ops.graph_mix, theta, sol, A, b,
+                   sync=jax.block_until_ready)
     emit("kernel_graph_mix", us, f"maxerr={err:.2e}")
 
     B, S, H, hd = 1, 256, 2, 64
@@ -34,8 +34,8 @@ def main(fast: bool = True):
     got = ops.flash_attention(q, kk, v, block_q=64, block_k=64)
     want = ref.flash_attention(q, kk, v)
     err = float(jnp.abs(got - want).max())
-    us = time_call(lambda: jax.block_until_ready(
-        ops.flash_attention(q, kk, v, block_q=64, block_k=64)))
+    us = time_call(ops.flash_attention, q, kk, v, block_q=64, block_k=64,
+                   sync=jax.block_until_ready)
     emit("kernel_flash_attention", us, f"maxerr={err:.2e}")
 
     E, p = 16, 2048
@@ -43,8 +43,8 @@ def main(fast: bool = True):
     got = ops.admm_edge_update(*args, rho=1.5)
     want = ref.admm_edge_update(*args, rho=1.5)
     err = max(float(jnp.abs(g - w).max()) for g, w in zip(got, want))
-    us = time_call(lambda: jax.block_until_ready(
-        ops.admm_edge_update(*args, rho=1.5)[0]))
+    us = time_call(ops.admm_edge_update, *args, rho=1.5,
+                   sync=jax.block_until_ready)
     emit("kernel_admm_update", us, f"maxerr={err:.2e}")
 
 

@@ -1,4 +1,4 @@
-"""Network-simulator scaling benchmark (DESIGN.md §4, §9).
+"""Network-simulator scaling benchmark (DESIGN.md §4, §9, §14).
 
 Runs the sparse event-driven MP-gossip engine across agent counts and fault
 scenarios, recording throughput (rounds/s, events/s) and peak host memory.
@@ -16,12 +16,29 @@ event-throughput ratio over the single-device run.  On a CPU-only host the
 devices are XLA fake host devices; this script force-creates them (the flag
 must precede jax init, so it is set at import time when --sharded is given).
 
-Emits CSV rows: name,us,derived (same convention as the other benchmarks).
+Besides the CSV rows (name,us,derived — same convention as the other
+benchmarks), every invocation writes a machine-readable
+``BENCH_network_sim.json`` (``--out``) with per-run events/s, RSS, core
+count, sharded ratio, and — under ``--overhead`` — the telemetry-enabled
+rerun and its events/s overhead percentage.  ``--baseline
+BENCH_network_sim.baseline.json`` turns the run into a CI gate: it fails on
+>2x per-run events/s regression after normalizing by the median slowdown
+across all runs (so a uniformly slower runner doesn't trip it) and on any
+drift in the deterministic delivered/dropped/invalid counters when the
+invocation shape matches the baseline's.  Refresh the committed baseline
+with the CI invocation plus ``--out BENCH_network_sim.baseline.json``.
+
+``--run-dir DIR`` records each telemetry-enabled run as a run directory
+(manifest.json + metrics.jsonl, rendered by ``tools/trace_report.py``);
+``--profile DIR`` wraps one timed single-device run per (scenario, n) in
+``jax.profiler.trace`` so the ``repro/<op>/<impl>`` named scopes from
+``kernels.dispatch`` show up attributed in TensorBoard/Perfetto.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import resource
 import sys
@@ -44,10 +61,11 @@ if "--sharded" in sys.argv and \
         + f" --xla_force_host_platform_device_count="
           f"{_requested_shards(sys.argv)}").strip()
 
+import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
-from common import emit  # noqa: E402
+from common import emit, time_call  # noqa: E402
 
 from repro.core.losses import pad_datasets, solitary_mean  # noqa: E402
 from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
@@ -55,11 +73,16 @@ from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
                             run_cl_scenario_sharded, run_joint_scenario,
                             run_joint_scenario_sharded, run_mp_scenario,
                             run_mp_scenario_sharded)
+from repro.telemetry import (TelemetryConfig, build_manifest,  # noqa: E402
+                             trace_rows, write_run)
 
 #: graph-learning knobs for --algo joint (rate/temperature/cadence chosen so
 #: the learned graph moves every few rounds without pruning the whole
 #: candidate set; see DESIGN.md §13)
 JOINT_KW = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+
+#: events/s regression gate vs baseline, after machine-speed normalization
+MAX_SLOWDOWN = 2.0
 
 
 def peak_rss_mb() -> float:
@@ -107,7 +130,9 @@ def _sharded_runner(algo: str, topo, p: int, seed: int):
 
 
 def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
-              batch: int, seed: int = 0, algo: str = "mp") -> dict:
+              batch: int, seed: int = 0, algo: str = "mp", repeats: int = 1,
+              telemetry=None, profile_dir=None):
+    """Timed single-device run; returns (report row, trace)."""
     scenario = get_scenario(scenario_name)
     t0 = time.perf_counter()
     topo = random_geometric_topology(n, k=k, seed=seed)
@@ -121,11 +146,12 @@ def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
     # reuses (steady-state events/s, no trace/compile in the measurement)
     record_every = max(1, rounds // 10)
     kw = dict(rounds=rounds, batch=batch, seed=seed,
-              record_every=record_every)
-    run(cond, **kw)
-    t1 = time.perf_counter()
+              record_every=record_every, telemetry=telemetry)
     tr = run(cond, **kw)
-    dt = time.perf_counter() - t1
+    if profile_dir is not None:
+        with jax.profiler.trace(profile_dir):
+            run(cond, **kw)
+    dt = time_call(run, cond, repeats=repeats, warmup=0, **kw) / 1e6
 
     # the ADMM state carries 5 extra (n, k, p) arrays beyond MP's one; the
     # joint engine adds the learned (n, k) weight + liveness tables
@@ -134,22 +160,25 @@ def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
         state_mb += 4 * 4 * n * topo.k_max * p / 2**20
     elif algo == "joint":
         state_mb += 5 * n * topo.k_max / 2**20
-    return {
+    row = {
         "n": n, "k_max": topo.k_max, "p": p, "scenario": scenario_name,
         "rounds": tr.rounds, "batch": batch, "events": tr.events,
         "time_s": dt, "build_s": build_s,
         "rounds_per_s": tr.rounds / dt, "events_per_s": tr.events / dt,
         "delivered": tr.delivered, "dropped": tr.dropped,
+        "invalid": tr.invalid,
         "sparse_state_mb": state_mb,
         "dense_state_mb": topo.dense_state_bytes(p) / 2**20
         * (5 if algo == "admm" else 1),
         "peak_rss_mb": peak_rss_mb(),
     }
+    return row, tr
 
 
 def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
                       rounds: int, batch: int, shards: int,
-                      seed: int = 0, algo: str = "mp") -> dict:
+                      seed: int = 0, algo: str = "mp",
+                      repeats: int = 1) -> dict:
     """Timed sharded run (partition + event-stream build reported apart)."""
     scenario = get_scenario(scenario_name)
     topo = random_geometric_topology(n, k=k, seed=seed)
@@ -164,10 +193,8 @@ def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
     kw = dict(rounds=rounds, batch=batch, seed=seed,
               record_every=record_every, n_shards=shards,
               assignment=assignment)
-    run(cond, **kw)                                             # warmup
-    t1 = time.perf_counter()
-    tr = run(cond, **kw)
-    dt = time.perf_counter() - t1
+    tr = run(cond, **kw)                                        # warmup
+    dt = time_call(run, cond, repeats=repeats, warmup=0, **kw) / 1e6
     return {
         "time_s": dt, "part_s": part_s, "events": tr.events,
         "events_per_s": tr.events / dt, "n_shards": tr.n_shards,
@@ -177,7 +204,46 @@ def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
     }
 
 
-def main():
+def compare_to_baseline(report: dict, baseline: dict) -> list:
+    """Gate failures of ``report`` vs a committed baseline (see module
+    docstring for the rules).  Returns human-readable failure strings."""
+    failures = []
+    base_runs = {r["name"]: r for r in baseline.get("runs", [])}
+    meta_keys = ("rounds", "k", "p", "algo", "batch")
+    same_shape = all(report["meta"].get(m) == baseline.get("meta", {}).get(m)
+                     for m in meta_keys)
+    pairs = []               # (name, cur events/s, base events/s)
+    for r in report["runs"]:
+        b = base_runs.get(r["name"])
+        if b is None:
+            continue
+        pairs.append((r["name"], r["events_per_s"], b["events_per_s"]))
+        if "sharded" in r and "sharded" in b:
+            pairs.append((r["name"] + "/sharded",
+                          r["sharded"]["events_per_s"],
+                          b["sharded"]["events_per_s"]))
+        if same_shape:
+            for c in ("events", "delivered", "dropped", "invalid"):
+                if c in b and r.get(c) != b[c]:
+                    failures.append(
+                        f"counter drift: {r['name']} {c} {r.get(c)} vs "
+                        f"baseline {b[c]} (same seed+shape must be exact)")
+    if pairs:
+        # slowdown = base/cur; median across runs = runner speed, so only
+        # runs that regressed relative to the rest of the suite trip the gate
+        slowdowns = sorted(b / max(c, 1e-9) for _, c, b in pairs)
+        machine = slowdowns[len(slowdowns) // 2]
+        for name, cur, base in pairs:
+            rel = (base / max(cur, 1e-9)) / max(machine, 1e-9)
+            if rel > MAX_SLOWDOWN:
+                failures.append(
+                    f"throughput regression: {name} {cur:.0f} events/s vs "
+                    f"baseline {base:.0f} ({rel:.2f}x the suite median "
+                    f"drift)")
+    return failures
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ns", default="1000,10000")
     ap.add_argument("--k", type=int, default=8)
@@ -196,37 +262,85 @@ def main():
     ap.add_argument("--shards", type=int, default=8,
                     help="mesh size for --sharded (forced as fake host "
                          "devices when the process has fewer)")
-    args = ap.parse_args()
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="timed repeats per run (min is reported)")
+    ap.add_argument("--overhead", action="store_true",
+                    help="rerun each config with telemetry enabled and "
+                         "report the events/s overhead percentage")
+    ap.add_argument("--out", default="BENCH_network_sim.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to gate against (fail on "
+                         ">2x normalized events/s regression or counter "
+                         "drift)")
+    ap.add_argument("--run-dir", default=None,
+                    help="record telemetry-enabled runs as run directories "
+                         "(manifest.json + metrics.jsonl) under this path")
+    ap.add_argument("--profile", default=None,
+                    help="wrap one timed run per config in "
+                         "jax.profiler.trace writing to this directory")
+    args = ap.parse_args(argv)
 
     ns = [int(x) for x in args.ns.split(",") if x]
     names = [s for s in args.scenarios.split(",") if s]
     print("name,us,derived", flush=True)
+    runs = []
     worst_rss = 0.0
     worst_ratio = None
+    worst_overhead = None
     used_shards = 0
     for n in ns:
         batch = args.batch or max(1, n // 10)
         for name in names:
-            r = bench_one(n, args.k, args.p, name, args.rounds, batch,
-                          algo=args.algo)
+            r, _ = bench_one(n, args.k, args.p, name, args.rounds, batch,
+                             algo=args.algo, repeats=args.repeats,
+                             profile_dir=args.profile)
+            r["name"] = f"network_sim/{args.algo}/{name}/n{n}"
             worst_rss = max(worst_rss, r["peak_rss_mb"])
-            emit(f"network_sim/{args.algo}/{name}/n{n}", r["time_s"] * 1e6,
+            emit(r["name"], r["time_s"] * 1e6,
                  f"events/s={r['events_per_s']:.0f} "
                  f"rounds/s={r['rounds_per_s']:.1f} "
                  f"delivered={r['delivered']} dropped={r['dropped']} "
                  f"sparse_state_mb={r['sparse_state_mb']:.1f} "
                  f"dense_state_would_be_mb={r['dense_state_mb']:.0f} "
                  f"peak_rss_mb={r['peak_rss_mb']:.0f}")
+            if args.overhead or args.run_dir:
+                tr_row, tr = bench_one(n, args.k, args.p, name, args.rounds,
+                                       batch, algo=args.algo,
+                                       repeats=args.repeats,
+                                       telemetry=TelemetryConfig(
+                                           enabled=True))
+                if args.overhead:
+                    pct = 100.0 * (1.0 - tr_row["events_per_s"]
+                                   / max(r["events_per_s"], 1e-9))
+                    r["telemetry"] = {
+                        "events_per_s": tr_row["events_per_s"],
+                        "overhead_pct": pct,
+                    }
+                    worst_overhead = pct if worst_overhead is None \
+                        else max(worst_overhead, pct)
+                    emit(r["name"] + "/telemetry", tr_row["time_s"] * 1e6,
+                         f"events/s={tr_row['events_per_s']:.0f} "
+                         f"overhead_pct={pct:.1f}")
+                if args.run_dir:
+                    d = os.path.join(args.run_dir,
+                                     f"{args.algo}-{name}-n{n}")
+                    manifest = build_manifest(seed=0, extra={
+                        "scenario": name, "n": n, "algo": args.algo,
+                        "rounds": args.rounds, "batch": batch})
+                    write_run(d, manifest, trace_rows(tr))
+                    print(f"# wrote run dir {d}", flush=True)
             if args.sharded:
                 s = bench_one_sharded(n, args.k, args.p, name, args.rounds,
-                                      batch, args.shards, algo=args.algo)
+                                      batch, args.shards, algo=args.algo,
+                                      repeats=args.repeats)
                 ratio = s["events_per_s"] / r["events_per_s"]
+                s["ratio_vs_1dev"] = ratio
+                r["sharded"] = s
                 worst_ratio = ratio if worst_ratio is None \
                     else min(worst_ratio, ratio)
                 worst_rss = max(worst_rss, s["peak_rss_mb"])
                 used_shards = s["n_shards"]
-                emit(f"network_sim/{args.algo}/{name}/n{n}"
-                     f"/sharded{s['n_shards']}",
+                emit(f"{r['name']}/sharded{s['n_shards']}",
                      s["time_s"] * 1e6,
                      f"events/s={s['events_per_s']:.0f} "
                      f"speedup_vs_1dev={ratio:.2f}x "
@@ -235,6 +349,7 @@ def main():
                      f"overflow={s['overflow']} "
                      f"partition_s={s['part_s']:.2f} "
                      f"peak_rss_mb={s['peak_rss_mb']:.0f}")
+            runs.append(r)
     budget_mb = 4096.0
     status = "OK" if worst_rss < budget_mb else "OVER"
     print(f"# peak_rss {worst_rss:.0f} MB vs budget {budget_mb:.0f} MB "
@@ -243,6 +358,43 @@ def main():
         print(f"# sharded speedup (min over runs) {worst_ratio:.2f}x on "
               f"{used_shards} devices ({os.cpu_count()} host cores)",
               flush=True)
+    if worst_overhead is not None:
+        print(f"# telemetry overhead (max over runs) {worst_overhead:.1f}% "
+              f"events/s", flush=True)
+
+    report = {
+        "meta": {
+            "platform": jax.default_backend(),
+            "jax": jax.__version__,
+            "cores": os.cpu_count(),
+            "algo": args.algo, "k": args.k, "p": args.p,
+            "rounds": args.rounds, "batch": args.batch,
+            "repeats": args.repeats,
+            "ns": ns, "scenarios": names,
+            "sharded": bool(args.sharded), "shards": used_shards or None,
+        },
+        "runs": runs,
+        "summary": {
+            "peak_rss_mb": worst_rss,
+            "rss_budget_mb": budget_mb,
+            "rss_ok": worst_rss < budget_mb,
+            "min_sharded_ratio": worst_ratio,
+            "telemetry_overhead_pct": worst_overhead,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}", flush=True)
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = compare_to_baseline(report, baseline)
+        for fail in failures:
+            print(f"BASELINE FAILURE: {fail}", flush=True)
+        if failures:
+            return 1
+        print(f"baseline gate OK vs {args.baseline}", flush=True)
     return 0 if worst_rss < budget_mb else 1
 
 

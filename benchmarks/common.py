@@ -1,21 +1,40 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark in this directory times through :func:`time_call` so the
+estimator is identical suite-wide: ``warmup`` untimed calls (compile +
+cache fill), then the **minimum** wall time over ``repeats`` timed calls.
+Min, not median: scheduler noise only ever adds time, so the minimum is
+the stable estimator — which is what the baseline gates need on shared CI
+runners.  Pass ``sync=jax.block_until_ready`` for JAX callables so the
+timed region covers device execution, not just dispatch.
+"""
 
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 
-def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:
-    """Median wall time in microseconds (after one warmup)."""
-    fn(*args, **kw)
-    ts = []
-    for _ in range(repeats):
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+              sync: Optional[Callable] = None, **kw) -> float:
+    """Min wall time of ``fn(*args, **kw)`` in microseconds.
+
+    ``sync`` (e.g. ``jax.block_until_ready``) is applied to the return
+    value inside the timed region so asynchronous dispatch is charged to
+    the call that issued it.
+    """
+    for _ in range(max(0, warmup)):
+        out = fn(*args, **kw)
+        if sync is not None:
+            sync(out)
+    best = float("inf")
+    for _ in range(max(1, repeats)):
         t0 = time.perf_counter()
-        fn(*args, **kw)
-        ts.append((time.perf_counter() - t0) * 1e6)
-    ts.sort()
-    return ts[len(ts) // 2]
+        out = fn(*args, **kw)
+        if sync is not None:
+            sync(out)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
 
 
 def emit(name: str, us: float, derived: str):

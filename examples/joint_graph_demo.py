@@ -9,16 +9,23 @@ local model distances (Zantedeschi et al. 2019-style sparse simplex
 projection) while gossiping — and the learned graph drops the planted
 inter-cluster edges while keeping >= 90% of the intra-cluster ones.
 
+Runs execute with in-scan telemetry (DESIGN.md §14); the per-run metric
+line is the telemetry report row, and ``--out DIR`` records each run for
+``tools/trace_report.py``.
+
     PYTHONPATH=src python examples/joint_graph_demo.py            # full
     PYTHONPATH=src python examples/joint_graph_demo.py --smoke    # docs lane
 """
 
 import argparse
+import os
 
 from repro.core.graph_learning import cluster_edge_recovery
 from repro.data.synthetic import two_cluster_mean_problem
 from repro.simulate import (NetworkConditions, planted_partition_topology,
                             run_joint_scenario)
+from repro.telemetry import (TelemetryConfig, build_manifest, format_row,
+                             trace_rows, write_run)
 
 
 def main():
@@ -30,6 +37,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem (CI docs lane)")
+    ap.add_argument("--out", default=None,
+                    help="write one telemetry run directory per eta under "
+                         "this path (see tools/trace_report.py)")
     args = ap.parse_args()
     n = 60 if args.smoke else args.n
     rounds = 150 if args.smoke else args.rounds
@@ -49,14 +59,24 @@ def main():
         tr = run_joint_scenario(
             topo, theta_sol, c, 0.9, NetworkConditions(), rounds=rounds,
             batch=n // 2, seed=args.seed, record_every=rounds // 3,
-            eta_graph=eta, lam=args.lam, graph_every=5, prune_eps=1e-3)
+            eta_graph=eta, lam=args.lam, graph_every=5, prune_eps=1e-3,
+            telemetry=TelemetryConfig(enabled=True))
         rec = cluster_edge_recovery(tabs.nbr_idx, tabs.deg_count,
                                     tr.final_w, labels)
+        rows = trace_rows(tr)
         tag = "frozen graph (eta=0)" if eta == 0 else f"learned (eta={eta})"
         print(f"{tag:22s} intra_recovered={rec.intra_recovered:5.1%} "
               f"inter_suppressed={rec.inter_suppressed:5.1%} "
               f"inter_mass={rec.inter_mass:.4f} "
               f"live_slots={int(tr.live_edges_hist[-1])}")
+        print(f"{'':22s} {format_row(rows[-1])}")
+        if args.out:
+            d = write_run(os.path.join(args.out, f"eta-{eta:g}"),
+                          build_manifest(seed=args.seed, extra={
+                              "eta_graph": eta, "lam": args.lam, "n": n,
+                              "rounds": rounds}),
+                          rows)
+            print(f"{'':22s} -> {d}")
     assert rec.intra_recovered >= 0.9, "cluster recovery regressed"
     print("OK: learned graph recovers the planted clusters")
 

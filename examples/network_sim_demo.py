@@ -1,20 +1,28 @@
 """Fault-scenario tour of the sparse network simulator.
 
-Runs asynchronous model-propagation gossip (paper §3.2) over a 2,000-agent
-clustered topology under every registered fault scenario and reports how far
-each run gets toward the synchronous fixed point — the paper's convergence
+Runs asynchronous model-propagation gossip (paper §3.2) over a clustered
+topology under every registered fault scenario and reports how far each
+run gets toward the synchronous fixed point — the paper's convergence
 story (Theorem 1) stress-tested under message loss, stragglers, churn and
-partitions.
+partitions.  Every run executes with the in-scan telemetry substrate
+enabled (DESIGN.md §14): the per-scenario line is the telemetry report
+row (objective, staleness p50/p99, drop attribution), and ``--out DIR``
+records each scenario as a run directory (manifest.json + metrics.jsonl)
+that ``tools/trace_report.py`` renders.
 
     PYTHONPATH=src python examples/network_sim_demo.py [--n 2000]
+    PYTHONPATH=src python examples/network_sim_demo.py --smoke --out /tmp/runs
 """
 
 import argparse
+import os
 
 import numpy as np
 
 from repro.simulate import (cluster_topology, get_scenario, list_scenarios,
                             run_mp_scenario, sparse_sync_mp)
+from repro.telemetry import (TelemetryConfig, build_manifest, format_row,
+                             trace_rows, write_run)
 
 
 def main():
@@ -24,16 +32,23 @@ def main():
     ap.add_argument("--rounds", type=int, default=400)
     ap.add_argument("--alpha", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem (CI docs lane)")
+    ap.add_argument("--out", default=None,
+                    help="write one telemetry run directory per scenario "
+                         "under this path (see tools/trace_report.py)")
     args = ap.parse_args()
+    n = 300 if args.smoke else args.n
+    rounds = 120 if args.smoke else args.rounds
 
-    topo = cluster_topology(args.n, n_clusters=8, k_intra=5, bridges=6,
+    topo = cluster_topology(n, n_clusters=8, k_intra=5, bridges=6,
                             seed=args.seed)
     rng = np.random.default_rng(args.seed)
     # cluster-correlated targets: agents in a cluster share a model direction
     centers = rng.standard_normal((int(topo.groups.max()) + 1, args.p))
     theta_sol = (centers[topo.groups]
-                 + 0.5 * rng.standard_normal((args.n, args.p))).astype(np.float32)
-    c = rng.uniform(0.05, 1.0, args.n).astype(np.float32)
+                 + 0.5 * rng.standard_normal((n, args.p))).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, n).astype(np.float32)
 
     print(f"topology: n={topo.n} k_max={topo.k_max} edges={topo.n_edges} "
           f"sparse_state={topo.state_bytes(args.p) / 2**20:.1f} MB "
@@ -43,18 +58,24 @@ def main():
                                      sweeps=400))
     err0 = float(np.linalg.norm(theta_sol - star))
 
-    batch = args.n // 10
-    print(f"{'scenario':16s} {'rel_err':>8s} {'delivered':>10s} "
-          f"{'dropped':>8s} {'active':>7s}")
+    batch = max(1, n // 10)
     for name in list_scenarios():
         sc = get_scenario(name)
         tr = run_mp_scenario(topo, theta_sol, c, args.alpha,
-                             sc.make_conditions(args.rounds),
-                             rounds=args.rounds, batch=batch, seed=args.seed,
-                             record_every=max(1, args.rounds // 8))
+                             sc.make_conditions(rounds),
+                             rounds=rounds, batch=batch, seed=args.seed,
+                             record_every=max(1, rounds // 8),
+                             telemetry=TelemetryConfig(enabled=True))
         err = float(np.linalg.norm(tr.theta_hist[-1] - star)) / err0
-        print(f"{name:16s} {err:8.3f} {tr.delivered:10d} {tr.dropped:8d} "
-              f"{tr.active_hist[-1]:7.2f}")
+        rows = trace_rows(tr)
+        print(f"{name:16s} rel_err={err:.3f}  {format_row(rows[-1])}")
+        if args.out:
+            d = write_run(os.path.join(args.out, name),
+                          build_manifest(seed=args.seed, extra={
+                              "scenario": name, "n": n, "rounds": rounds,
+                              "alpha": args.alpha}),
+                          rows)
+            print(f"  -> {d}")
     print("\nrel_err = ||theta - theta*|| / ||theta_sol - theta*|| "
           "(lower is better; clean ~ the Theorem 1 limit)")
 

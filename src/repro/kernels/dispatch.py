@@ -107,7 +107,30 @@ def register(op: str, impl: str, *, pallas: bool = False):
     True``) register a factory ``make(interpret: bool) -> callable``.
     """
     def deco(fn):
-        make = fn if pallas else (lambda interpret, _fn=fn: _fn)
+        # profiler attribution: every registered hot-path callable runs
+        # under a stable "repro/<op>/<impl>" scope, so jax.profiler traces
+        # group kernel time by the dispatch decision that produced it
+        # (DESIGN.md §14).  Scoping happens here — not in resolve() — so
+        # ``make(interpret)`` is memoized and repeated resolution returns
+        # the identical callable (jit caches keyed on it stay warm, and
+        # selection can be asserted with ``is``).  Reference impls stay
+        # unwrapped: they are parity oracles, not profiled hot paths.
+        scope = f"repro/{op}/{impl}"
+
+        def _scoped(inner):
+            @functools.wraps(inner)
+            def run(*args, **kwargs):
+                with jax.named_scope(scope):
+                    return inner(*args, **kwargs)
+            return run
+
+        if impl == "reference":
+            make = (lambda interpret, _fn=fn: _fn)
+        elif pallas:
+            make = functools.lru_cache(maxsize=None)(
+                lambda interpret, _fn=fn: _scoped(_fn(interpret)))
+        else:
+            make = (lambda interpret, _fn=_scoped(fn): _fn)
         _REGISTRY.setdefault(op, {})[impl] = _Impl(impl, make, pallas)
         return fn
     return deco

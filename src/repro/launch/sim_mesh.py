@@ -109,6 +109,23 @@ def halo_exchange_fn(
     return run
 
 
+def halo_payload_bytes(
+    n_shards: int, boundary_size: int, row_nbytes: int, halo_size: int
+) -> int:
+    """Bytes published per halo exchange across the whole mesh.
+
+    Every shard all-gathers its ``boundary_size`` boundary rows each
+    exchange regardless of which rows its neighbors actually consume, so
+    the wire cost is ``P * B * row_nbytes`` — zero when the partition has
+    no halo at all (``halo_size == 0``), in which case the engines skip the
+    collective entirely.  The telemetry layer multiplies this by the round
+    count for the cumulative comm column.
+    """
+    if halo_size == 0:
+        return 0
+    return int(n_shards) * int(boundary_size) * int(row_nbytes)
+
+
 def shard_map_1d(f, mesh, in_specs, out_specs):
     """Version-compat shard_map over a sim mesh.
 

@@ -40,6 +40,9 @@ from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
                                neighbor_aggregate, quadratic_primal_core,
                                record_chunks, sample_event)
 from repro.kernels.dispatch import ReproBackend, resolve
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry.config import TelemetryConfig, telemetry_on
+from repro.telemetry.frames import TelemetryFrames
 from . import scheduler as sched
 from .scheduler import (EventStream, NetworkConditions,
                         precompute_event_stream, stream_totals)
@@ -201,6 +204,8 @@ class SimTrace:
     invalid:      never-valid wake-ups (all-dead draws, degree-0 wakers) —
                   excluded from delivered AND dropped, so the accounting
                   invariant is  delivered + dropped == 2 * (events - invalid)
+    telemetry:    TelemetryFrames when the run was launched with
+                  ``TelemetryConfig(enabled=True)``, else None
     """
 
     theta_hist: np.ndarray
@@ -210,20 +215,28 @@ class SimTrace:
     rounds: int
     events: int
     invalid: int = 0
+    telemetry: Optional[TelemetryFrames] = None
 
 
 @partial(jax.jit, static_argnames=("conditions", "alpha", "batch",
-                                   "record_every", "n_rec"))
+                                   "record_every", "n_rec", "tel"))
 def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
                    conditions: NetworkConditions, alpha: float, batch: int,
-                   record_every: int, n_rec: int):
+                   record_every: int, n_rec: int, tel: bool = False):
     """Module-level jitted runner so repeated calls with the same static
     (conditions, alpha, batch, record_every, n_rec) and shapes hit the jit
-    cache — benchmark warmups genuinely pre-compile the timed run."""
+    cache — benchmark warmups genuinely pre-compile the timed run.
+
+    ``tel`` (static) appends the telemetry accumulators — per-agent
+    staleness counters, applied-update and drop-cause counters — to the
+    carry and per-chunk objective/staleness snapshots to the outputs; at
+    the default False the traced program is exactly the pre-telemetry
+    scan (the ``*tstate`` unpacking leaves the carry a 7-tuple)."""
     n = theta_sol.shape[0]
 
     def round_fn(carry, inp):
-        theta, K, theta_prev, active, delivered, dropped, invalid = carry
+        theta, K, theta_prev, active, delivered, dropped, invalid, \
+            *tstate = carry
         theta_in = theta                  # next round's "one-round-old" model
         t, key = inp
         k_ev, k_churn = jax.random.split(key)
@@ -254,13 +267,29 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
             + jnp.sum(ev.valid & ~ev.deliver_ji)
         invalid = invalid + jnp.sum(~ev.valid)
         active = sched.churn_step(k_churn, conditions, active)
-        return (theta, K, theta_in, active, delivered, dropped, invalid), None
+        if tel:
+            stale, updates, d_link, d_churn, d_part = tstate
+            stale = tmetrics.staleness_step(stale, got, upd, n)
+            updates = updates + jnp.sum(got)
+            link, churn, part = tmetrics.batch_drop_causes(
+                ev.deliver_ij, ev.deliver_ji, ev.valid, ev.cut, ev.dead)
+            tstate = (stale, updates, d_link + link, d_churn + churn,
+                      d_part + part)
+        return (theta, K, theta_in, active, delivered, dropped, invalid,
+                *tstate), None
 
     def outer(carry, inp):
         ks, t0 = inp
         inner_ts = t0 + jnp.arange(record_every)
         carry, _ = jax.lax.scan(round_fn, carry, (inner_ts, ks))
         frac = jnp.mean(carry[3].astype(jnp.float32))
+        if tel:
+            theta, K = carry[0], carry[1]
+            obj = tmetrics.mp_local_objective(theta, K, tabs.nbr_p, c,
+                                              theta_sol, alpha)
+            stale, updates, d_link, d_churn, d_part = carry[7:]
+            return carry, (theta, frac, obj, stale, updates, carry[4],
+                           d_link, d_churn, d_part, carry[6])
         return carry, (carry[0], frac)
 
     return jax.lax.scan(outer, carry0, (keys, ts))
@@ -268,8 +297,8 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
 
 def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
                     conditions: NetworkConditions, rounds: int,
-                    batch: int, seed: int = 0,
-                    record_every: int = 10) -> SimTrace:
+                    batch: int, seed: int = 0, record_every: int = 10,
+                    telemetry: Optional[TelemetryConfig] = None) -> SimTrace:
     """MP gossip under a fault scenario, B wake-ups per round.
 
     Per round: draw an EventBatch, land every delivered message (scatter into
@@ -280,6 +309,10 @@ def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
 
     The horizon is floored to a multiple of record_every (record_every is
     clamped to ``rounds`` first); SimTrace.rounds reports the actual count.
+    ``telemetry=TelemetryConfig(enabled=True)`` additionally accumulates
+    the DESIGN.md §14 metrics inside the scan carry and attaches them as
+    ``SimTrace.telemetry``; the default leaves the compiled program — and
+    the trajectory — exactly as without the argument.
     """
     tabs = topo.device_tables()
     n = topo.n
@@ -292,21 +325,40 @@ def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
 
     theta0, K0 = _mp_warm_start(tabs, theta_sol)
     record_every, n_rec = record_chunks(rounds, record_every)
+    tel = telemetry_on(telemetry)
 
     keys = jax.random.split(key, n_rec * record_every).reshape(
         n_rec, record_every, 2)
     ts = jnp.asarray((np.arange(n_rec) * record_every).astype(np.int32))
     carry0 = (theta0, K0, theta0, jnp.ones((n,), bool),
               jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    carry, (hist, active_hist) = _scenario_scan(
+    if tel:
+        carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0),
+                           jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    carry, outs = _scenario_scan(
         tabs, part_half, rates, theta_sol, c, carry0, keys, ts,
         conditions=conditions, alpha=alpha, batch=batch,
-        record_every=record_every, n_rec=n_rec)
-    theta, K, _, active, delivered, dropped, invalid = carry
+        record_every=record_every, n_rec=n_rec, tel=tel)
+    theta, K, _, active, delivered, dropped, invalid = carry[:7]
     total_rounds = n_rec * record_every
+    frames = None
+    if tel:
+        (hist, active_hist, obj_h, stale_h, upd_h, del_h, link_h, churn_h,
+         part_h, inv_h) = outs
+        frames = TelemetryFrames(
+            rounds=(np.arange(n_rec) + 1) * record_every,
+            objective=np.asarray(obj_h), staleness=np.asarray(stale_h),
+            updates=np.asarray(upd_h, np.int64),
+            delivered=np.asarray(del_h, np.int64),
+            drop_link=np.asarray(link_h, np.int64),
+            drop_churn=np.asarray(churn_h, np.int64),
+            drop_partition=np.asarray(part_h, np.int64),
+            invalid=np.asarray(inv_h, np.int64))
+    else:
+        hist, active_hist = outs
     return SimTrace(np.asarray(hist), np.asarray(active_hist),
                     int(delivered), int(dropped), total_rounds,
-                    total_rounds * batch, int(invalid))
+                    total_rounds * batch, int(invalid), telemetry=frames)
 
 
 # ---------------------------------------------------------------------------
@@ -450,9 +502,10 @@ def _reshape_stream(stream: EventStream, n_rec: int, record_every: int):
         stream._replace(active_frac=None))
 
 
-@partial(jax.jit, static_argnames=("mu", "rho", "backend"))
-def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev, *,
-                      mu: float, rho: float, backend=None):
+@partial(jax.jit, static_argnames=("mu", "rho", "backend", "tel"))
+def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
+                      tel_args=(), *, mu: float, rho: float, backend=None,
+                      tel: bool = False):
     """Batched-event CL-ADMM rounds over a precomputed event stream.
 
     One round = one (record_every-chunked) EventStream slice of B wake-ups:
@@ -474,11 +527,17 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev, *,
        exactly ``_sparse_edge_zl``; a dropped direction leaves that side's
        edge copies untouched (the mirrored copies may diverge — the
        asynchronous regime of DJAM, arXiv:1803.09737).
+
+    ``tel`` (static) appends staleness/update accumulators to the carry
+    and per-chunk (objective, staleness, updates) snapshots to the
+    history; ``tel_args`` then carries the extra sufficient statistic
+    (sxx,) the Eq. 7 objective needs.  At the default False the traced
+    program is exactly the pre-telemetry scan.
     """
     n, k = nbr_w.shape
 
     def round_fn(carry, ev_t):
-        st, pub_prev = carry
+        st, pub_prev, *tstate = carry
         # --- primal phase: endpoints whose incoming payload was delivered
         upd = jnp.concatenate([ev_t.i, ev_t.j])                    # (2B,)
         got = jnp.concatenate([ev_t.deliver_ji, ev_t.deliver_ij])
@@ -516,15 +575,31 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev, *,
         L_nbr = st.L_nbr.at[rowu, own_s].set(ln_new, mode="drop")
 
         st = SparseADMMState(theta, K, Z_own, Z_nbr, L_own, L_nbr)
-        return (st, pub), None
+        if tel:
+            stale, updates = tstate
+            stale = tmetrics.staleness_step(stale, got, upd, n)
+            updates = updates + jnp.sum(got)
+            tstate = (stale, updates)
+        return (st, pub, *tstate), None
 
     def outer(carry, ev_blk):
         carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
-        return carry, carry[0].theta
+        st = carry[0]
+        if tel:
+            (sxx,) = tel_args
+            live = jnp.arange(k)[None, :] < deg_count[:, None]
+            obj = tmetrics.cl_local_objective(st.theta, st.K, nbr_w, live,
+                                              D, m_counts, sx, sxx, mu)
+            stale, updates = carry[2:]
+            return carry, (st.theta, obj, stale, updates)
+        return carry, st.theta
 
     pub0 = (state0.theta, state0.K, state0.L_own, state0.L_nbr)
-    (st, _), hist = jax.lax.scan(outer, (state0, pub0), ev)
-    return st, hist
+    carry0 = (state0, pub0)
+    if tel:
+        carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0))
+    carry, hist = jax.lax.scan(outer, carry0, ev)
+    return carry[0], hist
 
 
 def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
@@ -532,7 +607,9 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
                     batch: int, seed: int = 0, record_every: int = 10,
                     theta_sol=None, state: Optional[SparseADMMState] = None,
                     stream: Optional[EventStream] = None,
-                    backend: Optional[ReproBackend] = None) -> CLSimTrace:
+                    backend: Optional[ReproBackend] = None,
+                    telemetry: Optional[TelemetryConfig] = None
+                    ) -> CLSimTrace:
     """Asynchronous CL-ADMM (paper §4.2) under a fault scenario.
 
     The same batched-event substrate as ``run_mp_scenario``: the fault
@@ -571,18 +648,31 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
     x = jnp.asarray(data.x, jnp.float32)
     m_counts = jnp.sum(mask, axis=1)
     sx = jnp.sum(x * mask[:, :, None], axis=1)
+    tel = telemetry_on(telemetry)
+    tel_args = ()
+    if tel:
+        sxx = jnp.sum(mask * jnp.sum(x * x, axis=-1), axis=1)
+        tel_args = (sxx,)
 
     ev = _reshape_stream(stream, n_rec, record_every)
     st, hist = _cl_scenario_scan(
-        tabs.nbr_w, tabs.deg_count, D, m_counts, sx, state, ev,
-        mu=mu, rho=rho, backend=backend)
+        tabs.nbr_w, tabs.deg_count, D, m_counts, sx, state, ev, tel_args,
+        mu=mu, rho=rho, backend=backend, tel=tel)
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
         n_rec, record_every)[:, -1]
+    frames = None
+    if tel:
+        hist, obj_h, stale_h, upd_h = hist
+        frames = TelemetryFrames(
+            rounds=(np.arange(n_rec) + 1) * record_every,
+            objective=np.asarray(obj_h), staleness=np.asarray(stale_h),
+            updates=np.asarray(upd_h, np.int64),
+            **tmetrics.stream_chunk_totals(stream, n_rec, record_every))
     return CLSimTrace(theta_hist=np.asarray(hist), active_hist=active_hist,
                       delivered=delivered, dropped=dropped,
                       rounds=total_rounds, events=total_rounds * batch,
-                      invalid=invalid, final=st)
+                      invalid=invalid, final=st, telemetry=frames)
 
 
 # ---------------------------------------------------------------------------
@@ -610,10 +700,11 @@ class JointSimTrace(SimTrace):
 
 
 @partial(jax.jit, static_argnames=("alpha", "eta_graph", "lam", "graph_every",
-                                   "prune_eps", "backend"))
+                                   "prune_eps", "backend", "tel"))
 def _joint_scenario_scan(w0, live0, theta0, K0, c, theta_sol, ev, ts, *,
                          alpha: float, eta_graph: float, lam: float,
-                         graph_every: int, prune_eps, backend=None):
+                         graph_every: int, prune_eps, backend=None,
+                         tel: bool = False):
     """Batched-event joint MP + graph-learning rounds over a precomputed
     event stream (Zantedeschi-style alternation; DESIGN.md §13).
 
@@ -636,7 +727,7 @@ def _joint_scenario_scan(w0, live0, theta0, K0, c, theta_sol, ev, ts, *,
     prune = eta_graph > 0.0 and prune_eps is not None
 
     def round_fn(carry, inp):
-        theta, K, theta_prev, w, live, suppressed = carry
+        theta, K, theta_prev, w, live, suppressed, *tstate = carry
         theta_in = theta
         ev_t, t = inp
 
@@ -678,14 +769,28 @@ def _joint_scenario_scan(w0, live0, theta0, K0, c, theta_sol, ev, ts, *,
                 (t + 1) % graph_every == 0, do_graph,
                 lambda w, live: (w, live), w, live)
 
-        return (theta, K, theta_in, w, live, suppressed), None
+        if tel:
+            stale, updates = tstate
+            stale = tmetrics.staleness_step(stale, got, upd, n)
+            updates = updates + jnp.sum(got)
+            tstate = (stale, updates)
+        return (theta, K, theta_in, w, live, suppressed, *tstate), None
 
     def outer(carry, inp):
         carry, _ = jax.lax.scan(round_fn, carry, inp)
-        theta, _, _, w, live, _ = carry
-        return carry, (theta, jnp.sum(live & (w > 0)))
+        theta, K, _, w, live, suppressed, *tstate = carry
+        edges = jnp.sum(live & (w > 0))
+        if tel:
+            # objective under the *learned* weights (pruned slots weigh 0)
+            obj = tmetrics.mp_local_objective(
+                theta, K, jnp.where(live, w, 0.0), c, theta_sol, alpha)
+            stale, updates = tstate
+            return carry, (theta, edges, obj, stale, updates, suppressed)
+        return carry, (theta, edges)
 
     carry0 = (theta0, K0, theta0, w0, live0, jnp.int32(0))
+    if tel:
+        carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0))
     return jax.lax.scan(outer, carry0, (ev, ts))
 
 
@@ -696,7 +801,8 @@ def run_joint_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
                        graph_every: int = 1,
                        prune_eps: Optional[float] = None,
                        stream: Optional[EventStream] = None,
-                       backend: Optional[ReproBackend] = None
+                       backend: Optional[ReproBackend] = None,
+                       telemetry: Optional[TelemetryConfig] = None
                        ) -> JointSimTrace:
     """Joint MP gossip + collaboration-graph learning under a fault scenario
     (Zantedeschi et al. 2019 alternation on the DJAM-style asynchronous
@@ -736,20 +842,33 @@ def run_joint_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
     theta0, K0 = _mp_warm_start(tabs, theta_sol)
     w0 = tabs.nbr_p
     live0 = live_slots(tabs.deg_count, topo.k_max)
+    tel = telemetry_on(telemetry)
     ev = _reshape_stream(stream, n_rec, record_every)
     ts = jnp.arange(total_rounds, dtype=jnp.int32).reshape(
         n_rec, record_every)
-    carry, (hist, live_hist) = _joint_scenario_scan(
+    carry, outs = _joint_scenario_scan(
         w0, live0, theta0, K0, c, theta_sol, ev, ts, alpha=alpha,
         eta_graph=eta_graph, lam=lam, graph_every=graph_every,
-        prune_eps=prune_eps, backend=backend)
-    theta, K, _, w, live, suppressed = carry
+        prune_eps=prune_eps, backend=backend, tel=tel)
+    theta, K, _, w, live, suppressed = carry[:6]
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
         n_rec, record_every)[:, -1]
+    frames = None
+    if tel:
+        hist, live_hist, obj_h, stale_h, upd_h, sup_h = outs
+        frames = TelemetryFrames(
+            rounds=(np.arange(n_rec) + 1) * record_every,
+            objective=np.asarray(obj_h), staleness=np.asarray(stale_h),
+            updates=np.asarray(upd_h, np.int64),
+            suppressed=np.asarray(sup_h, np.int64),
+            **tmetrics.stream_chunk_totals(stream, n_rec, record_every))
+    else:
+        hist, live_hist = outs
     return JointSimTrace(
         theta_hist=np.asarray(hist), active_hist=active_hist,
         delivered=delivered, dropped=dropped, rounds=total_rounds,
         events=total_rounds * batch, invalid=invalid,
         final_w=np.asarray(w), final_live=np.asarray(live),
-        live_edges_hist=np.asarray(live_hist), suppressed=int(suppressed))
+        live_edges_hist=np.asarray(live_hist), suppressed=int(suppressed),
+        telemetry=frames)

@@ -55,7 +55,11 @@ from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
                                batched_model_update, live_slots,
                                record_chunks)
 from repro.launch.sim_mesh import (AGENT_AXIS, halo_exchange_fn,
-                                   make_sim_mesh, mesh_shards, shard_map_1d)
+                                   halo_payload_bytes, make_sim_mesh,
+                                   mesh_shards, shard_map_1d)
+from repro.telemetry import metrics as tmetrics
+from repro.telemetry.config import TelemetryConfig, telemetry_on
+from repro.telemetry.frames import TelemetryFrames
 from .engines import (SimTrace, _reshape_stream, init_sparse_admm)
 from .scheduler import (EventStream, NetworkConditions,
                         precompute_event_stream, stream_totals)
@@ -342,6 +346,38 @@ def _scan_specs(P_spec, tree):
     return jax.tree_util.tree_map(lambda _: P_spec, tree)
 
 
+def _sharded_frames(part: GraphPartition, stream, n_rec: int,
+                    record_every: int, obj_h, stale_h, upd_h, overflow,
+                    payload_row_bytes: int, halo_bytes=None,
+                    suppressed=None) -> TelemetryFrames:
+    """Reassemble per-shard telemetry blocks into canonical-order frames.
+
+    obj_h / stale_h are (n_rec, P * m) gathered block outputs — indexed
+    back to agent order via ``perm_slot`` (not ``unshard_rows``, which
+    needs a trailing feature axis); upd_h is (n_rec, P) per-shard counters
+    summed exactly here.  Delivery/drop-cause accounting reduces from the
+    replayed stream (``metrics.stream_chunk_totals`` — the identical
+    counts the single-device engines accumulate).  ``payload_row_bytes``
+    sizes the per-boundary-row halo publish; ``halo_bytes`` overrides the
+    static cumulative schedule (the joint driver recomputes it per
+    segment as re-compaction shrinks the boundary).
+    """
+    rounds = (np.arange(n_rec, dtype=np.int64) + 1) * record_every
+    if halo_bytes is None:
+        halo_bytes = rounds * halo_payload_bytes(
+            part.n_shards, part.boundary_size, payload_row_bytes,
+            part.halo_size)
+    return TelemetryFrames(
+        rounds=rounds,
+        objective=np.asarray(obj_h)[:, part.perm_slot],
+        staleness=np.asarray(stale_h)[:, part.perm_slot],
+        updates=np.asarray(upd_h, np.int64).sum(axis=1),
+        halo_bytes=halo_bytes,
+        overflow_per_shard=np.asarray(overflow),
+        suppressed=suppressed,
+        **tmetrics.stream_chunk_totals(stream, n_rec, record_every))
+
+
 def _take_padded(x, sel, fill):
     """x[sel] where the out-of-range selector index len(x) reads ``fill``."""
     return jnp.concatenate([x, jnp.full((1,), fill, x.dtype)])[sel]
@@ -349,14 +385,23 @@ def _take_padded(x, sel, fill):
 
 @partial(jax.jit,
          static_argnames=("mesh", "alpha", "m", "H", "E", "U", "n_rec",
-                          "record_every", "exchange"))
+                          "record_every", "exchange", "tel"))
 def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
                            fetch, bnd_pos, halo_src_shard, halo_src_pos, *,
                            alpha: float, m: int, H: int, E: int, U: int,
-                           n_rec: int, record_every: int, exchange: str):
+                           n_rec: int, record_every: int, exchange: str,
+                           tel: bool = False):
     """shard_map'd scan over rounds; every array argument before ``fetch``
     is either replicated (the event stream) or row-sharded (P * m leading
-    axis); ``fetch``/``bnd_pos``/``halo_src_*`` carry one row per shard."""
+    axis); ``fetch``/``bnd_pos``/``halo_src_*`` carry one row per shard.
+
+    ``tel`` (static) adds local-row staleness/update accumulators to each
+    shard's carry and per-chunk (objective, staleness, updates) block
+    outputs — the identical row-local expressions the single-device scan
+    accumulates, applied to the shard's (m, ...) block, so the
+    reassembled vectors are bit-for-bit the single-device ones whenever
+    overflow is 0.  At the default False the traced program is exactly
+    the pre-telemetry scan."""
     P_ = mesh_shards(mesh)
     batch = stream.i.shape[-1]
 
@@ -370,7 +415,7 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
         exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
 
         def round_fn(carry, ev_t):
-            theta, K, ext_prev, overflow = carry
+            theta, K, ext_prev, overflow, *tstate = carry
             ext = exchange_halo(theta)
 
             # --- compact to the events touching this shard: everything
@@ -407,25 +452,45 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
                                        sol_blk[lu_c], alpha)
             theta = theta.at[jnp.where(lu < m, lu, m)].set(new, mode="drop")
             overflow += jnp.maximum(jnp.sum(got) - U, 0)
-            return (theta, K, ext, overflow), None
+            if tel:
+                stale, updates = tstate
+                stale = tmetrics.staleness_step(stale, got, f_u, m)
+                updates = updates + jnp.sum(got)
+                tstate = (stale, updates)
+            return (theta, K, ext, overflow, *tstate), None
 
         def outer(carry, ev_blk):
             carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
+            if tel:
+                obj = tmetrics.mp_local_objective(
+                    carry[0], carry[1], nbr_p_blk, c_blk, sol_blk, alpha)
+                stale, updates = carry[4:]
+                return carry, (carry[0], obj, stale, updates[None])
             return carry, carry[0]
 
         ext0 = exchange_halo(theta0_blk)                 # = warm-start halo
         carry0 = (theta0_blk, K0_blk, ext0, jnp.int32(0))
-        (theta, K, _, overflow), hist = jax.lax.scan(outer, carry0, ev)
+        if tel:
+            carry0 = carry0 + (jnp.zeros((m,), jnp.int32), jnp.int32(0))
+        carry, hist = jax.lax.scan(outer, carry0, ev)
+        theta, overflow = carry[0], carry[3]
+        if tel:
+            hist, obj_h, stale_h, upd_h = hist
+            return hist, theta, overflow[None], obj_h, stale_h, upd_h
         return hist, theta, overflow[None]
 
     ev_scan = _reshape_stream(stream, n_rec, record_every)
+    out_specs = (P(None, AGENT_AXIS, None), P(AGENT_AXIS), P(AGENT_AXIS))
+    if tel:
+        out_specs = out_specs + (P(None, AGENT_AXIS), P(None, AGENT_AXIS),
+                                 P(None, AGENT_AXIS))
     run = shard_map_1d(
         block_fn, mesh,
         in_specs=(_scan_specs(P(), ev_scan), P(AGENT_AXIS), P(AGENT_AXIS),
                   P(AGENT_AXIS), P(AGENT_AXIS), P(AGENT_AXIS),
                   P(AGENT_AXIS, None), P(AGENT_AXIS, None),
                   P(AGENT_AXIS, None), P(AGENT_AXIS, None)),
-        out_specs=(P(None, AGENT_AXIS, None), P(AGENT_AXIS), P(AGENT_AXIS)))
+        out_specs=out_specs)
     return run(ev_scan, theta0, K0, nbr_p, c, sol, fetch, bnd_pos,
                halo_src_shard, halo_src_pos)
 
@@ -438,7 +503,9 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
                             assignment: Optional[np.ndarray] = None,
                             local_batch: Optional[int] = None,
                             exchange: str = "all_gather",
-                            partition_seed: int = 0) -> ShardedSimTrace:
+                            partition_seed: int = 0,
+                            telemetry: Optional[TelemetryConfig] = None
+                            ) -> ShardedSimTrace:
     """``run_mp_scenario`` over a graph partitioned across the sim mesh.
 
     Same scenario semantics and RNG schedule as the single-device engine —
@@ -483,14 +550,23 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
         U = max(1, min(local_batch, 2 * batch))
     U = min(U, 2 * E)
 
-    hist, theta, overflow = _sharded_scenario_scan(
+    tel = telemetry_on(telemetry)
+    outs = _sharded_scenario_scan(
         mesh, stream, **{k: jnp.asarray(v) for k, v in sharded.items()},
         fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
         halo_src_shard=jnp.asarray(part.halo_src_shard),
         halo_src_pos=jnp.asarray(part.halo_src_pos),
         alpha=alpha, m=part.shard_size, H=part.halo_size,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
-        exchange=exchange)
+        exchange=exchange, tel=tel)
+    frames = None
+    if tel:
+        hist, theta, overflow, obj_h, stale_h, upd_h = outs
+        frames = _sharded_frames(
+            part, stream, n_rec, record_every, obj_h, stale_h, upd_h,
+            overflow, payload_row_bytes=4 * theta_sol.shape[1])
+    else:
+        hist, theta, overflow = outs
 
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
@@ -499,8 +575,9 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
         theta_hist=part.unshard_rows(np.asarray(hist)),
         active_hist=active_hist, delivered=delivered, dropped=dropped,
         rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
-        n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
-        local_batch=U, overflow=int(np.asarray(overflow).sum()))
+        telemetry=frames, n_shards=P_, edge_cut=part.edge_cut,
+        halo_size=part.halo_size, local_batch=U,
+        overflow=int(np.asarray(overflow).sum()))
 
 
 # ---------------------------------------------------------------------------
@@ -510,12 +587,14 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
 
 @partial(jax.jit,
          static_argnames=("mesh", "mu", "rho", "k", "m", "H", "E", "U",
-                          "n_rec", "record_every", "exchange"))
+                          "n_rec", "record_every", "exchange", "tel"))
 def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
                      nbr_w, deg_count, D, m_counts, sx,
-                     fetch, bnd_pos, halo_src_shard, halo_src_pos, *,
+                     fetch, bnd_pos, halo_src_shard, halo_src_pos,
+                     tel_args=(), *,
                      mu: float, rho: float, k: int, m: int, H: int, E: int,
-                     U: int, n_rec: int, record_every: int, exchange: str):
+                     U: int, n_rec: int, record_every: int, exchange: str,
+                     tel: bool = False):
     """shard_map'd CL-ADMM rounds: the six ADMM state arrays are row-sharded
     (P * m leading axis); the event stream is replicated and replayed per
     shard exactly as the MP engine does.
@@ -532,7 +611,7 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
 
     def block_fn(ev, theta0_blk, K0_blk, Zo_blk, Zn_blk, Lo_blk, Ln_blk,
                  w_blk, degc_blk, D_blk, mc_blk, sx_blk,
-                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk):
+                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk, *tel_blks):
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
@@ -545,7 +624,7 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
             return exchange_halo(pub)                  # (m + H + 1, 1+3k, p)
 
         def round_fn(carry, ev_t):
-            theta, K, Zo, Zn, Lo, Ln, ext_prev, overflow = carry
+            theta, K, Zo, Zn, Lo, Ln, ext_prev, overflow, *tstate = carry
 
             # --- compact to the events touching this shard (O(E) ~ 2B/P)
             rel = (fetch_q[ev_t.i] < m) | (fetch_q[ev_t.j] < m)
@@ -602,29 +681,50 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
             Zn = Zn.at[rowe, own_s].set(z_nbr, mode="drop")
             Lo = Lo.at[rowe, own_s].set(lo_new, mode="drop")
             Ln = Ln.at[rowe, own_s].set(ln_new, mode="drop")
-            return (theta, K, Zo, Zn, Lo, Ln, ext, overflow), None
+            if tel:
+                stale, updates = tstate
+                stale = tmetrics.staleness_step(stale, got, f_u, m)
+                updates = updates + jnp.sum(got)
+                tstate = (stale, updates)
+            return (theta, K, Zo, Zn, Lo, Ln, ext, overflow, *tstate), None
 
         def outer(carry, ev_blk):
             carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
+            if tel:
+                (sxx_blk,) = tel_blks
+                obj = tmetrics.cl_local_objective(
+                    carry[0], carry[1], w_blk, live_blk, D_blk, mc_blk,
+                    sx_blk, sxx_blk, mu)
+                stale, updates = carry[8:]
+                return carry, (carry[0], obj, stale, updates[None])
             return carry, carry[0]
 
         ext0 = publish(theta0_blk, K0_blk, Lo_blk, Ln_blk)  # warm-start halo
         carry0 = (theta0_blk, K0_blk, Zo_blk, Zn_blk, Lo_blk, Ln_blk, ext0,
                   jnp.int32(0))
-        (theta, *_, overflow), hist = jax.lax.scan(outer, carry0, ev)
+        if tel:
+            carry0 = carry0 + (jnp.zeros((m,), jnp.int32), jnp.int32(0))
+        carry, hist = jax.lax.scan(outer, carry0, ev)
+        theta, overflow = carry[0], carry[7]
+        if tel:
+            hist, obj_h, stale_h, upd_h = hist
+            return hist, theta, overflow[None], obj_h, stale_h, upd_h
         return hist, theta, overflow[None]
 
     ev_scan = _reshape_stream(stream, n_rec, record_every)
     row = P(AGENT_AXIS)
     per_shard = P(AGENT_AXIS, None)
+    out_specs = (P(None, AGENT_AXIS, None), row, row)
+    if tel:
+        out_specs = out_specs + (P(None, AGENT_AXIS),) * 3
     run = shard_map_1d(
         block_fn, mesh,
         in_specs=(_scan_specs(P(), ev_scan),) + (row,) * 11
-        + (per_shard,) * 4,
-        out_specs=(P(None, AGENT_AXIS, None), row, row))
+        + (per_shard,) * 4 + (row,) * len(tel_args),
+        out_specs=out_specs)
     return run(ev_scan, theta0, K0, Zo0, Zn0, Lo0, Ln0, nbr_w, deg_count,
                D, m_counts, sx, fetch, bnd_pos, halo_src_shard,
-               halo_src_pos)
+               halo_src_pos, *tel_args)
 
 
 def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
@@ -636,7 +736,8 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
                             local_batch: Optional[int] = None,
                             exchange: str = "all_gather",
                             partition_seed: int = 0,
-                            stream: Optional[EventStream] = None
+                            stream: Optional[EventStream] = None,
+                            telemetry: Optional[TelemetryConfig] = None
                             ) -> ShardedSimTrace:
     """``simulate.engines.run_cl_scenario`` over a graph partitioned across
     the sim mesh.
@@ -707,14 +808,29 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         U = max(1, min(local_batch, 2 * batch))
     U = min(U, 2 * E)
 
-    hist, theta, overflow = _sharded_cl_scan(
+    tel = telemetry_on(telemetry)
+    tel_args = ()
+    if tel:
+        sxx = np.asarray(jnp.sum(mask * jnp.sum(x * x, axis=-1), axis=1))
+        tel_args = (jnp.asarray(part.shard_rows(sxx)),)
+    outs = _sharded_cl_scan(
         mesh, stream, **{k_: jnp.asarray(v) for k_, v in sharded.items()},
         fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
         halo_src_shard=jnp.asarray(part.halo_src_shard),
-        halo_src_pos=jnp.asarray(part.halo_src_pos),
+        halo_src_pos=jnp.asarray(part.halo_src_pos), tel_args=tel_args,
         mu=mu, rho=rho, k=topo.k_max, m=part.shard_size, H=part.halo_size,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
-        exchange=exchange)
+        exchange=exchange, tel=tel)
+    frames = None
+    if tel:
+        hist, theta, overflow, obj_h, stale_h, upd_h = outs
+        p_dim = int(np.asarray(state0.theta).shape[1])
+        frames = _sharded_frames(
+            part, stream, n_rec, record_every, obj_h, stale_h, upd_h,
+            overflow,
+            payload_row_bytes=4 * (1 + 3 * topo.k_max) * p_dim)
+    else:
+        hist, theta, overflow = outs
 
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
@@ -723,8 +839,9 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         theta_hist=part.unshard_rows(np.asarray(hist)),
         active_hist=active_hist, delivered=delivered, dropped=dropped,
         rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
-        n_shards=P_, edge_cut=part.edge_cut, halo_size=part.halo_size,
-        local_batch=U, overflow=int(np.asarray(overflow).sum()))
+        telemetry=frames, n_shards=P_, edge_cut=part.edge_cut,
+        halo_size=part.halo_size, local_batch=U,
+        overflow=int(np.asarray(overflow).sum()))
 
 
 # ---------------------------------------------------------------------------
@@ -765,13 +882,14 @@ def _live_cross_edges(tabs, owner: np.ndarray, live: np.ndarray) -> int:
 @partial(jax.jit,
          static_argnames=("mesh", "alpha", "eta_graph", "lam", "graph_every",
                           "prune_eps", "m", "H", "E", "U", "n_rec",
-                          "record_every", "exchange", "backend"))
+                          "record_every", "exchange", "backend", "tel"))
 def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
                         live0, c, sol, fetch, bnd_pos, halo_src_shard,
-                        halo_src_pos, *, alpha: float, eta_graph: float,
-                        lam: float, graph_every: int, prune_eps, m: int,
-                        H: int, E: int, U: int, n_rec: int,
-                        record_every: int, exchange: str, backend=None):
+                        halo_src_pos, tel_args=(), *, alpha: float,
+                        eta_graph: float, lam: float, graph_every: int,
+                        prune_eps, m: int, H: int, E: int, U: int,
+                        n_rec: int, record_every: int, exchange: str,
+                        backend=None, tel: bool = False):
     """One jitted *segment* of the sharded joint engine.
 
     The MP round structure of ``_sharded_scenario_scan`` with the mixing
@@ -782,21 +900,28 @@ def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
     ``suppressed``).  ``theta_prev`` (the previous round's round-start
     models) rides the carry so the driver can rebuild the stale-payload
     ext buffer after a halo re-compaction changes ``H`` between segments.
+
+    ``tel`` (static) threads each shard's staleness counters through the
+    segment (``tel_args = (stale0,)`` row-sharded in, final counters out)
+    and adds per-chunk (objective, staleness, updates, suppressed) block
+    outputs, so segments compose into exactly the single-device
+    accumulators.
     """
     P_ = mesh_shards(mesh)
     batch = stream.i.shape[-1]
     prune = eta_graph > 0.0 and prune_eps is not None
 
     def block_fn(ev, ts_blk, theta0_blk, K0_blk, thp0_blk, w0_blk, live0_blk,
-                 c_blk, sol_blk, fetch_blk, bnd_blk, hsrc_blk, hpos_blk):
+                 c_blk, sol_blk, fetch_blk, bnd_blk, hsrc_blk, hpos_blk,
+                 *tel_blks):
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
         exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
 
         def round_fn(carry, inp):
-            theta, K, theta_prev, w, live, ext_prev, suppressed, overflow \
-                = carry
+            theta, K, theta_prev, w, live, ext_prev, suppressed, overflow, \
+                *tstate = carry
             ev_t, t = inp
             theta_in = theta
             ext = exchange_halo(theta)
@@ -859,34 +984,54 @@ def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
                     (t + 1) % graph_every == 0, do_graph,
                     lambda w, live: (w, live), w, live)
 
+            if tel:
+                stale, updates = tstate
+                stale = tmetrics.staleness_step(stale, got, f_u, m)
+                updates = updates + jnp.sum(got)
+                tstate = (stale, updates)
             return (theta, K, theta_in, w, live, ext, suppressed,
-                    overflow), None
+                    overflow, *tstate), None
 
         def outer(carry, inp):
             carry, _ = jax.lax.scan(round_fn, carry, inp)
             theta, _, _, w, live = carry[:5]
-            return carry, (theta, jnp.sum(live & (w > 0))[None])
+            edges = jnp.sum(live & (w > 0))[None]
+            if tel:
+                obj = tmetrics.mp_local_objective(
+                    theta, carry[1], jnp.where(live, w, 0.0), c_blk,
+                    sol_blk, alpha)
+                stale, updates = carry[8:]
+                return carry, (theta, edges, obj, stale, updates[None],
+                               carry[6][None])
+            return carry, (theta, edges)
 
         ext_prev0 = exchange_halo(thp0_blk)
         carry0 = (theta0_blk, K0_blk, thp0_blk, w0_blk, live0_blk, ext_prev0,
                   jnp.int32(0), jnp.int32(0))
-        carry, (hist, live_hist) = jax.lax.scan(outer, carry0,
-                                                (ev, ts_blk))
-        theta, K, theta_prev, w, live, _, suppressed, overflow = carry
-        return (hist, live_hist, theta, K, theta_prev, w, live,
+        if tel:
+            carry0 = carry0 + (tel_blks[0], jnp.int32(0))
+        carry, hist = jax.lax.scan(outer, carry0, (ev, ts_blk))
+        theta, K, theta_prev, w, live, _, suppressed, overflow = carry[:8]
+        base = (hist[0], hist[1], theta, K, theta_prev, w, live,
                 suppressed[None], overflow[None])
+        if tel:
+            return base + (hist[2], hist[3], hist[4], hist[5], carry[8])
+        return base
 
     ev_scan = _reshape_stream(stream, n_rec, record_every)
     row = P(AGENT_AXIS)
     per_shard = P(AGENT_AXIS, None)
+    out_specs = (P(None, AGENT_AXIS, None), P(None, AGENT_AXIS)) \
+        + (row,) * 5 + (P(AGENT_AXIS),) * 2
+    if tel:
+        out_specs = out_specs + (P(None, AGENT_AXIS),) * 4 + (row,)
     run = shard_map_1d(
         block_fn, mesh,
         in_specs=(_scan_specs(P(), ev_scan), P()) + (row,) * 7
-        + (per_shard,) * 4,
-        out_specs=(P(None, AGENT_AXIS, None), P(None, AGENT_AXIS))
-        + (row,) * 5 + (P(AGENT_AXIS),) * 2)
+        + (per_shard,) * 4 + (row,) * len(tel_args),
+        out_specs=out_specs)
     return run(ev_scan, ts, theta0, K0, theta_prev0, w0, live0, c, sol,
-               fetch, bnd_pos, halo_src_shard, halo_src_pos)
+               fetch, bnd_pos, halo_src_shard, halo_src_pos, *tel_args)
 
 
 def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
@@ -904,7 +1049,9 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
                                exchange: str = "all_gather",
                                partition_seed: int = 0,
                                stream: Optional[EventStream] = None,
-                               backend=None) -> JointShardedTrace:
+                               backend=None,
+                               telemetry: Optional[TelemetryConfig] = None
+                               ) -> JointShardedTrace:
     """``engines.run_joint_scenario`` over a graph partitioned across the
     sim mesh (DESIGN.md §13).
 
@@ -981,6 +1128,13 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
         max(1, min(n_rec, recompact_every // record_every))
     cross_at_compact = _live_cross_edges(tabs, owner, live0)
 
+    tel = telemetry_on(telemetry)
+    p_dim = theta_sol.shape[1]
+    stale = jnp.zeros((P_ * part.shard_size,), jnp.int32) if tel else None
+    tel_obj, tel_stale, tel_upd, tel_sup, tel_halo = [], [], [], [], []
+    upd_off = sup_off = halo_off = 0
+    ovf_shards = np.zeros(P_, np.int64)
+
     hists, live_hists = [], []
     suppressed = overflow = recompactions = 0
     done = 0
@@ -991,21 +1145,40 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
         ts_seg = jnp.arange(done * record_every,
                             (done + seg) * record_every,
                             dtype=jnp.int32).reshape(seg, record_every)
-        (hist, live_hist, theta, K, theta_prev, w, live, sup, ovf) = \
-            _sharded_joint_scan(
+        (hist, live_hist, theta, K, theta_prev, w, live, sup, ovf,
+         *tel_out) = _sharded_joint_scan(
                 mesh, ev_seg, ts_seg, theta, K, theta_prev, w, live,
                 c_sh, sol_sh, jnp.asarray(part.fetch),
                 jnp.asarray(part.bnd_pos),
                 jnp.asarray(part.halo_src_shard),
-                jnp.asarray(part.halo_src_pos), alpha=alpha,
+                jnp.asarray(part.halo_src_pos),
+                (stale,) if tel else (), alpha=alpha,
                 eta_graph=eta_graph, lam=lam, graph_every=graph_every,
                 prune_eps=prune_eps, m=part.shard_size, H=part.halo_size,
                 E=E, U=U, n_rec=seg, record_every=record_every,
-                exchange=exchange, backend=backend)
+                exchange=exchange, backend=backend, tel=tel)
         hists.append(np.asarray(hist))
         live_hists.append(np.asarray(live_hist).sum(axis=1))
         suppressed += int(np.asarray(sup).sum())
         overflow += int(np.asarray(ovf).sum())
+        if tel:
+            obj_h, stale_h, upd_h, sup_h, stale = tel_out
+            tel_obj.append(np.asarray(obj_h))
+            tel_stale.append(np.asarray(stale_h))
+            seg_upd = np.asarray(upd_h, np.int64).sum(axis=1)
+            tel_upd.append(upd_off + seg_upd)
+            upd_off = int(tel_upd[-1][-1])
+            seg_sup = np.asarray(sup_h, np.int64).sum(axis=1)
+            tel_sup.append(sup_off + seg_sup)
+            sup_off = int(tel_sup[-1][-1])
+            # halo payload of *this* segment's layout (re-compaction
+            # shrinks the boundary between segments)
+            per_round = halo_payload_bytes(
+                P_, part.boundary_size, 4 * p_dim, part.halo_size)
+            seg_rounds = (np.arange(seg, dtype=np.int64) + 1) * record_every
+            tel_halo.append(halo_off + seg_rounds * per_round)
+            halo_off = int(tel_halo[-1][-1])
+            ovf_shards += np.asarray(ovf, np.int64)
         done += seg
         if done < n_rec and can_recompact and cross_at_compact > 0:
             live_host = part.unshard_rows(np.asarray(live))
@@ -1016,6 +1189,18 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
                 cross_at_compact = cur_cross
                 recompactions += 1
 
+    frames = None
+    if tel:
+        frames = TelemetryFrames(
+            rounds=(np.arange(n_rec, dtype=np.int64) + 1) * record_every,
+            objective=np.concatenate(tel_obj)[:, part.perm_slot],
+            staleness=np.concatenate(tel_stale)[:, part.perm_slot],
+            updates=np.concatenate(tel_upd),
+            halo_bytes=np.concatenate(tel_halo),
+            overflow_per_shard=ovf_shards,
+            suppressed=np.concatenate(tel_sup),
+            **tmetrics.stream_chunk_totals(stream, n_rec, record_every))
+
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
         n_rec, record_every)[:, -1]
@@ -1023,8 +1208,8 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
         theta_hist=part.unshard_rows(np.concatenate(hists, axis=0)),
         active_hist=active_hist, delivered=delivered, dropped=dropped,
         rounds=total_rounds, events=total_rounds * batch, invalid=invalid,
-        n_shards=P_, edge_cut=full_cut, halo_size=part.halo_size,
-        local_batch=U, overflow=overflow,
+        telemetry=frames, n_shards=P_, edge_cut=full_cut,
+        halo_size=part.halo_size, local_batch=U, overflow=overflow,
         final_w=part.unshard_rows(np.asarray(w)),
         final_live=part.unshard_rows(np.asarray(live)),
         live_edges_hist=np.concatenate(live_hists),

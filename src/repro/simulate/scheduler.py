@@ -74,6 +74,10 @@ class EventBatch(NamedTuple):
                               # with every agent churned out, or for a
                               # degree-0 waker) — excluded from the
                               # delivered/dropped accounting entirely
+    cut: jnp.ndarray          # bool: the pair straddled an active partition
+                              # window (both directions lost to the cut)
+    dead: jnp.ndarray         # bool: an endpoint was churned out (both
+                              # directions lost to churn unless cut first)
 
 
 def straggler_rates(key, cond: NetworkConditions, n: int) -> jnp.ndarray:
@@ -152,9 +156,12 @@ def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
         in_window = (t >= cond.partition_start) & (t < cond.partition_end)
         cut = in_window & (part_half[i] != part_half[j])
         ok &= ~cut
+    else:
+        cut = jnp.zeros((B,), bool)
     # an inactive endpoint kills both directions (i inactive can't happen
     # through the wake draw unless everyone is inactive; guard anyway)
-    ok &= active[i] & active[j]
+    dead = ~(active[i] & active[j])
+    ok &= ~dead
     if cond.stale_prob > 0.0:
         # per-sender-per-round draw: identical payload for duplicate events
         n = tabs.deg_count.shape[0]
@@ -164,7 +171,7 @@ def draw_events(key, cond: NetworkConditions, tabs, part_half, active,
     else:
         stale_ij = stale_ji = jnp.zeros((B,), bool)
     return EventBatch(i, s, j, r, ok & ~drop_ij, ok & ~drop_ji,
-                      stale_ij, stale_ji, valid)
+                      stale_ij, stale_ji, valid, cut, dead)
 
 
 def churn_step(key, cond: NetworkConditions, active) -> jnp.ndarray:
@@ -183,7 +190,9 @@ class EventStream(NamedTuple):
     shard of the partitioned engine — each shard then does zero O(n)
     sampling work per round.  All arrays are (rounds, B) except
     ``active_frac`` (rounds,), the live-agent fraction after each round's
-    churn.  Field semantics match :class:`EventBatch`.
+    churn.  Field semantics match :class:`EventBatch` (whose fields must
+    stay a prefix of this tuple — ``_draw_stream`` splats one into the
+    other).
     """
 
     i: jnp.ndarray
@@ -195,6 +204,8 @@ class EventStream(NamedTuple):
     stale_ij: jnp.ndarray
     stale_ji: jnp.ndarray
     valid: jnp.ndarray
+    cut: jnp.ndarray
+    dead: jnp.ndarray
     active_frac: jnp.ndarray
 
 

@@ -1,0 +1,27 @@
+"""Carry-resident run telemetry for the scenario engines (DESIGN.md §14).
+
+The metrics layer the paper's convergence story needs: per-record-chunk
+objective residuals (Eq. 3 / Eq. 7 local views), per-agent staleness
+counters, drop attribution by ``NetworkConditions`` cause, halo payload
+accounting for the sharded engines, and run manifests + JSONL emission so
+``tools/trace_report.py`` can render any run after the fact.
+
+Everything in-scan accumulates inside the jitted carry — no host
+callbacks — and every per-agent metric is emitted as a full (n,) vector
+per chunk and reduced host-side in canonical agent order, which is what
+makes sharded and single-device telemetry *exactly* equal (the same
+bit-for-bit strategy the engines themselves use).  With
+``TelemetryConfig(enabled=False)`` (or ``telemetry=None``) the engines
+trace the identical program they traced before telemetry existed.
+"""
+
+from .config import TelemetryConfig
+from .frames import TelemetryFrames
+from .manifest import backend_config_hash, build_manifest
+from .metrics import (batch_drop_causes, cl_local_objective,
+                      mp_local_objective, staleness_step,
+                      stream_chunk_totals, stream_drop_causes)
+from .report import (format_row, load_run, render_summary, trace_rows,
+                     write_run)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

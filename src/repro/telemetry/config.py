@@ -1,0 +1,26 @@
+"""Static (trace-time) telemetry configuration."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Switch for the carry-resident metrics layer (DESIGN.md §14).
+
+    Frozen/hashable so engines can take it as a ``jax.jit`` static
+    argument: the metric accumulators (per-agent staleness counters, drop
+    attribution, update counts, per-chunk objective snapshots) are traced
+    into the scan only when ``enabled`` — with ``enabled=False`` (or the
+    engines' default ``telemetry=None``) the compiled program is the exact
+    pre-telemetry scan, which is the bit-for-bit anchor the parity tests
+    pin.
+    """
+
+    enabled: bool = False
+
+
+def telemetry_on(telemetry) -> bool:
+    """Normalize the engines' ``telemetry`` kwarg (None = off) to a bool."""
+    return telemetry is not None and telemetry.enabled

@@ -1,0 +1,77 @@
+"""Run manifests: what produced a metrics file, hashed for comparison.
+
+A manifest pins everything needed to interpret (or re-run) a recorded
+scenario: the kernel backend configuration and its hash, the device mesh
+shape, the RNG seed, the git revision, and the library versions.  It is
+deliberately a plain JSON-able dict — ``report.write_run`` drops it next
+to the metrics JSONL and ``tools/trace_report.py`` reads it back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import platform
+import subprocess
+from typing import Optional
+
+
+def _as_jsonable(obj):
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {k: _as_jsonable(v)
+                for k, v in dataclasses.asdict(obj).items()}
+    if isinstance(obj, dict):
+        return {str(k): _as_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_as_jsonable(v) for v in obj]
+    return str(obj)
+
+
+def backend_config_hash(backend) -> str:
+    """Short stable hash of a kernel backend config (or any dataclass).
+
+    Canonical JSON (sorted keys) -> sha256 -> first 12 hex chars; two runs
+    share a hash iff their backend selections match field-for-field.
+    """
+    blob = json.dumps(_as_jsonable(backend), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def _git_rev() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=5)
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def build_manifest(backend=None, mesh_shape=None, seed=None,
+                   extra: Optional[dict] = None) -> dict:
+    """Assemble the run manifest dict.
+
+    backend: the kernel BackendConfig (or None for library defaults);
+    mesh_shape: device-mesh shape tuple for sharded runs (None on one
+    device); seed: the scenario RNG seed; extra: caller-specific fields
+    (scenario name, conditions, sizes) merged in last.
+    """
+    import jax
+
+    manifest = {
+        "backend_config": _as_jsonable(backend),
+        "backend_hash": backend_config_hash(backend),
+        "mesh_shape": list(mesh_shape) if mesh_shape is not None else None,
+        "seed": seed,
+        "git_rev": _git_rev(),
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "device_count": jax.device_count(),
+    }
+    if extra:
+        manifest.update(_as_jsonable(extra))
+    return manifest

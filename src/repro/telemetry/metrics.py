@@ -1,0 +1,167 @@
+"""In-scan metric expressions + host-side stream reductions.
+
+The in-scan helpers (:func:`mp_local_objective`, :func:`cl_local_objective`,
+:func:`staleness_step`, :func:`batch_drop_causes`) are written as *row-local*
+jnp expressions: each agent's contribution reads only that agent's own slot
+row, so the sharded engines can apply the identical arithmetic to their
+local (m, ...) blocks and the reassembled (n,) vectors are bit-for-bit the
+single-device ones — the same parity strategy as the engines' model
+updates (``core.sparse``).  Global reductions (objective sums, staleness
+percentiles) happen host-side in canonical agent order
+(:mod:`repro.telemetry.frames`), never inside the scan, so float summation
+order cannot differ between mesh shapes.
+
+The stream reductions (:func:`stream_drop_causes`,
+:func:`stream_chunk_totals`) attribute every counted drop of a
+materialized ``EventStream`` to its ``NetworkConditions`` cause using the
+stream's ``cut``/``dead`` flags (recorded by ``scheduler.draw_events``
+from the same draws that decided delivery — no extra RNG):
+
+    partition — the pair straddled an active partition window
+    churn     — otherwise, an endpoint was churned out
+    link      — otherwise, the iid per-direction message loss
+
+Causes are disjoint and exhaustive over counted drops, so
+``link + churn + partition == dropped`` for every run.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# in-scan, row-local metric expressions
+# ---------------------------------------------------------------------------
+
+
+def mp_local_objective(theta, K, w, c, theta_sol, alpha: float):
+    """Per-agent local view of the MP objective (paper Eq. 3) from slot rows.
+
+    obj_i = alpha * sum_s w[i, s] ||theta_i - K[i, s]||^2
+            + (1 - alpha) * c_i ||theta_i - theta_sol_i||^2
+
+    ``w`` is the row-stochastic mixing weight table (``tabs.nbr_p``, or the
+    learned weights of the joint engine — pruned/pad slots carry weight 0,
+    so they contribute nothing).  The smoothness term reads the agent's
+    *copies* ``K`` rather than true neighbor models — the quantity a
+    decentralized agent can actually observe; with fresh copies it equals
+    the Eq. 3 disagreement term up to the alpha/mu reparametrization.
+    Shapes: theta (rows, p), K (rows, k, p), w (rows, k), c (rows,),
+    theta_sol (rows, p) -> (rows,) float32.
+    """
+    d = theta[:, None, :] - K
+    smooth = jnp.sum(w * jnp.sum(d * d, axis=-1), axis=-1)
+    r = theta - theta_sol
+    anchor = c * jnp.sum(r * r, axis=-1)
+    return alpha * smooth + (1.0 - alpha) * anchor
+
+
+def cl_local_objective(theta, K, nbr_w, live, D, m_counts, sx, sxx,
+                       mu: float):
+    """Per-agent local view of the CL objective (paper Eq. 7, quadratic).
+
+    obj_i = 0.5 * sum_s W[i, s] ||theta_i - K[i, s]||^2
+            + mu * D_i * L_i(theta_i)
+
+    with the quadratic loss expanded through the engines' own sufficient
+    statistics: L_i(theta) = m_i ||theta||^2 - 2 theta . sx_i + sxx_i
+    (sxx_i = sum_k mask ||x_k||^2 is the one statistic the engines don't
+    already carry; the telemetry path threads it in).  Row-local like
+    :func:`mp_local_objective`.  Shapes: theta (rows, p), K (rows, k, p),
+    nbr_w (rows, k), live (rows, k) bool, D/m_counts/sxx (rows,),
+    sx (rows, p) -> (rows,) float32.
+    """
+    d = theta[:, None, :] - K
+    wl = jnp.where(live, nbr_w, 0.0)
+    smooth = 0.5 * jnp.sum(wl * jnp.sum(d * d, axis=-1), axis=-1)
+    loss = (m_counts * jnp.sum(theta * theta, axis=-1)
+            - 2.0 * jnp.sum(theta * sx, axis=-1) + sxx)
+    return smooth + mu * D * loss
+
+
+def staleness_step(stale, got, rows, n_rows: int):
+    """One round of per-agent staleness counters.
+
+    ``stale`` (n_rows,) int32 counts rounds since each agent last absorbed
+    a neighbor update; an agent listed in ``rows`` with ``got`` True
+    resets to 0, everyone else ages by one.  ``rows`` may repeat and may
+    contain out-of-range padding (scattered with mode="drop"), matching
+    exactly the engines' own theta-update scatter condition.
+    """
+    recv = jnp.zeros((n_rows,), bool).at[
+        jnp.where(got, rows, n_rows)].set(True, mode="drop")
+    return jnp.where(recv, 0, stale + 1).astype(jnp.int32)
+
+
+def batch_drop_causes(deliver_ij, deliver_ji, valid, cut, dead):
+    """(link, churn, partition) int32 drop counts for one event batch.
+
+    Counts both directions of every *valid* event whose message was lost,
+    attributed by the disjoint priority partition > churn > link (see the
+    module docstring).  The same expression :func:`stream_drop_causes`
+    applies host-side, so inline-engine counters and stream reductions
+    always agree.
+    """
+    link = jnp.int32(0)
+    churn = jnp.int32(0)
+    part = jnp.int32(0)
+    for deliver in (deliver_ij, deliver_ji):
+        drop = valid & ~deliver
+        part += jnp.sum(drop & cut)
+        churn += jnp.sum(drop & ~cut & dead)
+        link += jnp.sum(drop & ~cut & ~dead)
+    return link, churn, part
+
+
+# ---------------------------------------------------------------------------
+# host-side reductions over materialized event streams
+# ---------------------------------------------------------------------------
+
+
+def stream_drop_causes(stream) -> tuple:
+    """Total (link, churn, partition) drop attribution of an EventStream."""
+    valid = np.asarray(stream.valid)
+    cut = np.asarray(stream.cut)
+    dead = np.asarray(stream.dead)
+    link = churn = part = 0
+    for deliver in (np.asarray(stream.deliver_ij),
+                    np.asarray(stream.deliver_ji)):
+        drop = valid & ~deliver
+        part += int((drop & cut).sum())
+        churn += int((drop & ~cut & dead).sum())
+        link += int((drop & ~cut & ~dead).sum())
+    return link, churn, part
+
+
+def stream_chunk_totals(stream, n_rec: int, record_every: int) -> dict:
+    """Cumulative per-record-chunk accounting of an EventStream.
+
+    Returns (n_rec,) int64 arrays — delivered, drop_link, drop_churn,
+    drop_partition, invalid — each cumulative up to the end of its chunk,
+    so the last entries equal ``stream_totals`` + :func:`stream_drop_causes`
+    of the whole stream.
+    """
+    def _chunked(x):
+        return np.asarray(x).reshape(n_rec, record_every, -1)
+
+    d_ij, d_ji = _chunked(stream.deliver_ij), _chunked(stream.deliver_ji)
+    valid = _chunked(stream.valid)
+    cut, dead = _chunked(stream.cut), _chunked(stream.dead)
+    link = np.zeros(n_rec, np.int64)
+    churn = np.zeros(n_rec, np.int64)
+    part = np.zeros(n_rec, np.int64)
+    for deliver in (d_ij, d_ji):
+        drop = valid & ~deliver
+        part += (drop & cut).sum(axis=(1, 2))
+        churn += (drop & ~cut & dead).sum(axis=(1, 2))
+        link += (drop & ~cut & ~dead).sum(axis=(1, 2))
+    return {
+        "delivered": np.cumsum(d_ij.sum(axis=(1, 2))
+                               + d_ji.sum(axis=(1, 2))),
+        "drop_link": np.cumsum(link),
+        "drop_churn": np.cumsum(churn),
+        "drop_partition": np.cumsum(part),
+        "invalid": np.cumsum((~valid).sum(axis=(1, 2))),
+    }

@@ -31,7 +31,7 @@ def exact_admm_stream(topo, steps, record_every, seed) -> EventStream:
     j = np.asarray(tabs.nbr_idx)[i, s]
     r = np.asarray(tabs.rev_slot)[i, s]
     t = np.ones(i.shape, bool)
-    return EventStream(i, s, j, r, t, t, ~t, ~t, t,
+    return EventStream(i, s, j, r, t, t, ~t, ~t, t, ~t, ~t,
                        np.ones(i.shape[0], np.float32))
 
 

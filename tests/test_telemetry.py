@@ -1,0 +1,325 @@
+"""In-scan telemetry substrate: the disabled config is a bit-for-bit no-op
+on every engine, enabled frames carry per-chunk objective/staleness/drop
+attribution that matches host-side references, sharded frames match the
+single-device engines exactly (in-process and on an 8-fake-device mesh),
+and the manifest/JSONL/report layer round-trips."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.losses import pad_datasets, solitary_mean
+from repro.kernels.dispatch import ReproBackend
+from repro.simulate import (NetworkConditions, random_geometric_topology,
+                            run_cl_scenario, run_cl_scenario_sharded,
+                            run_joint_scenario, run_mp_scenario,
+                            run_mp_scenario_sharded)
+from repro.telemetry import (TelemetryConfig, backend_config_hash,
+                             build_manifest, load_run, render_summary,
+                             trace_rows, write_run)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: every fault mechanism active, so all three drop causes accumulate
+FAULTY = NetworkConditions(drop_prob=0.1, stale_prob=0.3, churn_rate=0.01,
+                           straggler_frac=0.3, partition_start=5,
+                           partition_end=20)
+
+ON = TelemetryConfig(enabled=True)
+OFF = TelemetryConfig(enabled=False)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    topo = random_geometric_topology(120, k=4, seed=0)
+    rng = np.random.default_rng(0)
+    sol = rng.standard_normal((120, 4)).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, 120).astype(np.float32)
+    xs = [rng.standard_normal((int(rng.integers(1, 6)), 4))
+          for _ in range(120)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    cl_sol = np.asarray(solitary_mean(data), np.float32)
+    return topo, sol, c, data, cl_sol
+
+
+MP_KW = dict(rounds=40, batch=16, seed=3, record_every=10)
+
+
+class TestDisabledAnchor:
+    """telemetry=None, enabled=False and enabled=True all run the same
+    trajectory; only the enabled run attaches frames."""
+
+    def test_mp(self, problem):
+        topo, sol, c, _, _ = problem
+        runs = [run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=t,
+                                **MP_KW) for t in (None, OFF, ON)]
+        assert runs[0].telemetry is None and runs[1].telemetry is None
+        assert runs[2].telemetry is not None
+        for r in runs[1:]:
+            assert np.array_equal(r.theta_hist, runs[0].theta_hist)
+            assert (r.delivered, r.dropped, r.invalid) == \
+                (runs[0].delivered, runs[0].dropped, runs[0].invalid)
+
+    def test_cl(self, problem):
+        topo, _, _, data, cl_sol = problem
+        runs = [run_cl_scenario(topo, data, 0.1, 1.0, FAULTY,
+                                theta_sol=cl_sol, telemetry=t, **MP_KW)
+                for t in (None, OFF, ON)]
+        assert runs[2].telemetry is not None
+        for r in runs[1:]:
+            assert np.array_equal(r.theta_hist, runs[0].theta_hist)
+
+    def test_joint(self, problem):
+        topo, sol, c, _, _ = problem
+        kw = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+        runs = [run_joint_scenario(topo, sol, c, 0.9, FAULTY, telemetry=t,
+                                   **kw, **MP_KW) for t in (None, OFF, ON)]
+        assert runs[2].telemetry is not None
+        for r in runs[1:]:
+            assert np.array_equal(r.theta_hist, runs[0].theta_hist)
+            assert np.array_equal(r.final_w, runs[0].final_w)
+
+    def test_config_is_hashable_static(self):
+        assert hash(ON) != hash(OFF) or ON != OFF
+        assert {ON: 1, OFF: 2}[TelemetryConfig(enabled=True)] == 1
+
+
+class TestFrames:
+    def test_mp_attribution_invariants(self, problem):
+        """Cumulative frame counters end at the trace totals, and the three
+        drop causes partition the dropped count exactly."""
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=ON,
+                             **MP_KW)
+        f = tr.telemetry
+        n_rec = 4
+        assert f.objective.shape == (n_rec, topo.n)
+        assert f.staleness.shape == (n_rec, topo.n)
+        assert int(f.delivered[-1]) == tr.delivered
+        assert int(f.invalid[-1]) == tr.invalid
+        drops = f.drop_link + f.drop_churn + f.drop_partition
+        assert int(drops[-1]) == tr.dropped
+        assert int(f.drop_link[-1]) > 0          # every cause fired
+        assert int(f.drop_churn[-1]) > 0
+        assert int(f.drop_partition[-1]) > 0
+        # cumulative columns are monotone
+        for col in (f.delivered, drops, f.invalid, f.updates):
+            assert np.all(np.diff(col) >= 0)
+        assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+
+    def test_mp_objective_decreases_on_clean_run(self, problem):
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, NetworkConditions(),
+                             rounds=120, batch=16, seed=0, record_every=30,
+                             telemetry=ON)
+        obj = tr.telemetry.objective.astype(np.float64).sum(axis=1)
+        assert np.all(np.isfinite(obj))
+        assert obj[-1] < obj[0]
+
+    def test_staleness_matches_host_reference(self, problem):
+        """Replay the recorded event stream in numpy: every tick ages every
+        agent one round, delivered endpoints reset to zero."""
+        from test_cl_scenario import exact_admm_stream
+        topo, _, _, data, cl_sol = problem
+        rounds, re_ = 40, 10
+        stream = exact_admm_stream(topo, rounds, re_, seed=7)
+        tr = run_cl_scenario(topo, data, 0.1, 1.0, NetworkConditions(),
+                             rounds=rounds, batch=1, seed=7,
+                             record_every=re_, theta_sol=cl_sol,
+                             stream=stream, telemetry=ON)
+        i = np.asarray(stream.i)[:, 0]
+        j = np.asarray(stream.j)[:, 0]
+        d_ij = np.asarray(stream.deliver_ij)[:, 0]
+        d_ji = np.asarray(stream.deliver_ji)[:, 0]
+        stale = np.zeros(topo.n, np.int64)
+        want = []
+        for t in range(rounds):
+            stale += 1
+            if d_ji[t]:
+                stale[i[t]] = 0
+            if d_ij[t]:
+                stale[j[t]] = 0
+            if (t + 1) % re_ == 0:
+                want.append(stale.copy())
+        assert np.array_equal(tr.telemetry.staleness, np.stack(want))
+
+    def test_summary_percentiles(self, problem):
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=ON,
+                             **MP_KW)
+        rows = trace_rows(tr)
+        assert len(rows) == 4
+        last = rows[-1]
+        s = tr.telemetry.staleness[-1]
+        assert last["staleness_p50"] == float(np.percentile(s, 50))
+        assert last["staleness_p99"] == float(np.percentile(s, 99))
+        assert last["delivered"] == tr.delivered
+
+    def test_trace_rows_fallback_without_frames(self, problem):
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, FAULTY, **MP_KW)
+        rows = trace_rows(tr)
+        assert len(rows) == 1 and rows[0]["delivered"] == tr.delivered
+
+
+class TestShardedParity:
+    """In-process parity on however many devices exist (P >= 1); the real
+    8-shard mesh runs in the subprocess test below."""
+
+    def test_mp_frames_match_single_device(self, problem):
+        topo, sol, c, _, _ = problem
+        single = run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=ON,
+                                 **MP_KW)
+        shard = run_mp_scenario_sharded(topo, sol, c, 0.9, FAULTY,
+                                        telemetry=ON, **MP_KW)
+        a, b = single.telemetry, shard.telemetry
+        for fld in ("objective", "staleness", "updates", "delivered",
+                    "drop_link", "drop_churn", "drop_partition", "invalid"):
+            assert np.array_equal(getattr(a, fld), getattr(b, fld)), fld
+        assert b.halo_bytes is not None and b.overflow_per_shard is not None
+
+    def test_cl_frames_match_single_device(self, problem):
+        topo, _, _, data, cl_sol = problem
+        single = run_cl_scenario(topo, data, 0.1, 1.0, FAULTY,
+                                 theta_sol=cl_sol, telemetry=ON, **MP_KW)
+        shard = run_cl_scenario_sharded(topo, data, 0.1, 1.0, FAULTY,
+                                        theta_sol=cl_sol, telemetry=ON,
+                                        **MP_KW)
+        a, b = single.telemetry, shard.telemetry
+        for fld in ("objective", "staleness", "updates", "delivered",
+                    "drop_link", "drop_churn", "drop_partition", "invalid"):
+            assert np.array_equal(getattr(a, fld), getattr(b, fld)), fld
+
+    def test_sharded_disabled_is_bitwise_anchor(self, problem):
+        topo, sol, c, _, _ = problem
+        off = run_mp_scenario_sharded(topo, sol, c, 0.9, FAULTY, **MP_KW)
+        on = run_mp_scenario_sharded(topo, sol, c, 0.9, FAULTY,
+                                     telemetry=ON, **MP_KW)
+        assert np.array_equal(off.theta_hist, on.theta_hist)
+        assert off.telemetry is None
+
+
+class TestManifestAndRuns:
+    def test_manifest_keys_and_hash_stability(self):
+        m = build_manifest(backend=ReproBackend.using(mix="reference"),
+                           mesh_shape=(8,), seed=5,
+                           extra={"scenario": "clean"})
+        for key in ("backend_hash", "mesh_shape", "seed", "git_rev",
+                    "jax_version", "platform", "device_count", "scenario"):
+            assert key in m, key
+        b1 = ReproBackend.using(mix="reference")
+        b2 = ReproBackend.using(mix="xla")
+        assert backend_config_hash(b1) == backend_config_hash(
+            ReproBackend.using(mix="reference"))
+        assert backend_config_hash(b1) != backend_config_hash(b2)
+        assert len(m["backend_hash"]) == 12
+
+    def test_run_dir_roundtrip(self, problem, tmp_path):
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=ON,
+                             **MP_KW)
+        manifest = build_manifest(seed=3, extra={"scenario": "faulty"})
+        rows = trace_rows(tr)
+        d = str(tmp_path / "run")
+        write_run(d, manifest, rows)
+        m2, rows2 = load_run(d)
+        assert m2 == json.loads(json.dumps(manifest))
+        assert rows2 == json.loads(json.dumps(rows))
+        text = render_summary(m2, rows2)
+        assert "final:" in text and "staleness:" in text
+
+    def test_jsonl_one_row_per_chunk(self, problem, tmp_path):
+        topo, sol, c, _, _ = problem
+        tr = run_mp_scenario(topo, sol, c, 0.9, FAULTY, telemetry=ON,
+                             **MP_KW)
+        d = str(tmp_path / "run")
+        write_run(d, build_manifest(), trace_rows(tr))
+        with open(os.path.join(d, "metrics.jsonl")) as f:
+            lines = [json.loads(line) for line in f]
+        assert len(lines) == tr.telemetry.n_records
+        assert lines[-1]["round"] == tr.rounds
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device subprocess: telemetry parity on a true multi-shard mesh
+# ---------------------------------------------------------------------------
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    assert jax.device_count() == 8
+    from repro.core.losses import pad_datasets, solitary_mean
+    from repro.simulate import (NetworkConditions,
+                                random_geometric_topology,
+                                run_cl_scenario, run_cl_scenario_sharded,
+                                run_joint_scenario,
+                                run_joint_scenario_sharded,
+                                run_mp_scenario, run_mp_scenario_sharded)
+    from repro.telemetry import TelemetryConfig
+
+    ON = TelemetryConfig(enabled=True)
+    FIELDS = ("objective", "staleness", "updates", "delivered",
+              "drop_link", "drop_churn", "drop_partition", "invalid")
+
+    def check(a, b, tag):
+        for fld in FIELDS:
+            assert np.array_equal(getattr(a, fld), getattr(b, fld)), \\
+                (tag, fld)
+        assert b.halo_bytes is not None and np.all(b.halo_bytes >= 0), tag
+        assert b.overflow_per_shard.shape == (8,), tag
+
+    topo = random_geometric_topology(300, k=5, seed=2)
+    rng = np.random.default_rng(0)
+    sol = rng.standard_normal((300, 4)).astype(np.float32)
+    c = rng.uniform(0.05, 1.0, 300).astype(np.float32)
+    cond = NetworkConditions(drop_prob=0.1, stale_prob=0.3,
+                             churn_rate=0.01, straggler_frac=0.3,
+                             partition_start=10, partition_end=30)
+    kw = dict(rounds=60, batch=16, seed=2, record_every=10, telemetry=ON)
+
+    tr = run_mp_scenario(topo, sol, c, 0.9, cond, **kw)
+    sh = run_mp_scenario_sharded(topo, sol, c, 0.9, cond, **kw)
+    assert sh.n_shards == 8
+    check(tr.telemetry, sh.telemetry, "mp")
+    assert tr.telemetry.drop_partition[-1] > 0
+
+    xs = [rng.standard_normal((int(rng.integers(1, 6)), 4))
+          for _ in range(300)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    cl_sol = np.asarray(solitary_mean(data), np.float32)
+    cl = run_cl_scenario(topo, data, 0.1, 1.0, cond, theta_sol=cl_sol, **kw)
+    cl_sh = run_cl_scenario_sharded(topo, data, 0.1, 1.0, cond,
+                                    theta_sol=cl_sol, **kw)
+    check(cl.telemetry, cl_sh.telemetry, "cl")
+
+    # joint engine with re-compaction: telemetry state threads across the
+    # segment boundaries (stale carries over, counters accumulate offsets)
+    jkw = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+    jt = run_joint_scenario(topo, sol, c, 0.9, cond, **jkw, **kw)
+    jt_sh = run_joint_scenario_sharded(topo, sol, c, 0.9, cond, **jkw,
+                                       recompact_every=20, **kw)
+    check(jt.telemetry, jt_sh.telemetry, "joint")
+    assert np.array_equal(jt.telemetry.suppressed, jt_sh.telemetry.suppressed)
+    print("TELEMETRY-8DEV-OK")
+""")
+
+
+def test_eight_device_telemetry_subprocess():
+    """Sharded telemetry equals single-device on a real 8-shard mesh (the
+    XLA device-count flag must precede jax init, hence the subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "TELEMETRY-8DEV-OK" in out.stdout
