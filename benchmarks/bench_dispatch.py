@@ -1,5 +1,6 @@
 """Backend-dispatch benchmark: time every available implementation of the
-MP-mix and ADMM-primal hot loops (plus the sparse gather-mix) and write a
+MP-mix and ADMM-primal hot loops (plus the sparse gather-mix and the fused
+``round_step`` gossip round at B = 64/512/4096 event batches) and write a
 ``BENCH_dispatch.json`` with per-backend timings and parity errors.
 
     PYTHONPATH=src python benchmarks/bench_dispatch.py            # full
@@ -237,13 +238,85 @@ def bench_edge_reweight(smoke: bool, interpret: bool, repeats: int) -> dict:
     return {"shape": {"n": n, "k": k}, "impls": impls}
 
 
+def bench_round_step(smoke: bool, interpret: bool, repeats: int,
+                     batch: int) -> dict:
+    """The fused MP gossip round (DESIGN.md §15) at one event-batch size.
+
+    The timed loop prefetches each round's operands from the carried flat
+    slot table (``round_prefetch``) and feeds ``(theta, Ke, got_ever)``
+    back through the same event batch — exactly the scenario engines' scan
+    carry — so us_per_loop / loop_iters is the per-round cost the engine
+    pays at this batch size.
+    """
+    from repro.kernels.dispatch import round_prefetch, round_scales
+    n, k, p = (2048, 8, 16) if smoke else (10000, 8, 32)
+    loops = 5 if smoke else 50
+    rng = np.random.default_rng(4)
+    f32 = jnp.float32
+    K = jnp.asarray(rng.standard_normal((n, k, p)), f32)
+    Ke = dispatch.encode_slots(K)
+    nbr_p = jnp.asarray(rng.uniform(0, 1, (n, k)), f32)
+    theta = jnp.asarray(rng.standard_normal((n, p)), f32)
+    got0 = jnp.zeros((n,), bool)
+    base = jnp.asarray(rng.standard_normal((n, p)), f32)
+    c = jnp.asarray(rng.uniform(0.1, 1, n), f32)
+    a_w = round_scales(nbr_p, c, alpha=0.9)
+    # collision-free targets: duplicate winners are realization-dependent
+    # (see round_fuse docstring), which would read as parity drift here
+    codes = rng.choice(n * k, size=2 * batch, replace=False)
+    ev = (jnp.asarray(codes[batch:] // k, jnp.int32),
+          jnp.asarray(codes[:batch] // k, jnp.int32),
+          jnp.asarray(codes[batch:] % k, jnp.int32),
+          jnp.asarray(codes[:batch] % k, jnp.int32),
+          jnp.asarray(rng.uniform(size=batch) < 0.8),
+          jnp.asarray(rng.uniform(size=batch) < 0.8),
+          jnp.asarray(rng.uniform(size=batch) < 0.2),
+          jnp.asarray(rng.uniform(size=batch) < 0.2))
+    ops0 = round_prefetch(theta, theta, Ke, *ev)
+    want = resolve("round_step", ReproBackend.using(
+        round_step="reference"))(theta, Ke, got0, *ops0, base, a_w)
+    impls = {}
+    for name, backend, skip in _runnable_impls("round_step", interpret):
+        if skip is None and name == "pallas" and batch > 512 \
+                and jax.default_backend() != "tpu":
+            # the interpret-mode event loop is ~seconds per round here;
+            # parity is already pinned at B <= 512 and in tests/
+            skip = "interpret mode too slow at this batch (parity covered " \
+                   "at B <= 512)"
+        if skip:
+            impls[name] = {"skipped": skip}
+            continue
+        step = resolve("round_step", backend)
+
+        def body(carry, _, step=step):
+            th, ke, go = carry
+            th2, ke2, go2, _ = step(th, ke, go,
+                                    *round_prefetch(th, th, ke, *ev),
+                                    base, a_w)
+            return (th2, ke2, go2), None
+
+        loop = jax.jit(lambda s0, body=body: jax.lax.scan(
+            body, s0, None, length=loops)[0][0])
+        impls[name] = {
+            "maxerr": _maxerr(step(theta, Ke, got0, *ops0, base, a_w)[:2],
+                              want[:2]),
+            "us_per_loop": _time_loop(lambda: loop((theta, Ke, got0)),
+                                      repeats),
+            "loop_iters": loops,
+        }
+    return {"shape": {"n": n, "k": k, "p": p, "B": batch}, "impls": impls}
+
+
 PARITY_FLOOR = 1e-5          # drift below this is float noise, never gated
 MAX_SLOWDOWN = 2.0           # vs baseline, after machine-speed normalization
 
 
 def _is_gated_timing(op: str, impl: str) -> bool:
     """Pallas interpret-mode timings are validation artifacts, not perf."""
+    import re
+
     from repro.kernels.dispatch import _REGISTRY
+    op = re.sub(r"_b\d+$", "", op)     # round_step_b512 -> round_step
     entry = _REGISTRY.get(op, {}).get(impl)
     return entry is not None and not entry.pallas
 
@@ -306,6 +379,11 @@ def main(argv=None) -> int:
             "admm_edge": bench_admm_edge(args.smoke, interpret, repeats),
             "edge_reweight": bench_edge_reweight(args.smoke, interpret,
                                                  repeats),
+            # the fused gossip round across engine-realistic batch sizes
+            # (n // 10 wake-ups per round at n = 640 / 5k / 40k)
+            **{f"round_step_b{B}": bench_round_step(args.smoke, interpret,
+                                                    repeats, B)
+               for B in (64, 512, 4096)},
         }
 
     if args.profile:

@@ -15,6 +15,12 @@ The point of the exercise: at n = 10,000 (k = 8, p = 32) the dense
 event-throughput ratio over the single-device run.  On a CPU-only host the
 devices are XLA fake host devices; this script force-creates them (the flag
 must precede jax init, so it is set at import time when --sharded is given).
+Each sharded run also records the per-round halo wire bytes under every
+``HaloCodec`` and fails when int8 exceeds ``--halo-max-int8-ratio`` (0.35)
+of f32.  ``--fused`` (mp only) reruns each config through the fused
+``round_step`` dispatch op and reports its events/s speedup over the
+per-op sequence (gated by ``--fused-min-ratio`` when given; the fused run
+must also reproduce the default engine's exact event counters).
 
 Besides the CSV rows (name,us,derived — same convention as the other
 benchmarks), every invocation writes a machine-readable
@@ -68,11 +74,14 @@ sys.path.insert(0, __file__.rsplit("/", 1)[0])
 from common import emit, time_call  # noqa: E402
 
 from repro.core.losses import pad_datasets, solitary_mean  # noqa: E402
-from repro.simulate import (get_scenario, greedy_partition,  # noqa: E402
-                            random_geometric_topology, run_cl_scenario,
-                            run_cl_scenario_sharded, run_joint_scenario,
-                            run_joint_scenario_sharded, run_mp_scenario,
-                            run_mp_scenario_sharded)
+from repro.kernels.dispatch import ReproBackend  # noqa: E402
+from repro.launch.sim_mesh import (HaloCodec,  # noqa: E402
+                                   halo_payload_bytes)
+from repro.simulate import (GraphPartition, get_scenario,  # noqa: E402
+                            greedy_partition, random_geometric_topology,
+                            run_cl_scenario, run_cl_scenario_sharded,
+                            run_joint_scenario, run_joint_scenario_sharded,
+                            run_mp_scenario, run_mp_scenario_sharded)
 from repro.telemetry import (TelemetryConfig, build_manifest,  # noqa: E402
                              trace_rows, write_run)
 
@@ -131,8 +140,12 @@ def _sharded_runner(algo: str, topo, p: int, seed: int):
 
 def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
               batch: int, seed: int = 0, algo: str = "mp", repeats: int = 1,
-              telemetry=None, profile_dir=None):
-    """Timed single-device run; returns (report row, trace)."""
+              telemetry=None, profile_dir=None, backend=None):
+    """Timed single-device run; returns (report row, trace).
+
+    ``backend`` (mp only) routes the round body through a fused
+    ``round_step`` dispatch impl instead of the per-op sequence.
+    """
     scenario = get_scenario(scenario_name)
     t0 = time.perf_counter()
     topo = random_geometric_topology(n, k=k, seed=seed)
@@ -147,6 +160,8 @@ def bench_one(n: int, k: int, p: int, scenario_name: str, rounds: int,
     record_every = max(1, rounds // 10)
     kw = dict(rounds=rounds, batch=batch, seed=seed,
               record_every=record_every, telemetry=telemetry)
+    if backend is not None:
+        kw["backend"] = backend
     tr = run(cond, **kw)
     if profile_dir is not None:
         with jax.profiler.trace(profile_dir):
@@ -195,11 +210,21 @@ def bench_one_sharded(n: int, k: int, p: int, scenario_name: str,
               assignment=assignment)
     tr = run(cond, **kw)                                        # warmup
     dt = time_call(run, cond, repeats=repeats, warmup=0, **kw) / 1e6
+    # per-round halo wire bytes under each codec (what the telemetry
+    # halo_bytes column would account; the CL payload stacks 1 + 3k rows)
+    part = GraphPartition.build(topo, assignment, tr.n_shards)
+    row_shape = (1 + 3 * topo.k_max, p) if algo == "admm" else (p,)
+    halo_bytes = {
+        name: halo_payload_bytes(part.n_shards, part.boundary_size,
+                                 HaloCodec(name).row_nbytes(row_shape),
+                                 part.halo_size)
+        for name in HaloCodec.NAMES}
     return {
         "time_s": dt, "part_s": part_s, "events": tr.events,
         "events_per_s": tr.events / dt, "n_shards": tr.n_shards,
         "edge_cut": tr.edge_cut, "halo": tr.halo_size,
         "local_batch": tr.local_batch, "overflow": tr.overflow,
+        "halo_bytes_per_round": halo_bytes,
         "peak_rss_mb": peak_rss_mb(),
     }
 
@@ -222,6 +247,10 @@ def compare_to_baseline(report: dict, baseline: dict) -> list:
             pairs.append((r["name"] + "/sharded",
                           r["sharded"]["events_per_s"],
                           b["sharded"]["events_per_s"]))
+        if "fused" in r and "fused" in b:
+            pairs.append((r["name"] + "/fused",
+                          r["fused"]["events_per_s"],
+                          b["fused"]["events_per_s"]))
         if same_shape:
             for c in ("events", "delivered", "dropped", "invalid"):
                 if c in b and r.get(c) != b[c]:
@@ -256,6 +285,17 @@ def main(argv=None) -> int:
                     help="engine: MP gossip (run_mp_scenario), CL-ADMM "
                          "(run_cl_scenario), or joint model+graph learning "
                          "(run_joint_scenario)")
+    ap.add_argument("--fused", action="store_true",
+                    help="(mp only) also run the engine through the fused "
+                         "round_step op and report the events/s speedup "
+                         "over the per-op sequence")
+    ap.add_argument("--fused-min-ratio", type=float, default=None,
+                    help="fail if any fused run's speedup over the per-op "
+                         "sequence falls below this ratio")
+    ap.add_argument("--halo-max-int8-ratio", type=float, default=0.35,
+                    help="with --sharded: fail if the int8 halo codec's "
+                         "per-round wire bytes exceed this fraction of "
+                         "f32's (0 disables the check)")
     ap.add_argument("--sharded", action="store_true",
                     help="also run the partitioned engine and report the "
                          "event-throughput ratio over one device")
@@ -282,10 +322,15 @@ def main(argv=None) -> int:
 
     ns = [int(x) for x in args.ns.split(",") if x]
     names = [s for s in args.scenarios.split(",") if s]
+    if args.fused and args.algo != "mp":
+        print("# --fused applies to --algo mp only; ignoring", flush=True)
+        args.fused = False
     print("name,us,derived", flush=True)
     runs = []
+    failures = []
     worst_rss = 0.0
     worst_ratio = None
+    worst_fused = None
     worst_overhead = None
     used_shards = 0
     for n in ns:
@@ -329,6 +374,28 @@ def main(argv=None) -> int:
                         "rounds": args.rounds, "batch": batch})
                     write_run(d, manifest, trace_rows(tr))
                     print(f"# wrote run dir {d}", flush=True)
+            if args.fused:
+                f_row, _ = bench_one(
+                    n, args.k, args.p, name, args.rounds, batch,
+                    algo=args.algo, repeats=args.repeats,
+                    backend=ReproBackend.using(round_step="xla"))
+                speedup = f_row["events_per_s"] / r["events_per_s"]
+                for cnt in ("delivered", "dropped", "invalid"):
+                    if f_row[cnt] != r[cnt]:
+                        failures.append(
+                            f"fused counter drift: {r['name']} {cnt} "
+                            f"{f_row[cnt]} vs {r[cnt]} (the fused round "
+                            f"must replay the identical scenario)")
+                r["fused"] = {
+                    "impl": "xla", "time_s": f_row["time_s"],
+                    "events_per_s": f_row["events_per_s"],
+                    "speedup_vs_default": speedup,
+                }
+                worst_fused = speedup if worst_fused is None \
+                    else min(worst_fused, speedup)
+                emit(r["name"] + "/fused", f_row["time_s"] * 1e6,
+                     f"events/s={f_row['events_per_s']:.0f} "
+                     f"speedup_vs_default={speedup:.2f}x")
             if args.sharded:
                 s = bench_one_sharded(n, args.k, args.p, name, args.rounds,
                                       batch, args.shards, algo=args.algo,
@@ -336,6 +403,13 @@ def main(argv=None) -> int:
                 ratio = s["events_per_s"] / r["events_per_s"]
                 s["ratio_vs_1dev"] = ratio
                 r["sharded"] = s
+                hb = s["halo_bytes_per_round"]
+                if args.halo_max_int8_ratio and hb["f32"] > 0 \
+                        and hb["int8"] > args.halo_max_int8_ratio * hb["f32"]:
+                    failures.append(
+                        f"halo codec regression: {r['name']} int8 wire "
+                        f"bytes {hb['int8']} > "
+                        f"{args.halo_max_int8_ratio:.2f}x f32 {hb['f32']}")
                 worst_ratio = ratio if worst_ratio is None \
                     else min(worst_ratio, ratio)
                 worst_rss = max(worst_rss, s["peak_rss_mb"])
@@ -358,6 +432,13 @@ def main(argv=None) -> int:
         print(f"# sharded speedup (min over runs) {worst_ratio:.2f}x on "
               f"{used_shards} devices ({os.cpu_count()} host cores)",
               flush=True)
+    if worst_fused is not None:
+        print(f"# fused round_step speedup (min over runs) "
+              f"{worst_fused:.2f}x over the per-op sequence", flush=True)
+        if args.fused_min_ratio and worst_fused < args.fused_min_ratio:
+            failures.append(
+                f"fused round_step speedup {worst_fused:.2f}x below the "
+                f"--fused-min-ratio {args.fused_min_ratio:.2f}x target")
     if worst_overhead is not None:
         print(f"# telemetry overhead (max over runs) {worst_overhead:.1f}% "
               f"events/s", flush=True)
@@ -372,6 +453,17 @@ def main(argv=None) -> int:
             "repeats": args.repeats,
             "ns": ns, "scenarios": names,
             "sharded": bool(args.sharded), "shards": used_shards or None,
+            "fused": bool(args.fused),
+            # cores is os.cpu_count() of THIS host: on CPU runners the
+            # fake host devices time-share those cores, so ratio_vs_1dev
+            # measures partition/collective overhead (not parallel
+            # speedup) whenever shards > cores — compare ratios only
+            # across runs with matching cores/shards
+            "ratio_vs_1dev_caveat": (
+                f"{used_shards or args.shards} shards on "
+                f"{os.cpu_count()} host core(s); ratio_vs_1dev is not a "
+                f"parallel-speedup claim when shards > cores"
+            ) if args.sharded else None,
         },
         "runs": runs,
         "summary": {
@@ -379,6 +471,7 @@ def main(argv=None) -> int:
             "rss_budget_mb": budget_mb,
             "rss_ok": worst_rss < budget_mb,
             "min_sharded_ratio": worst_ratio,
+            "min_fused_speedup": worst_fused,
             "telemetry_overhead_pct": worst_overhead,
         },
     }
@@ -389,11 +482,12 @@ def main(argv=None) -> int:
     if args.baseline:
         with open(args.baseline) as f:
             baseline = json.load(f)
-        failures = compare_to_baseline(report, baseline)
-        for fail in failures:
-            print(f"BASELINE FAILURE: {fail}", flush=True)
-        if failures:
-            return 1
+        failures += compare_to_baseline(report, baseline)
+    for fail in failures:
+        print(f"BASELINE FAILURE: {fail}", flush=True)
+    if failures:
+        return 1
+    if args.baseline:
         print(f"baseline gate OK vs {args.baseline}", flush=True)
     return 0 if worst_rss < budget_mb else 1
 

@@ -9,17 +9,21 @@ TPU kernel); before this module every call site picked one ad-hoc.
 
 This module is the single chooser.  A registry keyed by
 
-    op   ∈ {mix, sparse_mix, admm_primal, admm_edge, neighbor_aggregate,
-            attention}
+    op   ∈ {mix, sparse_mix, admm_primal, admm_edge, round_step,
+            cl_edge_step, edge_reweight, neighbor_aggregate, attention}
     impl ∈ {reference, xla, pallas, pallas_sparse}
 
 maps to concrete callables; ``resolve(op, backend)`` returns the callable a
 call site should use.  Selection rules:
 
 * **auto** (the default): Pallas *compiled* on TPU, fused XLA on CPU/GPU.
-  Pallas interpret mode is never chosen silently — it is a validation tool,
-  orders of magnitude slower than XLA, and must be requested explicitly
-  (``ReproBackend(interpret=True)`` or ``REPRO_PALLAS_INTERPRET=1``).
+  Auto never selects an interpret-mode Pallas impl — interpret is a
+  validation tool, orders of magnitude slower than XLA, and must be
+  requested explicitly together with the impl
+  (``ReproBackend.using(interpret=True, <op>="pallas")``).  Impls
+  registered ``interpret_only=True`` (e.g. the ``admm_edge`` Pallas kernel,
+  ~36x slower than its fused-XLA form even compiled) are additionally
+  skipped by auto on TPU and require the interpret opt-in everywhere.
 * per-op **overrides** via :class:`ReproBackend`, threaded through
   ``core.model_propagation`` / ``core.collaborative`` / ``core.sparse`` /
   ``simulate.engines`` / ``coupling.strategies`` / ``models.blocks``.
@@ -68,8 +72,15 @@ from . import admm_update as _au
 from . import flash_attention as _fa
 from . import graph_mix as _gm
 from . import ref
+from . import round_fuse as _rf
 from . import sharded as _sh
 from . import sparse_mix as _sm
+# Backend-independent slot-table/prefetch helpers for the round_step op,
+# re-exported so engine code reaches them through dispatch (the
+# no-direct-kernel-imports invariant) — they are layout utilities shared by
+# every round_step impl, not selectable implementations themselves.
+from .round_fuse import (decode_slots, encode_slots,  # noqa: F401
+                         round_prefetch, round_scales, round_stale_src)
 
 IMPLS = ("reference", "xla", "pallas", "pallas_sparse", "xla_sharded",
          "pallas_sparse_sharded")
@@ -90,21 +101,28 @@ class _Impl:
     ``make(interpret)`` returns the callable; non-Pallas impls ignore the
     flag.  ``pallas`` marks impls that lower through pallas_call and hence
     need a TPU (compiled) or an explicit interpret opt-in (CPU/GPU).
+    ``interpret_only`` marks Pallas impls kept for validation only (their
+    compiled form loses to fused XLA): auto never selects them on any
+    platform and resolving one requires the interpret opt-in even on TPU.
     """
 
     name: str
     make: Callable[[bool], Callable]
     pallas: bool = False
+    interpret_only: bool = False
 
 
 _REGISTRY: Dict[str, Dict[str, _Impl]] = {}
 
 
-def register(op: str, impl: str, *, pallas: bool = False):
+def register(op: str, impl: str, *, pallas: bool = False,
+             interpret_only: bool = False):
     """Decorator registering ``fn`` as implementation ``impl`` of ``op``.
 
     Plain impls register the op callable itself; Pallas impls (``pallas=
-    True``) register a factory ``make(interpret: bool) -> callable``.
+    True``) register a factory ``make(interpret: bool) -> callable``;
+    ``interpret_only=True`` (implies Pallas semantics) demotes the impl to
+    an explicit-opt-in validation tool.
     """
     def deco(fn):
         # profiler attribution: every registered hot-path callable runs
@@ -131,7 +149,8 @@ def register(op: str, impl: str, *, pallas: bool = False):
                 lambda interpret, _fn=fn: _scoped(_fn(interpret)))
         else:
             make = (lambda interpret, _fn=_scoped(fn): _fn)
-        _REGISTRY.setdefault(op, {})[impl] = _Impl(impl, make, pallas)
+        _REGISTRY.setdefault(op, {})[impl] = _Impl(impl, make, pallas,
+                                                   interpret_only)
         return fn
     return deco
 
@@ -199,21 +218,24 @@ class ReproBackend:
         return _env_interpret()
 
 
-def _auto_impl(op: str, interpret_opt_in: bool) -> str:
+def _auto_impl(op: str) -> str:
     """Platform default: Pallas compiled on TPU (when the op has a Pallas
-    impl), fused XLA otherwise.  Off-TPU, auto only picks Pallas when the
-    backend's resolved interpret preference opted in (explicit
-    ``interpret=True`` or the env var, with ``interpret=False`` winning)."""
+    impl that is not interpret-only), fused XLA otherwise.  Auto never
+    selects an impl that would run in interpret mode — interpret is a
+    validation tool and must be requested together with an explicit impl
+    override (tests/test_dispatch.py pins this rule)."""
     impls = _REGISTRY[op]
-    pallas_name = next((n for n in _PALLAS_IMPLS if n in impls), None)
-    if pallas_name is not None and (_platform() == "tpu" or interpret_opt_in):
-        return pallas_name
+    if _platform() == "tpu":
+        name = next((n for n in _PALLAS_IMPLS
+                     if n in impls and not impls[n].interpret_only), None)
+        if name is not None:
+            return name
     return "xla" if "xla" in impls else "reference"
 
 
 def available(op: str, impl: str, *, interpret: Optional[bool] = None) -> bool:
     """Whether (op, impl) can run here. Pallas impls need a TPU or an
-    interpret opt-in."""
+    interpret opt-in; interpret-only impls need the opt-in everywhere."""
     entry = _REGISTRY.get(op, {}).get(impl)
     if entry is None:
         return False
@@ -221,6 +243,8 @@ def available(op: str, impl: str, *, interpret: Optional[bool] = None) -> bool:
         return True
     if interpret is None:
         interpret = _env_interpret()
+    if entry.interpret_only:
+        return bool(interpret)
     return _platform() == "tpu" or bool(interpret)
 
 
@@ -236,7 +260,7 @@ def resolve(op: str, backend: Optional[ReproBackend] = None) -> Callable:
         backend = ReproBackend(default=_env_default())
     name = backend.impl_for(op)
     if name == "auto":
-        name = _auto_impl(op, backend.wants_interpret())
+        name = _auto_impl(op)
     entry = _REGISTRY[op].get(name)
     if entry is None:
         raise KeyError(
@@ -245,13 +269,21 @@ def resolve(op: str, backend: Optional[ReproBackend] = None) -> Callable:
     interpret = False
     if entry.pallas:
         interpret = backend.wants_interpret()
+        if entry.interpret_only and not interpret:
+            raise BackendUnavailable(
+                f"{op}/{name} is an interpret-only validation kernel (its "
+                f"compiled form loses to the fused XLA impl). Pass "
+                f"ReproBackend(interpret=True) (or set "
+                f"REPRO_PALLAS_INTERPRET=1) to run it, or use the 'xla' "
+                f"implementation.")
         if _platform() != "tpu" and not interpret:
             raise BackendUnavailable(
                 f"{op}/{name} is a Pallas kernel: it compiles on TPU only. "
                 f"On {_platform()!r} pass ReproBackend(interpret=True) (or "
                 f"set REPRO_PALLAS_INTERPRET=1) to opt in to the slow "
                 f"interpret mode, or use the 'xla' implementation.")
-        if _platform() == "tpu" and backend.interpret is None:
+        if _platform() == "tpu" and backend.interpret is None \
+                and not entry.interpret_only:
             interpret = False          # compiled is the TPU default
     return entry.make(interpret)
 
@@ -415,9 +447,57 @@ def _admm_edge_xla_sharded(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
                                  rho=rho, inner=ref.admm_edge_update)
 
 
-@register("admm_edge", "pallas", pallas=True)
+# Interpret-only: the compiled form of this kernel is ~36x slower than the
+# fused XLA expression (BENCH_dispatch) — it stays registered as a parity
+# target for the Pallas gather/scatter idiom, never as a hot path.
+@register("admm_edge", "pallas", pallas=True, interpret_only=True)
 def _admm_edge_pallas(interpret):
     return functools.partial(_au.admm_edge_update, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# round_step — one fused MP gossip round (scenario-engine semantics) over
+# the flat slot table (round_fuse module docstring, DESIGN.md §15):
+#   (theta (n,p), Ke (n*k, p+1) slots + id column, got_ever (n,) bool,
+#    msg (2B,p), tgt_row (2B,) int32, enc (2B,) int32, k_old (2B,p),
+#    theta_base (n,p), a_w (n*k,)) -> (theta', Ke', got_ever', keep (2B,))
+# Event operands come from ``round_fuse.round_prefetch`` (gathered *after*
+# the previous round's scatters); ``Ke``/``a_w``/``theta_base`` come from
+# ``encode_slots`` / ``round_scales`` / the Eq. 6 image of the warm-start
+# slots.  The op assumes the scheduler's delivery => active-receiver
+# guarantee and never consults an ``active`` vector.
+# ---------------------------------------------------------------------------
+
+
+register("round_step", "reference")(ref.gossip_round_step)
+register("round_step", "xla")(_rf.round_step_xla)
+
+
+@register("round_step", "pallas", pallas=True)
+def _round_step_pallas(interpret):
+    return functools.partial(_rf.round_step_pallas, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# cl_edge_step — one fused CL-ADMM edge phase (scenario-engine semantics):
+#   (theta (n,p), K (n,k,p), Z_own, Z_nbr, L_own, L_nbr (n,k,p),
+#    pv_th (n,p), pv_K/pv_Lo/pv_Ln (n,k,p) publish snapshot,
+#    upd/own_s/oth_a/oth_s (E,) int32, stale/got (E,) bool, *, rho)
+#   -> (Z_own', Z_nbr', L_own', L_nbr')
+# ---------------------------------------------------------------------------
+
+
+register("cl_edge_step", "reference")(_rf.cl_edge_step)
+# The masked gather/halfstep/scatter expression already lowers to one fused
+# XLA program; registering the identical callable keeps the scenario
+# engine's trajectory bit-for-bit whichever name resolves (same precedent
+# as edge_reweight).
+register("cl_edge_step", "xla")(_rf.cl_edge_step)
+
+
+@register("cl_edge_step", "pallas", pallas=True)
+def _cl_edge_step_pallas(interpret):
+    return functools.partial(_rf.cl_edge_step_pallas, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -132,6 +132,51 @@ def edge_reweight(d, w, live, *, eta: float, lam: float):
     return jnp.where(live, out, 0.0).astype(w.dtype)
 
 
+def gossip_round_step(theta, Ke, got_ever, msg, tgt_row, enc, k_old,
+                      theta_base, a_w):
+    """One batched MP gossip round over the flat slot table — the oracle
+    for the fused ``round_step`` implementations (kernels/round_fuse.py).
+
+    State: theta / theta_base (n, p); Ke (n*k, p+1) flat neighbor slots
+    with the id column at ``p``; got_ever (n,) bool first-receipt flags;
+    a_w (n*k,) per-slot Eq. 6 gains.  Events (already prefetched, see
+    ``round_fuse.round_prefetch``): msg / k_old (2B, p) sender models and
+    pre-scatter slot values, tgt_row (2B,) receiver rows (``n`` where
+    undelivered), enc (2B,) flat targets (``n*k`` sentinel where
+    undelivered).
+
+    Winner resolution is deliberately a different mechanism than the fused
+    impls' id read-back: a stable sort of the encoded targets marks the
+    *last* event of each duplicate run as the winner (matching the
+    sequential two-half scatter order), then a single pre-masked scatter
+    lands exactly the winning rows.  Receiver updates telescope the
+    winners' ``a_w (msg - k_old)`` deltas, swapping in ``theta_base`` on a
+    row's first receipt (the engine warm-starts theta at the solitary
+    models; a row's slots cannot change before its first receipt, so the
+    affine base is exact).
+    """
+    n = theta.shape[0]
+    nk = Ke.shape[0]
+    m = msg.shape[0]
+    ids = jnp.arange(m)
+    order = jnp.argsort(enc, stable=True)
+    enc_s = enc[order]
+    is_last = jnp.concatenate(
+        [enc_s[1:] != enc_s[:-1], jnp.ones((1,), bool)])
+    keep = jnp.zeros((m,), bool).at[order].set(is_last) & (tgt_row < n)
+    payload = jnp.concatenate([msg, ids.astype(Ke.dtype)[:, None]], axis=1)
+    Ke = Ke.at[jnp.where(keep, enc, nk)].set(payload, mode="drop")
+    enc_c = jnp.minimum(enc, nk - 1)
+    row_c = jnp.minimum(tgt_row, n - 1)
+    first = keep & ~got_ever[row_c]
+    frow = jnp.where(first, tgt_row, n)
+    theta = theta.at[frow].set(theta_base[row_c], mode="drop")
+    delta = jnp.where(keep, a_w[enc_c], 0.0)[:, None] * (msg - k_old)
+    theta = theta.at[jnp.where(keep, tgt_row, n)].add(delta, mode="drop")
+    got_ever = got_ever.at[frow].set(True, mode="drop")
+    return theta, Ke, got_ever, keep
+
+
 def admm_edge_update(t_ii, t_ji, t_jj, t_ij, l_own_i, l_nbr_j_of_i,
                      l_own_j, l_nbr_i_of_j, rho: float):
     """Fused CL-ADMM Z + dual update for a batch of edges (paper steps 2-3).

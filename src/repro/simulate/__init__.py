@@ -23,6 +23,7 @@ from .partition import (GraphPartition, ShardedSimTrace, JointShardedTrace,
                         run_mp_scenario_sharded, run_cl_scenario_sharded,
                         run_joint_scenario_sharded, default_local_batch,
                         default_local_events)
+from repro.launch.sim_mesh import HaloCodec, resolve_halo_codec
 from .scenarios import Scenario, SCENARIOS, get_scenario, list_scenarios
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -35,11 +35,13 @@ import numpy as np
 
 from repro.core.graph_learning import prune_rows, reweight_rows
 from repro.core.losses import AgentData
-from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
-                               batched_model_update, live_slots,
-                               neighbor_aggregate, quadratic_primal_core,
-                               record_chunks, sample_event)
-from repro.kernels.dispatch import ReproBackend, resolve
+from repro.core.sparse import (batched_admm_primal, batched_model_update,
+                               live_slots, neighbor_aggregate,
+                               quadratic_primal_core, record_chunks,
+                               sample_event)
+from repro.kernels.dispatch import (ReproBackend, decode_slots,
+                                    encode_slots, resolve, round_prefetch,
+                                    round_scales, round_stale_src)
 from repro.telemetry import metrics as tmetrics
 from repro.telemetry.config import TelemetryConfig, telemetry_on
 from repro.telemetry.frames import TelemetryFrames
@@ -219,10 +221,12 @@ class SimTrace:
 
 
 @partial(jax.jit, static_argnames=("conditions", "alpha", "batch",
-                                   "record_every", "n_rec", "tel"))
+                                   "record_every", "n_rec", "tel",
+                                   "backend"))
 def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
                    conditions: NetworkConditions, alpha: float, batch: int,
-                   record_every: int, n_rec: int, tel: bool = False):
+                   record_every: int, n_rec: int, tel: bool = False,
+                   backend: Optional[ReproBackend] = None):
     """Module-level jitted runner so repeated calls with the same static
     (conditions, alpha, batch, record_every, n_rec) and shapes hit the jit
     cache — benchmark warmups genuinely pre-compile the timed run.
@@ -231,42 +235,119 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
     staleness counters, applied-update and drop-cause counters — to the
     carry and per-chunk objective/staleness snapshots to the outputs; at
     the default False the traced program is exactly the pre-telemetry
-    scan (the ``*tstate`` unpacking leaves the carry a 7-tuple)."""
+    scan (the ``*tstate`` unpacking leaves the carry a 7-tuple).
+
+    ``backend`` (static) opts in to the fused ``round_step`` op
+    (kernels/round_fuse.py): the carry threads the flat slot table, the
+    software-pipelined prefetch of the *next* round's events/operands
+    (drawn at the end of each round, after its scatters), and the per-row
+    first-receipt flags.  The caller passes ``carry0=None`` and the plain
+    unshifted keys; the fused carry is built here, in-jit, and the keys
+    are shifted one round ahead internally so the carried prefetch
+    consumes the bitwise-identical RNG stream.  At the default None the
+    traced program is the historic per-op gather/mix/scatter sequence,
+    unchanged."""
     n = theta_sol.shape[0]
+    fused = backend is not None
+    step_fn = resolve("round_step", backend) if fused else None
+    if fused:
+        km = tabs.nbr_idx.shape[1]
+        no_stale = conditions.stale_prob == 0.0
+        a_w = round_scales(tabs.nbr_p, c, alpha=alpha)
+        theta_base = batched_model_update(
+            tabs.nbr_p, theta_sol[tabs.nbr_idx], c, theta_sol, alpha)
+    if fused and carry0 is None:
+        # build the fused carry in-jit (warm start, slot table, round 0's
+        # prefetch from the unshifted first key, first-receipt flags); the
+        # scan then consumes the keys shifted one round ahead (the last
+        # key's second draw is discarded), so the carried prefetch sees
+        # the bitwise-identical RNG stream
+        theta0, K0 = _mp_warm_start(tabs, theta_sol)
+        active0 = jnp.ones((n,), bool)
+        Ke0 = encode_slots(K0)
+        flat = keys.reshape(-1, 2)
+        k_ev, k_churn = jax.random.split(flat[0])
+        ev0 = sched.draw_events(k_ev, conditions, tabs, part_half, active0,
+                                rates, 0, batch)
+        pf0 = (ev0,) + round_prefetch(
+            theta0, theta0, Ke0, ev0.i, ev0.j, ev0.s, ev0.r,
+            ev0.deliver_ij, ev0.deliver_ji, ev0.stale_ij, ev0.stale_ji,
+            no_stale=no_stale) + (k_churn,)
+        keys = jnp.concatenate([flat[1:], flat[-1:]]).reshape(
+            n_rec, record_every, 2)
+        carry0 = (theta0, Ke0, pf0, active0, jnp.int32(0), jnp.int32(0),
+                  jnp.int32(0), jnp.zeros((n,), bool))
+        if tel:
+            carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0),
+                               jnp.int32(0), jnp.int32(0), jnp.int32(0))
 
     def round_fn(carry, inp):
-        theta, K, theta_prev, active, delivered, dropped, invalid, \
-            *tstate = carry
-        theta_in = theta                  # next round's "one-round-old" model
         t, key = inp
-        k_ev, k_churn = jax.random.split(key)
-        ev = sched.draw_events(k_ev, conditions, tabs, part_half, active,
-                               rates, t, batch)
-
-        # --- communication: all scatters land before any update reads
-        msg_i = jnp.where(ev.stale_ij[:, None], theta_prev[ev.i], theta[ev.i])
-        msg_j = jnp.where(ev.stale_ji[:, None], theta_prev[ev.j], theta[ev.j])
-        # undelivered messages scatter out of bounds -> dropped by XLA
-        row_j = jnp.where(ev.deliver_ij, ev.j, n)
-        row_i = jnp.where(ev.deliver_ji, ev.i, n)
-        K = K.at[row_j, ev.r].set(msg_i, mode="drop")
-        K = K.at[row_i, ev.s].set(msg_j, mode="drop")
-
-        # --- update: endpoints that received a message recompute Eq. (6)
-        # via the shared per-shard step (core.sparse.batched_model_update —
-        # the same function the partitioned engine applies to local rows)
+        if fused:
+            # key is the *next* round's key; this round's events and churn
+            # key arrive pre-drawn in the carried prefetch
+            theta_in, K, pf, active, delivered, dropped, invalid, \
+                got_ever, *tstate = carry
+            ev, msg, tgt_row, enc, k_old, k_churn = pf
+            # round t+1's events depend only on RNG and the post-churn
+            # active set — never on theta — so draw them and gather their
+            # stale-message source from theta_in BEFORE this round's
+            # scatters.  Once that gather is theta_in's last read, XLA
+            # scatters theta in place instead of copying the model table
+            # every round (~25% of the fused round on CPU at n=10k); the
+            # barrier pins the gather-before-scatter order.
+            active2 = sched.churn_step(k_churn, conditions, active)
+            k_ev2, k_churn2 = jax.random.split(key)
+            ev2 = sched.draw_events(k_ev2, conditions, tabs, part_half,
+                                    active2, rates, t + 1, batch)
+            if no_stale:
+                # zero staleness (static): no previous-model reads at all,
+                # so the step is already theta_in's last consumer
+                stale_src = None
+            else:
+                stale_src = round_stale_src(theta_in, ev2.i, ev2.j)
+                theta_in, stale_src = jax.lax.optimization_barrier(
+                    (theta_in, stale_src))
+            theta, K, got_ever, _ = step_fn(theta_in, K, got_ever, msg,
+                                            tgt_row, enc, k_old, theta_base,
+                                            a_w)
+        else:
+            theta, K, theta_prev, active, delivered, dropped, invalid, \
+                *tstate = carry
+            theta_in = theta              # next round's "one-round-old" model
+            k_ev, k_churn = jax.random.split(key)
+            ev = sched.draw_events(k_ev, conditions, tabs, part_half, active,
+                                   rates, t, batch)
         upd = jnp.concatenate([ev.i, ev.j])                      # (2B,)
         got = jnp.concatenate([ev.deliver_ji, ev.deliver_ij])
         got &= active[upd]
-        new = batched_model_update(tabs.nbr_p[upd], K[upd], c[upd],
-                                   theta_sol[upd], alpha)
-        theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
+
+        if not fused:
+            # --- communication: all scatters land before any update reads
+            msg_i = jnp.where(ev.stale_ij[:, None], theta_prev[ev.i],
+                              theta[ev.i])
+            msg_j = jnp.where(ev.stale_ji[:, None], theta_prev[ev.j],
+                              theta[ev.j])
+            # undelivered messages scatter out of bounds -> dropped by XLA
+            row_j = jnp.where(ev.deliver_ij, ev.j, n)
+            row_i = jnp.where(ev.deliver_ji, ev.i, n)
+            K = K.at[row_j, ev.r].set(msg_i, mode="drop")
+            K = K.at[row_i, ev.s].set(msg_j, mode="drop")
+
+            # --- update: endpoints that received a message recompute
+            # Eq. (6) via the shared per-shard step
+            # (core.sparse.batched_model_update — the same function the
+            # partitioned engine applies to local rows)
+            new = batched_model_update(tabs.nbr_p[upd], K[upd], c[upd],
+                                       theta_sol[upd], alpha)
+            theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
 
         delivered = delivered + jnp.sum(ev.deliver_ij) + jnp.sum(ev.deliver_ji)
         dropped = dropped + jnp.sum(ev.valid & ~ev.deliver_ij) \
             + jnp.sum(ev.valid & ~ev.deliver_ji)
         invalid = invalid + jnp.sum(~ev.valid)
-        active = sched.churn_step(k_churn, conditions, active)
+        active = active2 if fused \
+            else sched.churn_step(k_churn, conditions, active)
         if tel:
             stale, updates, d_link, d_churn, d_part = tstate
             stale = tmetrics.staleness_step(stale, got, upd, n)
@@ -275,8 +356,20 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
                 ev.deliver_ij, ev.deliver_ji, ev.valid, ev.cut, ev.dead)
             tstate = (stale, updates, d_link + link, d_churn + churn,
                       d_part + part)
-        return (theta, K, theta_in, active, delivered, dropped, invalid,
-                *tstate), None
+        if fused:
+            # --- finish round t+1's prefetch: its stale-message gather ran
+            # pre-scatter (above); the fresh-model and k_old gathers must
+            # run here, *after* this round's scatters (the placement the
+            # pipelined layout exists for)
+            pf = (ev2,) + round_prefetch(
+                theta, theta_in, K, ev2.i, ev2.j, ev2.s, ev2.r,
+                ev2.deliver_ij, ev2.deliver_ji, ev2.stale_ij, ev2.stale_ji,
+                stale_src=stale_src, no_stale=no_stale) + (k_churn2,)
+            base = (theta, K, pf, active, delivered, dropped, invalid,
+                    got_ever)
+        else:
+            base = (theta, K, theta_in, active, delivered, dropped, invalid)
+        return base + tuple(tstate), None
 
     def outer(carry, inp):
         ks, t0 = inp
@@ -285,9 +378,12 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
         frac = jnp.mean(carry[3].astype(jnp.float32))
         if tel:
             theta, K = carry[0], carry[1]
+            if fused:
+                K = decode_slots(K, km)
             obj = tmetrics.mp_local_objective(theta, K, tabs.nbr_p, c,
                                               theta_sol, alpha)
-            stale, updates, d_link, d_churn, d_part = carry[7:]
+            stale, updates, d_link, d_churn, d_part = carry[8 if fused
+                                                            else 7:]
             return carry, (theta, frac, obj, stale, updates, carry[4],
                            d_link, d_churn, d_part, carry[6])
         return carry, (carry[0], frac)
@@ -298,7 +394,8 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
 def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
                     conditions: NetworkConditions, rounds: int,
                     batch: int, seed: int = 0, record_every: int = 10,
-                    telemetry: Optional[TelemetryConfig] = None) -> SimTrace:
+                    telemetry: Optional[TelemetryConfig] = None,
+                    backend: Optional[ReproBackend] = None) -> SimTrace:
     """MP gossip under a fault scenario, B wake-ups per round.
 
     Per round: draw an EventBatch, land every delivered message (scatter into
@@ -313,6 +410,16 @@ def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
     the DESIGN.md §14 metrics inside the scan carry and attaches them as
     ``SimTrace.telemetry``; the default leaves the compiled program — and
     the trajectory — exactly as without the argument.
+
+    ``backend`` opts in to the fused ``round_step`` round body
+    (kernels/round_fuse.py; auto keeps fused XLA on CPU/GPU and the Pallas
+    megakernel on TPU).  The fused path carries a flat id-column slot
+    table, telescopes the Eq. 6 update from scattered slot deltas, and
+    software-pipelines the next round's event draw + operand gathers
+    behind the current round's scatters — the same RNG stream and event
+    sequence, so counters match the default path exactly and the
+    trajectory agrees to fp rounding (not bit-for-bit); ``backend=None``
+    keeps the historic program exactly.
     """
     tabs = topo.device_tables()
     n = topo.n
@@ -323,22 +430,30 @@ def run_mp_scenario(topo: SparseTopology, theta_sol, c, alpha: float,
     key, k_strag = jax.random.split(key)
     rates = sched.straggler_rates(k_strag, conditions, n)
 
-    theta0, K0 = _mp_warm_start(tabs, theta_sol)
     record_every, n_rec = record_chunks(rounds, record_every)
     tel = telemetry_on(telemetry)
 
     keys = jax.random.split(key, n_rec * record_every).reshape(
         n_rec, record_every, 2)
     ts = jnp.asarray((np.arange(n_rec) * record_every).astype(np.int32))
-    carry0 = (theta0, K0, theta0, jnp.ones((n,), bool),
-              jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    if tel:
-        carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0),
-                           jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    if backend is not None:
+        # fused round body: the carry (warm start, flat id-column slot
+        # table, round 0's prefetch, per-row first-receipt flags) is built
+        # INSIDE the jitted scan from theta_sol — see _scenario_scan — so
+        # the ~n*k*p slot table is neither materialized eagerly nor copied
+        # in as an argument buffer (tens of ms per call at n=10k)
+        carry0 = None
+    else:
+        theta0, K0 = _mp_warm_start(tabs, theta_sol)
+        carry0 = (theta0, K0, theta0, jnp.ones((n,), bool),
+                  jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        if tel:
+            carry0 = carry0 + (jnp.zeros((n,), jnp.int32), jnp.int32(0),
+                               jnp.int32(0), jnp.int32(0), jnp.int32(0))
     carry, outs = _scenario_scan(
         tabs, part_half, rates, theta_sol, c, carry0, keys, ts,
         conditions=conditions, alpha=alpha, batch=batch,
-        record_every=record_every, n_rec=n_rec, tel=tel)
+        record_every=record_every, n_rec=n_rec, tel=tel, backend=backend)
     theta, K, _, active, delivered, dropped, invalid = carry[:7]
     total_rounds = n_rec * record_every
     frames = None
@@ -521,12 +636,13 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
        K, round-start duals); the previous round's snapshot serves the
        one-round-stale deliveries (same convention as the MP engine).
     3. **edge phase** — each delivered direction updates the *receiver's*
-       (Z_own, Z_nbr, L_own, L_nbr) slots via the shared
-       ``core.sparse.admm_edge_halfstep`` from its own post-primal values
-       and the partner's payload.  With both directions fresh this is
-       exactly ``_sparse_edge_zl``; a dropped direction leaves that side's
-       edge copies untouched (the mirrored copies may diverge — the
-       asynchronous regime of DJAM, arXiv:1803.09737).
+       (Z_own, Z_nbr, L_own, L_nbr) slots via the fused ``cl_edge_step``
+       op (kernels/round_fuse.py; the ``admm_edge_halfstep`` math) from
+       its own post-primal values and the partner's payload.  With both
+       directions fresh this is exactly ``_sparse_edge_zl``; a dropped
+       direction leaves that side's edge copies untouched (the mirrored
+       copies may diverge — the asynchronous regime of DJAM,
+       arXiv:1803.09737).
 
     ``tel`` (static) appends staleness/update accumulators to the carry
     and per-chunk (objective, staleness, updates) snapshots to the
@@ -535,6 +651,7 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
     program is exactly the pre-telemetry scan.
     """
     n, k = nbr_w.shape
+    edge_fn = resolve("cl_edge_step", backend)
 
     def round_fn(carry, ev_t):
         st, pub_prev, *tstate = carry
@@ -554,25 +671,17 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
         # --- publish: post-primal models, round-start duals
         pub = (theta, K, st.L_own, st.L_nbr)
 
-        # --- edge phase: one half-step per delivered direction
+        # --- edge phase: one half-step per delivered direction, as one
+        # fused op (kernels/round_fuse.cl_edge_step — CPU/GPU resolve the
+        # expression-identical XLA form, so the trajectory is bit-for-bit
+        # the inline code's; TPU gets the Pallas megakernel)
         own_s = jnp.concatenate([ev_t.s, ev_t.r])
         oth_a = jnp.concatenate([ev_t.j, ev_t.i])
         oth_s = jnp.concatenate([ev_t.r, ev_t.s])
-        stale = jnp.concatenate([ev_t.stale_ji, ev_t.stale_ij])[:, None]
-        pv_th, pv_K, pv_Lo, pv_Ln = pub_prev
-        th_pay = jnp.where(stale, pv_th[oth_a], theta[oth_a])
-        k_pay = jnp.where(stale, pv_K[oth_a, oth_s], K[oth_a, oth_s])
-        lo_pay = jnp.where(stale, pv_Lo[oth_a, oth_s],
-                           st.L_own[oth_a, oth_s])
-        ln_pay = jnp.where(stale, pv_Ln[oth_a, oth_s],
-                           st.L_nbr[oth_a, oth_s])
-        z_own, z_nbr, lo_new, ln_new = admm_edge_halfstep(
-            theta[upd], K[upd, own_s], st.L_own[upd, own_s],
-            st.L_nbr[upd, own_s], th_pay, k_pay, lo_pay, ln_pay, rho)
-        Z_own = st.Z_own.at[rowu, own_s].set(z_own, mode="drop")
-        Z_nbr = st.Z_nbr.at[rowu, own_s].set(z_nbr, mode="drop")
-        L_own = st.L_own.at[rowu, own_s].set(lo_new, mode="drop")
-        L_nbr = st.L_nbr.at[rowu, own_s].set(ln_new, mode="drop")
+        stale = jnp.concatenate([ev_t.stale_ji, ev_t.stale_ij])
+        Z_own, Z_nbr, L_own, L_nbr = edge_fn(
+            theta, K, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr, *pub_prev,
+            upd, own_s, oth_a, oth_s, stale, got, rho=rho)
 
         st = SparseADMMState(theta, K, Z_own, Z_nbr, L_own, L_nbr)
         if tel:

@@ -54,9 +54,10 @@ from repro.core.graph_learning import prune_rows, reweight_rows
 from repro.core.sparse import (admm_edge_halfstep, batched_admm_primal,
                                batched_model_update, live_slots,
                                record_chunks)
-from repro.launch.sim_mesh import (AGENT_AXIS, halo_exchange_fn,
+from repro.launch.sim_mesh import (AGENT_AXIS, HaloCodec, halo_exchange_fn,
                                    halo_payload_bytes, make_sim_mesh,
-                                   mesh_shards, shard_map_1d)
+                                   mesh_shards, resolve_halo_codec,
+                                   shard_map_1d)
 from repro.telemetry import metrics as tmetrics
 from repro.telemetry.config import TelemetryConfig, telemetry_on
 from repro.telemetry.frames import TelemetryFrames
@@ -385,11 +386,12 @@ def _take_padded(x, sel, fill):
 
 @partial(jax.jit,
          static_argnames=("mesh", "alpha", "m", "H", "E", "U", "n_rec",
-                          "record_every", "exchange", "tel"))
+                          "record_every", "exchange", "codec", "tel"))
 def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
                            fetch, bnd_pos, halo_src_shard, halo_src_pos, *,
                            alpha: float, m: int, H: int, E: int, U: int,
                            n_rec: int, record_every: int, exchange: str,
+                           codec: HaloCodec = HaloCodec("f32"),
                            tel: bool = False):
     """shard_map'd scan over rounds; every array argument before ``fetch``
     is either replicated (the event stream) or row-sharded (P * m leading
@@ -412,7 +414,8 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
         # publish boundary rows, pull this shard's halo (round-start
         # snapshot of remote-neighbor models)
-        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange,
+                                         codec=codec)
 
         def round_fn(carry, ev_t):
             theta, K, ext_prev, overflow, *tstate = carry
@@ -503,6 +506,7 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
                             assignment: Optional[np.ndarray] = None,
                             local_batch: Optional[int] = None,
                             exchange: str = "all_gather",
+                            halo_codec="f32",
                             partition_seed: int = 0,
                             telemetry: Optional[TelemetryConfig] = None
                             ) -> ShardedSimTrace:
@@ -512,7 +516,11 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
     ``trace.theta_hist`` reproduces it exactly whenever ``trace.overflow``
     is 0 (see module docstring).  ``n_shards`` defaults to every local
     device; pass ``assignment`` to reuse a precomputed partition, and
-    ``exchange="ring"`` for the ppermute halo path.
+    ``exchange="ring"`` for the ppermute halo path.  ``halo_codec``
+    selects the boundary-row wire format (``launch.sim_mesh.HaloCodec``:
+    "f32" — the default, bit-for-bit with the single-device trajectory —
+    or the lossy "bf16"/"int8" encodings with f32 accumulation); the
+    telemetry ``halo_bytes`` column accounts the coded wire size.
     """
     mesh = make_sim_mesh(n_shards) if mesh is None else mesh
     P_ = mesh_shards(mesh)
@@ -551,6 +559,7 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
     U = min(U, 2 * E)
 
     tel = telemetry_on(telemetry)
+    codec = resolve_halo_codec(halo_codec)
     outs = _sharded_scenario_scan(
         mesh, stream, **{k: jnp.asarray(v) for k, v in sharded.items()},
         fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
@@ -558,13 +567,14 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
         halo_src_pos=jnp.asarray(part.halo_src_pos),
         alpha=alpha, m=part.shard_size, H=part.halo_size,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
-        exchange=exchange, tel=tel)
+        exchange=exchange, codec=codec, tel=tel)
     frames = None
     if tel:
         hist, theta, overflow, obj_h, stale_h, upd_h = outs
         frames = _sharded_frames(
             part, stream, n_rec, record_every, obj_h, stale_h, upd_h,
-            overflow, payload_row_bytes=4 * theta_sol.shape[1])
+            overflow,
+            payload_row_bytes=codec.row_nbytes((theta_sol.shape[1],)))
     else:
         hist, theta, overflow = outs
 
@@ -587,13 +597,15 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
 
 @partial(jax.jit,
          static_argnames=("mesh", "mu", "rho", "k", "m", "H", "E", "U",
-                          "n_rec", "record_every", "exchange", "tel"))
+                          "n_rec", "record_every", "exchange", "codec",
+                          "tel"))
 def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
                      nbr_w, deg_count, D, m_counts, sx,
                      fetch, bnd_pos, halo_src_shard, halo_src_pos,
                      tel_args=(), *,
                      mu: float, rho: float, k: int, m: int, H: int, E: int,
                      U: int, n_rec: int, record_every: int, exchange: str,
+                     codec: HaloCodec = HaloCodec("f32"),
                      tel: bool = False):
     """shard_map'd CL-ADMM rounds: the six ADMM state arrays are row-sharded
     (P * m leading axis); the event stream is replicated and replayed per
@@ -615,7 +627,8 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
-        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange,
+                                         codec=codec)
         live_blk = jnp.arange(k)[None, :] < degc_blk[:, None]      # (m, k)
 
         def publish(theta, K, Lo, Ln):
@@ -735,6 +748,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
                             assignment: Optional[np.ndarray] = None,
                             local_batch: Optional[int] = None,
                             exchange: str = "all_gather",
+                            halo_codec="f32",
                             partition_seed: int = 0,
                             stream: Optional[EventStream] = None,
                             telemetry: Optional[TelemetryConfig] = None
@@ -749,7 +763,10 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
     post-primal (theta, K) and round-start (L_own, L_nbr) rows onto the
     shards that hold the other endpoint of its cross-shard edges, and each
     shard then applies the shared edge half-step to its own slots only
-    (DESIGN.md §12).  Knobs match ``run_mp_scenario_sharded``.
+    (DESIGN.md §12).  Knobs match ``run_mp_scenario_sharded``, including
+    ``halo_codec`` — here the codec covers the full stacked
+    ``[theta | K | L_own | L_nbr]`` payload rows, with one int8 scale per
+    model/dual component.
     """
     mesh = make_sim_mesh(n_shards) if mesh is None else mesh
     P_ = mesh_shards(mesh)
@@ -813,6 +830,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
     if tel:
         sxx = np.asarray(jnp.sum(mask * jnp.sum(x * x, axis=-1), axis=1))
         tel_args = (jnp.asarray(part.shard_rows(sxx)),)
+    codec = resolve_halo_codec(halo_codec)
     outs = _sharded_cl_scan(
         mesh, stream, **{k_: jnp.asarray(v) for k_, v in sharded.items()},
         fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
@@ -820,7 +838,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         halo_src_pos=jnp.asarray(part.halo_src_pos), tel_args=tel_args,
         mu=mu, rho=rho, k=topo.k_max, m=part.shard_size, H=part.halo_size,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
-        exchange=exchange, tel=tel)
+        exchange=exchange, codec=codec, tel=tel)
     frames = None
     if tel:
         hist, theta, overflow, obj_h, stale_h, upd_h = outs
@@ -828,7 +846,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         frames = _sharded_frames(
             part, stream, n_rec, record_every, obj_h, stale_h, upd_h,
             overflow,
-            payload_row_bytes=4 * (1 + 3 * topo.k_max) * p_dim)
+            payload_row_bytes=codec.row_nbytes((1 + 3 * topo.k_max, p_dim)))
     else:
         hist, theta, overflow = outs
 
@@ -882,13 +900,15 @@ def _live_cross_edges(tabs, owner: np.ndarray, live: np.ndarray) -> int:
 @partial(jax.jit,
          static_argnames=("mesh", "alpha", "eta_graph", "lam", "graph_every",
                           "prune_eps", "m", "H", "E", "U", "n_rec",
-                          "record_every", "exchange", "backend", "tel"))
+                          "record_every", "exchange", "codec", "backend",
+                          "tel"))
 def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
                         live0, c, sol, fetch, bnd_pos, halo_src_shard,
                         halo_src_pos, tel_args=(), *, alpha: float,
                         eta_graph: float, lam: float, graph_every: int,
                         prune_eps, m: int, H: int, E: int, U: int,
                         n_rec: int, record_every: int, exchange: str,
+                        codec: HaloCodec = HaloCodec("f32"),
                         backend=None, tel: bool = False):
     """One jitted *segment* of the sharded joint engine.
 
@@ -917,7 +937,8 @@ def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
-        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange)
+        exchange_halo = halo_exchange_fn(bnd, hsrc, hpos, H, P_, exchange,
+                                         codec=codec)
 
         def round_fn(carry, inp):
             theta, K, theta_prev, w, live, ext_prev, suppressed, overflow, \
@@ -1047,6 +1068,7 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
                                assignment: Optional[np.ndarray] = None,
                                local_batch: Optional[int] = None,
                                exchange: str = "all_gather",
+                               halo_codec="f32",
                                partition_seed: int = 0,
                                stream: Optional[EventStream] = None,
                                backend=None,
@@ -1129,6 +1151,7 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
     cross_at_compact = _live_cross_edges(tabs, owner, live0)
 
     tel = telemetry_on(telemetry)
+    codec = resolve_halo_codec(halo_codec)
     p_dim = theta_sol.shape[1]
     stale = jnp.zeros((P_ * part.shard_size,), jnp.int32) if tel else None
     tel_obj, tel_stale, tel_upd, tel_sup, tel_halo = [], [], [], [], []
@@ -1156,7 +1179,7 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
                 eta_graph=eta_graph, lam=lam, graph_every=graph_every,
                 prune_eps=prune_eps, m=part.shard_size, H=part.halo_size,
                 E=E, U=U, n_rec=seg, record_every=record_every,
-                exchange=exchange, backend=backend, tel=tel)
+                exchange=exchange, codec=codec, backend=backend, tel=tel)
         hists.append(np.asarray(hist))
         live_hists.append(np.asarray(live_hist).sum(axis=1))
         suppressed += int(np.asarray(sup).sum())
@@ -1174,7 +1197,8 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
             # halo payload of *this* segment's layout (re-compaction
             # shrinks the boundary between segments)
             per_round = halo_payload_bytes(
-                P_, part.boundary_size, 4 * p_dim, part.halo_size)
+                P_, part.boundary_size, codec.row_nbytes((p_dim,)),
+                part.halo_size)
             seg_rounds = (np.arange(seg, dtype=np.int64) + 1) * record_every
             tel_halo.append(halo_off + seg_rounds * per_round)
             halo_off = int(tel_halo[-1][-1])

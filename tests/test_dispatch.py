@@ -71,6 +71,38 @@ def _make_args(op, seed=0):
         return (jax.random.normal(ks[0], (B, S, H, hd)),
                 jax.random.normal(ks[1], (B, S, H, hd)),
                 jax.random.normal(ks[2], (B, S, H, hd))), {"window": 48}
+    if op == "round_step":
+        n, k, p, m = 31, 5, 12, 40
+        from repro.kernels import round_fuse
+        K = jnp.asarray(rng.standard_normal((n, k, p)), f32)
+        # collision-free scatter targets: duplicate (row, slot) targets with
+        # conflicting payloads are resolution-order-dependent (a valid
+        # realization either way) — duplicate semantics get their own
+        # controlled tests in tests/test_round_fuse.py
+        codes = rng.choice(n * k, size=m, replace=False)
+        deliver = rng.uniform(size=m) < 0.7
+        return (jnp.asarray(rng.standard_normal((n, p)), f32),
+                round_fuse.encode_slots(K),
+                jnp.asarray(rng.uniform(size=n) < 0.5),   # got_ever
+                jnp.asarray(rng.standard_normal((m, p)), f32),     # msg
+                jnp.asarray(np.where(deliver, codes // k, n), jnp.int32),
+                jnp.asarray(np.where(deliver, codes, n * k), jnp.int32),
+                jnp.asarray(rng.standard_normal((m, p)), f32),     # k_old
+                jnp.asarray(rng.standard_normal((n, p)), f32),     # base
+                jnp.asarray(rng.uniform(0.1, 1, n * k), f32)), {}  # a_w
+    if op == "cl_edge_step":
+        n, k, p, E = 23, 4, 10, 18
+        arr3 = lambda: jnp.asarray(rng.standard_normal((n, k, p)), f32)
+        arr2 = lambda: jnp.asarray(rng.standard_normal((n, p)), f32)
+        codes = rng.choice(n * k, size=E, replace=False)  # collision-free
+        return (arr2(), arr3(), arr3(), arr3(), arr3(), arr3(),
+                arr2(), arr3(), arr3(), arr3(),
+                jnp.asarray(codes // k, jnp.int32),
+                jnp.asarray(codes % k, jnp.int32),
+                jnp.asarray(rng.integers(0, n, E), jnp.int32),
+                jnp.asarray(rng.integers(0, k, E), jnp.int32),
+                jnp.asarray(rng.uniform(size=E) < 0.4),
+                jnp.asarray(rng.uniform(size=E) < 0.7)), {"rho": 1.1}
     raise NotImplementedError(op)
 
 
@@ -138,20 +170,52 @@ class TestSelectionRules:
                                    atol=1e-5, rtol=1e-5)
 
     def test_explicit_interpret_false_beats_env_opt_in(self, monkeypatch):
-        """REPRO_PALLAS_INTERPRET=1 in the env must not make auto pick a
-        Pallas impl that an explicit interpret=False backend refuses to
-        run — it has to fall back to fused XLA."""
+        """REPRO_PALLAS_INTERPRET=1 in the env never changes what auto
+        selects — interpret mode is a property of *how* an explicitly
+        requested Pallas impl runs, not a selection preference, so auto
+        resolves to fused XLA with or without the env opt-in."""
         if jax.default_backend() == "tpu":
             pytest.skip("off-TPU selection rule")
         monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
-        fn = resolve("mix", ReproBackend(interpret=False))
-        assert fn is dispatch._REGISTRY["mix"]["xla"].make(False)
-        # and with the opt-in honored, auto picks the Pallas impl
-        fn2 = resolve("mix", ReproBackend())
+        xla = dispatch._REGISTRY["mix"]["xla"].make(False)
+        assert resolve("mix", ReproBackend(interpret=False)) is xla
+        assert resolve("mix", ReproBackend()) is xla
+        # the env opt-in still unlocks an explicitly requested Pallas impl
+        fn = resolve("mix", ReproBackend.using(mix="pallas"))
         args, _ = _make_args("mix")
-        np.testing.assert_allclose(np.asarray(fn2(*args)),
+        np.testing.assert_allclose(np.asarray(fn(*args)),
                                    np.asarray(ref.graph_mix(*args)),
                                    atol=1e-5, rtol=1e-5)
+
+    def test_auto_never_picks_interpret_impl_any_platform(self, monkeypatch):
+        """The satellite rule, pinned for both platforms: auto resolution
+        must never return an impl that would run in Pallas interpret mode —
+        off-TPU it falls back to XLA even under the env opt-in, and on TPU
+        it skips interpret-only registrations (admm_edge's Pallas kernel)."""
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        for platform in ("cpu", "gpu", "tpu"):
+            monkeypatch.setattr(dispatch, "_platform", lambda p=platform: p)
+            for op in dispatch.ops():
+                name = dispatch._auto_impl(op)
+                entry = dispatch._REGISTRY[op][name]
+                assert not entry.interpret_only, (platform, op, name)
+                if platform != "tpu":
+                    assert not entry.pallas, (platform, op, name)
+
+    def test_interpret_only_impl_needs_opt_in_everywhere(self, monkeypatch):
+        """admm_edge/pallas is interpret-only: unavailable and unresolvable
+        without the interpret opt-in even on TPU, still usable as an
+        explicit validation target with it."""
+        entry = dispatch._REGISTRY["admm_edge"]["pallas"]
+        assert entry.interpret_only
+        for platform in ("cpu", "tpu"):
+            monkeypatch.setattr(dispatch, "_platform", lambda p=platform: p)
+            assert not dispatch.available("admm_edge", "pallas",
+                                          interpret=False)
+            assert dispatch.available("admm_edge", "pallas", interpret=True)
+            with pytest.raises(BackendUnavailable):
+                resolve("admm_edge", ReproBackend.using(
+                    admm_edge="pallas", interpret=False))
 
     def test_override_and_default_selection(self):
         b = ReproBackend.using(mix="reference")
@@ -189,7 +253,7 @@ def test_no_direct_kernel_imports_outside_kernels():
     """Acceptance: production call sites resolve kernels through dispatch —
     no module outside kernels/ imports a concrete kernel module."""
     root = pathlib.Path(__file__).resolve().parent.parent
-    concrete = r"(graph_mix|sparse_mix|admm_update|flash_attention)"
+    concrete = r"(graph_mix|sparse_mix|admm_update|flash_attention|round_fuse)"
     pats = [re.compile(r"^\s*(from|import)\s+repro\.kernels\." + concrete),
             re.compile(r"^\s*from\s+repro\.kernels(\.\w+)?\s+import\s+"
                        r".*\b" + concrete),
