@@ -22,8 +22,8 @@ import os
 
 from repro.core.graph_learning import cluster_edge_recovery
 from repro.data.synthetic import two_cluster_mean_problem
-from repro.simulate import (NetworkConditions, planted_partition_topology,
-                            run_joint_scenario)
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            planted_partition_topology, run_scenario)
 from repro.telemetry import (TelemetryConfig, build_manifest, format_row,
                              trace_rows, write_run)
 
@@ -56,11 +56,12 @@ def main():
           f" (inter weight mass before learning: {base.inter_mass:.2f})")
 
     for eta in (0.0, args.eta):
-        tr = run_joint_scenario(
-            topo, theta_sol, c, 0.9, NetworkConditions(), rounds=rounds,
+        tr = run_scenario(ScenarioSpec(
+            algo="joint", topology=topo, theta_sol=theta_sol, c=c,
+            alpha=0.9, conditions=NetworkConditions(), rounds=rounds,
             batch=n // 2, seed=args.seed, record_every=rounds // 3,
             eta_graph=eta, lam=args.lam, graph_every=5, prune_eps=1e-3,
-            telemetry=TelemetryConfig(enabled=True))
+            telemetry=TelemetryConfig(enabled=True)))
         rec = cluster_edge_recovery(tabs.nbr_idx, tabs.deg_count,
                                     tr.final_w, labels)
         rows = trace_rows(tr)

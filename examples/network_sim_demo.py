@@ -19,8 +19,8 @@ import os
 
 import numpy as np
 
-from repro.simulate import (cluster_topology, get_scenario, list_scenarios,
-                            run_mp_scenario, sparse_sync_mp)
+from repro.simulate import (ScenarioSpec, cluster_topology, get_scenario,
+                            list_scenarios, run_scenario, sparse_sync_mp)
 from repro.telemetry import (TelemetryConfig, build_manifest, format_row,
                              trace_rows, write_run)
 
@@ -61,11 +61,12 @@ def main():
     batch = max(1, n // 10)
     for name in list_scenarios():
         sc = get_scenario(name)
-        tr = run_mp_scenario(topo, theta_sol, c, args.alpha,
-                             sc.make_conditions(rounds),
-                             rounds=rounds, batch=batch, seed=args.seed,
-                             record_every=max(1, rounds // 8),
-                             telemetry=TelemetryConfig(enabled=True))
+        tr = run_scenario(ScenarioSpec(
+            algo="mp", topology=topo, theta_sol=theta_sol, c=c,
+            alpha=args.alpha, conditions=sc.make_conditions(rounds),
+            rounds=rounds, batch=batch, seed=args.seed,
+            record_every=max(1, rounds // 8),
+            telemetry=TelemetryConfig(enabled=True)))
         err = float(np.linalg.norm(tr.theta_hist[-1] - star)) / err0
         rows = trace_rows(tr)
         print(f"{name:16s} rel_err={err:.3f}  {format_row(rows[-1])}")

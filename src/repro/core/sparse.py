@@ -281,6 +281,20 @@ def batched_model_update(nbr_p_rows, K_rows, c_rows, sol_rows, alpha,
         / (alpha + abar * c_rows)[:, None]
 
 
+def personalized_predict(theta_rows, x_rows):
+    """Batched decode step of the personalization service (DESIGN.md §16).
+
+    theta_rows: (B, p) personalized model rows — each user's current
+    gossip-smoothed Eq. (6) / Eq. (7) model, snapshotted from the
+    :class:`repro.serve.store.AgentStateStore`; x_rows: (B, p) feature
+    rows.  Returns the (B,) predictions ``<theta_u, x_u>`` — the linear
+    / mean-estimation model family of paper §5, evaluated for many users
+    in one fused op.  This is the arithmetic the serve engine jits: one
+    tick serves a whole batch of users from their own parameter rows.
+    """
+    return jnp.sum(theta_rows * x_rows, axis=-1)
+
+
 def quadratic_primal_core(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
                           D_l, m_l, sx, mu, rho,
                           backend: Optional[ReproBackend] = None):

@@ -491,3 +491,52 @@ def run_admm_sweep(trials: ADMMTrials, iters: int = 50,
         jnp.asarray(trials.targets), iters=iters, backend=backend)
     return ADMMSweepResult(trials, np.asarray(objs), np.asarray(errs),
                            np.asarray(theta))
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec-driven sweeps over the asynchronous scenario engines
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSweepResult:
+    """All cells of one ``run_scenario`` grid sweep.
+
+    ``cells[i]`` is the axis-value dict of trial i (cartesian order,
+    itertools.product over the axes as given); ``specs``/``traces`` line
+    up with it.
+    """
+
+    cells: Tuple[dict, ...]
+    specs: tuple
+    traces: tuple
+
+    @property
+    def n_trials(self) -> int:
+        return len(self.traces)
+
+
+def run_scenario_sweep(base, **axes: Sequence) -> ScenarioSweepResult:
+    """Cartesian sweep of :func:`repro.simulate.run_scenario` over
+    ``ScenarioSpec`` fields.
+
+    ``base`` is a fully-specified :class:`~repro.simulate.ScenarioSpec`;
+    each axis is ``field_name=sequence_of_values`` and every grid cell
+    runs ``run_scenario(dataclasses.replace(base, **cell))``.  Because a
+    spec is frozen, cells with identical static shapes (same topology /
+    rounds / batch) reuse the engines' jit cache — a seed axis costs one
+    compile total.  The unified-API twin of the dense vmapped sweeps
+    above for experiments that need the event-driven engines (faults,
+    sharding, serving) rather than the synchronous iterates.
+    """
+    from repro.simulate import run_scenario
+
+    names = tuple(axes)
+    for name in names:
+        if not hasattr(base, name):
+            raise ValueError(f"ScenarioSpec has no field {name!r}")
+    cells = tuple(dict(zip(names, values))
+                  for values in itertools.product(*axes.values()))
+    specs = tuple(dataclasses.replace(base, **cell) for cell in cells)
+    return ScenarioSweepResult(cells, specs,
+                               tuple(run_scenario(s) for s in specs))

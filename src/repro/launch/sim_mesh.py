@@ -29,6 +29,7 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -218,6 +219,23 @@ def halo_payload_bytes(
     if halo_size == 0:
         return 0
     return int(n_shards) * int(boundary_size) * int(row_nbytes)
+
+
+def shard_read_route(owner, local_pos, users):
+    """Route per-user state reads to the owning shard's store.
+
+    ``owner``/``local_pos`` are the (n,) shard-assignment tables of a
+    ``GraphPartition`` (agent a lives at row ``local_pos[a]`` of shard
+    ``owner[a]``'s local block).  Returns the ``(shard, pos)`` int arrays
+    for a batch of user ids — the lookup the sharded personalization
+    service performs per inference request (DESIGN.md §16): reads go to
+    the one shard that owns the user's row, never through a gathered
+    global copy, so serving scales with the mesh exactly like the
+    simulator state does.
+    """
+    users = np.asarray(users, np.int64)
+    return (np.asarray(owner, np.int32)[users],
+            np.asarray(local_pos, np.int32)[users])
 
 
 def shard_map_1d(f, mesh, in_specs, out_specs):

@@ -1,5 +1,23 @@
-"""Serving: batched decode engine with slot-based continuous batching."""
+"""Serving: batched decode engine with slot-based continuous batching,
+plus the gossip-backed personalization service (DESIGN.md §16)."""
 
-from .engine import ServeConfig, Engine, sample_token
+from .engine import CollabServeEngine, Engine, ServeConfig, sample_token
+from .store import (
+    AgentStateStore,
+    CommittedState,
+    MixedModelCache,
+    ServeReport,
+    ShardedAgentStateStore,
+)
 
-__all__ = ["ServeConfig", "Engine", "sample_token"]
+__all__ = [
+    "ServeConfig",
+    "Engine",
+    "sample_token",
+    "CollabServeEngine",
+    "AgentStateStore",
+    "ShardedAgentStateStore",
+    "CommittedState",
+    "MixedModelCache",
+    "ServeReport",
+]

@@ -23,7 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse import personalized_predict
 from repro.models import Model
+from repro.serve.store import MixedModelCache, ServeReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +54,13 @@ class _Slot:
 
 
 class Engine:
+    """Token-decode serving engine (slot-based continuous batching).
+
+    After :meth:`run` returns, ``self.exhausted`` records whether the
+    tick budget ran out with work still queued or in flight — callers
+    must check it before treating the returned dict as complete.
+    """
+
     def __init__(self, model: Model, params, cfg: ServeConfig):
         self.model = model
         self.params = params
@@ -63,6 +72,7 @@ class Engine:
         self._next_id = 0
         self._key = jax.random.PRNGKey(cfg.seed)
         self._pending: List[Tuple[int, np.ndarray]] = []
+        self.exhausted = False
         # token fed to idle slots (content irrelevant — output discarded)
         self._last_tok = np.zeros(self._tok_shape(B), np.int32)
 
@@ -98,13 +108,21 @@ class Engine:
         return self._results.get(rid)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
-        """Drive until all submitted requests finish."""
+        """Drive until all submitted requests finish.
+
+        Previously a run that hit ``max_ticks`` with slots still active
+        (or prompts still queued) returned its partial results
+        indistinguishably from a completed one; ``self.exhausted`` now
+        flags that case explicitly so callers can resubmit or raise.
+        """
         ticks = 0
         while (self._pending or any(s.active for s in self.slots)) \
                 and ticks < max_ticks:
             self._fill_slots()
             self._tick()
             ticks += 1
+        self.exhausted = bool(self._pending
+                              or any(s.active for s in self.slots))
         return dict(self._results)
 
     # -- internals -----------------------------------------------------------
@@ -152,3 +170,101 @@ class Engine:
                                        and t == self.cfg.eos_id):
                 self._results[slot.request_id] = slot.generated
                 slot.active = False
+
+
+class CollabServeEngine:
+    """Personalization service over a gossip-backed agent-state store
+    (DESIGN.md §16).
+
+    The serving half of the read/write split: the scenario driver is the
+    writer (it :meth:`commit`\\ s each record chunk's models + staleness
+    and the chunk's dirty set), inference requests are readers.  Serving
+    is batched decode — each tick gathers up to ``batch_size`` users'
+    personalized parameter rows (through the :class:`MixedModelCache`,
+    falling back to the store for misses) and runs one jitted
+    ``personalized_predict`` over the whole batch, so many users are
+    served per dispatch from one (B, p) row block.
+
+    Works over either an :class:`AgentStateStore` or a
+    :class:`ShardedAgentStateStore` (both expose ``read_rows``); the
+    predictions and served staleness are identical by the stores' parity
+    contract.
+    """
+
+    def __init__(self, store, n: int, p: int, batch_size: int = 256):
+        self.store = store
+        self.n = int(n)
+        self.p = int(p)
+        self.batch_size = int(batch_size)
+        self.cache = MixedModelCache(n, p)
+        self._predict = jax.jit(personalized_predict)
+        self._served_staleness: List[np.ndarray] = []
+        self.requests = 0
+
+    # -- writer side ---------------------------------------------------------
+
+    def commit(self, round_: int, theta, staleness, dirty=None) -> int:
+        """Publish a chunk snapshot and invalidate its dirty cache entries.
+
+        ``dirty`` is the chunk's (n,) bool model-update delivery mask
+        (``telemetry.metrics.stream_dirty_chunks``); returns how many
+        live cache entries it voided.
+        """
+        self.store.commit(round_, theta, staleness)
+        return self.cache.invalidate(dirty) if dirty is not None else 0
+
+    # -- reader side ---------------------------------------------------------
+
+    def serve(self, users, x=None):
+        """Serve a batch of inference requests from the committed state.
+
+        ``users`` (R,) int user ids; ``x`` optional (R, p) feature rows
+        (defaults to all-ones, making the prediction the row sum — the
+        linear model family of paper §5 with trivial features).  Returns
+        ``(preds (R,) f32, staleness (R,) int32)``; staleness per request
+        is recorded for the :meth:`report` percentiles.
+        """
+        users = np.asarray(users, np.int64)
+        R = users.shape[0]
+        preds = np.empty(R, np.float32)
+        stale = np.empty(R, np.int32)
+        for lo in range(0, R, self.batch_size):
+            u = users[lo:lo + self.batch_size]
+            snap_round = self.store.snapshot_round()
+            hit, rows, stl = self.cache.lookup(u, snap_round)
+            if not hit.all():
+                miss = ~hit
+                read = self.store.read_rows(u[miss])
+                rows[miss] = read.theta
+                stl[miss] = read.staleness
+                self.cache.fill(u[miss], read.theta, read.staleness,
+                                read.round)
+            xb = (np.ones_like(rows) if x is None
+                  else np.asarray(x[lo:lo + self.batch_size], np.float32))
+            preds[lo:lo + u.shape[0]] = np.asarray(self._predict(rows, xb))
+            stale[lo:lo + u.shape[0]] = stl
+        self.requests += R
+        self._served_staleness.append(stale)
+        return preds, stale
+
+    def report(self, requests_c=None, hits_c=None, misses_c=None,
+               invalidations_c=None) -> ServeReport:
+        """Snapshot the engine's accounting as a :class:`ServeReport`."""
+        served = (np.concatenate(self._served_staleness)
+                  if self._served_staleness else np.zeros(0, np.int32))
+        zero = np.zeros(0, np.int64)
+        return ServeReport(
+            requests=self.requests,
+            hits=self.cache.hits,
+            misses=self.cache.misses,
+            invalidations=self.cache.invalidations,
+            served_staleness=served,
+            requests_c=np.asarray(requests_c, np.int64)
+            if requests_c is not None else zero,
+            hits_c=np.asarray(hits_c, np.int64)
+            if hits_c is not None else zero,
+            misses_c=np.asarray(misses_c, np.int64)
+            if misses_c is not None else zero,
+            invalidations_c=np.asarray(invalidations_c, np.int64)
+            if invalidations_c is not None else zero,
+        )

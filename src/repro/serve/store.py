@@ -1,0 +1,264 @@
+"""Agent-state read/write split for the personalization service
+(DESIGN.md §16).
+
+The collaborative engines are *writers*: one jitted gossip scan owns the
+agent state and commits a snapshot per record chunk (models + per-agent
+staleness).  Inference requests are *readers*: each snapshots a user's
+current mixed model without ever touching the scan's buffers — reads are
+pure host-side gathers over an immutable committed tuple, so serving
+cannot perturb the trajectory (the bit-for-bit acceptance property of
+tests/test_serve_collab.py) and a reader can never observe a torn
+snapshot (a commit swaps one reference; a reader holds either the old
+tuple or the new one, never a mix).
+
+Three pieces:
+
+* :class:`AgentStateStore` — the single-device store: committed
+  ``(round, theta, staleness)`` snapshots behind an atomic swap.
+* :class:`ShardedAgentStateStore` — P per-shard stores, each holding only
+  its own local block rows (the ``GraphPartition`` layout); reads route
+  to the owning shard via ``launch.sim_mesh.shard_read_route`` and match
+  the single-device store bit-for-bit.
+* :class:`MixedModelCache` — per-user cached model rows, invalidated by
+  the model-update deliveries of each committed chunk
+  (``telemetry.metrics.stream_dirty_chunks``): an agent that received no
+  update has a bit-identical theta row, so a clean cache entry stays
+  valid across commits by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.launch.sim_mesh import shard_read_route
+
+
+class CommittedState(NamedTuple):
+    """One immutable committed snapshot (what readers hold)."""
+
+    round: int               # global round index at the snapshot (1-based)
+    theta: np.ndarray        # (rows, p) committed personalized models
+    staleness: np.ndarray    # (rows,) int32 rounds since last update
+
+
+class AgentStateStore:
+    """Read/write-split agent state: scan-side commits, request-side reads.
+
+    The writer (the scenario driver, after each jitted chunk) calls
+    :meth:`commit`; readers call :meth:`snapshot` / :meth:`read_rows`.
+    Commits replace one tuple reference under a lock; reads are lock-free
+    (a Python attribute read is atomic), so a burst of inference requests
+    never blocks the writer and vice versa.
+    """
+
+    def __init__(self, n: int, p: int):
+        self.n = int(n)
+        self.p = int(p)
+        self._lock = threading.Lock()
+        self._committed = CommittedState(
+            0, np.zeros((self.n, self.p), np.float32),
+            np.zeros(self.n, np.int32))
+        self.commits = 0
+
+    def commit(self, round_: int, theta, staleness) -> None:
+        """Publish a new snapshot (writer side; copies, then swaps)."""
+        theta = np.ascontiguousarray(theta, np.float32)
+        staleness = np.ascontiguousarray(staleness, np.int32)
+        if theta.shape != (self.n, self.p):
+            raise ValueError(
+                f"commit shape {theta.shape} != ({self.n}, {self.p})")
+        with self._lock:
+            self._committed = CommittedState(int(round_), theta, staleness)
+            self.commits += 1
+
+    def snapshot(self) -> CommittedState:
+        """The current committed tuple (immutable; reader side)."""
+        return self._committed
+
+    def snapshot_round(self) -> int:
+        """Round index of the current committed snapshot."""
+        return self._committed.round
+
+    def read_rows(self, users) -> CommittedState:
+        """Snapshot the requested users' rows: (round, theta, staleness).
+
+        One consistent snapshot serves the whole batch — the tuple is
+        grabbed once, so even a commit racing the gather leaves every
+        returned row from the same (pre- or post-) snapshot.
+        """
+        snap = self.snapshot()
+        users = np.asarray(users, np.int64)
+        return CommittedState(snap.round, snap.theta[users],
+                              snap.staleness[users])
+
+
+class ShardedAgentStateStore:
+    """P per-shard :class:`AgentStateStore` blocks behind one read router.
+
+    Built from a ``GraphPartition``'s ``owner`` / ``local_pos`` tables:
+    shard q's store holds only q's local block rows (padded to the shard
+    size m), mirroring how the partitioned engines shard the scan state.
+    :meth:`commit` takes canonical-order arrays (what the sharded traces
+    report) and scatters each shard its own rows; :meth:`read_rows`
+    routes every user to the owning shard's store and gathers its local
+    row — bit-for-bit the single-device store's answer
+    (tests/test_serve_collab.py).
+    """
+
+    def __init__(self, owner, local_pos, p: int,
+                 n_shards: Optional[int] = None):
+        self.owner = np.asarray(owner, np.int32)
+        self.local_pos = np.asarray(local_pos, np.int32)
+        self.n = int(self.owner.shape[0])
+        self.p = int(p)
+        self.n_shards = int(n_shards if n_shards is not None
+                            else self.owner.max() + 1)
+        m = 1
+        for q in range(self.n_shards):
+            sel = self.local_pos[self.owner == q]
+            m = max(m, int(sel.max()) + 1 if sel.size else 1)
+        self.shard_size = m
+        self._stores = [AgentStateStore(m, p) for _ in range(self.n_shards)]
+
+    def commit(self, round_: int, theta, staleness) -> None:
+        """Commit canonical-order (n, p) state as per-shard local blocks."""
+        theta = np.asarray(theta, np.float32)
+        staleness = np.asarray(staleness, np.int32)
+        for q in range(self.n_shards):
+            mask = self.owner == q
+            blk = np.zeros((self.shard_size, self.p), np.float32)
+            stl = np.zeros(self.shard_size, np.int32)
+            blk[self.local_pos[mask]] = theta[mask]
+            stl[self.local_pos[mask]] = staleness[mask]
+            self._stores[q].commit(round_, blk, stl)
+
+    def snapshot_round(self) -> int:
+        """Round index of the latest committed snapshot across shards."""
+        return max(s.snapshot().round for s in self._stores)
+
+    def read_rows(self, users) -> CommittedState:
+        """Route each user to its owning shard's store and gather rows."""
+        users = np.asarray(users, np.int64)
+        shard, pos = shard_read_route(self.owner, self.local_pos, users)
+        theta = np.empty((users.shape[0], self.p), np.float32)
+        stale = np.empty(users.shape[0], np.int32)
+        round_ = 0
+        for q in np.unique(shard):
+            sel = shard == q
+            snap = self._stores[q].snapshot()
+            theta[sel] = snap.theta[pos[sel]]
+            stale[sel] = snap.staleness[pos[sel]]
+            round_ = max(round_, snap.round)
+        return CommittedState(round_, theta, stale)
+
+
+class MixedModelCache:
+    """Per-user cache of served mixed-model rows with delivery invalidation.
+
+    Vectorized over users: a (n,) validity mask plus cached theta rows.
+    :meth:`invalidate` voids the entries of agents whose models a
+    committed chunk rewrote (the dirty set of
+    ``telemetry.metrics.stream_dirty_chunks``); :meth:`lookup` serves
+    hits from the cache and reports which users need a store read.
+
+    Staleness is *not* cached by value — a clean agent's staleness keeps
+    aging across commits even though its theta row is frozen — but by the
+    round its model last absorbed an update (``committed round -
+    committed staleness``, which cannot change while the entry is clean),
+    so a cache hit at committed round r serves the exact staleness
+    ``r - last_update``, bit-identical to a fresh store read.
+
+    Counters (hits / misses / invalidations) are cumulative over the
+    cache's lifetime and flow into ``TelemetryFrames`` via the scenario
+    driver.
+    """
+
+    def __init__(self, n: int, p: int):
+        self.n = int(n)
+        self.valid = np.zeros(self.n, bool)
+        self.theta = np.zeros((self.n, int(p)), np.float32)
+        self.last_update = np.zeros(self.n, np.int64)
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def invalidate(self, dirty) -> int:
+        """Void cached entries of dirty agents; returns how many were live."""
+        dirty = np.asarray(dirty, bool)
+        killed = int(np.count_nonzero(self.valid & dirty))
+        self.valid &= ~dirty
+        self.invalidations += killed
+        return killed
+
+    def lookup(self, users, round_: int):
+        """(hit_mask, theta_rows, staleness_rows) for a user batch.
+
+        ``round_`` is the current committed round (what hit staleness is
+        computed against).  Rows of missing users are left zero — the
+        caller fills them from the store via :meth:`fill` — and the
+        hit/miss counters advance.
+        """
+        users = np.asarray(users, np.int64)
+        hit = self.valid[users]
+        self.hits += int(np.count_nonzero(hit))
+        self.misses += int(users.shape[0] - np.count_nonzero(hit))
+        stale = (int(round_) - self.last_update[users]).astype(np.int32)
+        return hit, self.theta[users], stale
+
+    def fill(self, users, theta_rows, staleness_rows, round_: int) -> None:
+        """Insert freshly-read rows for the given users (marks them valid)."""
+        users = np.asarray(users, np.int64)
+        self.theta[users] = theta_rows
+        self.last_update[users] = int(round_) - np.asarray(
+            staleness_rows, np.int64)
+        self.valid[users] = True
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Host-side accounting of one scenario's served inference requests.
+
+    requests / hits / misses / invalidations: totals over the run;
+    served_staleness: (R,) int32 staleness of every served model (rounds
+    since the user's model last absorbed a neighbor update, at the
+    serving snapshot — the PR-6 counter, read at serve time);
+    requests_c / hits_c / misses_c / invalidations_c: (n_rec,) cumulative
+    per-record-chunk counters (what the telemetry frames attach).
+    """
+
+    requests: int
+    hits: int
+    misses: int
+    invalidations: int
+    served_staleness: np.ndarray
+    requests_c: np.ndarray
+    hits_c: np.ndarray
+    misses_c: np.ndarray
+    invalidations_c: np.ndarray
+
+    @property
+    def hit_rate(self) -> float:
+        """Cache hit fraction over all served requests (0.0 if none)."""
+        return self.hits / self.requests if self.requests else 0.0
+
+    def staleness_percentile(self, q: float) -> float:
+        """Percentile of served staleness (0.0 if nothing was served)."""
+        if self.served_staleness.size == 0:
+            return 0.0
+        return float(np.percentile(self.served_staleness, q))
+
+    def summary(self) -> dict:
+        """JSON-ready scalar summary (the bench report row)."""
+        return {
+            "requests": self.requests,
+            "cache_hits": self.hits,
+            "cache_misses": self.misses,
+            "cache_invalidations": self.invalidations,
+            "cache_hit_rate": self.hit_rate,
+            "served_staleness_p50": self.staleness_percentile(50),
+            "served_staleness_p99": self.staleness_percentile(99),
+        }

@@ -10,19 +10,23 @@ from .topology import (SparseTopology, ring_topology,
                        random_geometric_topology, cluster_topology,
                        planted_partition_topology)
 from .scheduler import (NetworkConditions, EventBatch, EventStream,
-                        draw_wakeups, draw_slots, draw_events,
+                        ServeStream, draw_wakeups, draw_slots, draw_events,
                         straggler_rates, churn_step, precompute_event_stream,
+                        precompute_serve_stream, serve_chunk_requests,
                         stream_totals)
 from .engines import (SparseTrace, SimTrace, CLSimTrace, JointSimTrace,
                       SparseADMMState, SparseCLTrace, sparse_async_gossip,
-                      sparse_sync_mp, run_mp_scenario, run_cl_scenario,
-                      run_joint_scenario, sparse_async_admm,
-                      init_sparse_admm)
+                      sparse_sync_mp, sparse_async_admm, init_sparse_admm)
 from .partition import (GraphPartition, ShardedSimTrace, JointShardedTrace,
                         greedy_partition, block_partition, edge_cut,
-                        run_mp_scenario_sharded, run_cl_scenario_sharded,
-                        run_joint_scenario_sharded, default_local_batch,
-                        default_local_events)
+                        default_local_batch, default_local_events)
+# the unified scenario API; the six run_* names resolve to spec.py's
+# deprecated wrappers (the undeprecated implementations stay importable as
+# repro.simulate.engines.run_mp_scenario etc.)
+from .spec import (ScenarioSpec, run_scenario, run_mp_scenario,
+                   run_cl_scenario, run_joint_scenario,
+                   run_mp_scenario_sharded, run_cl_scenario_sharded,
+                   run_joint_scenario_sharded)
 from repro.launch.sim_mesh import HaloCodec, resolve_halo_codec
 from .scenarios import Scenario, SCENARIOS, get_scenario, list_scenarios
 

@@ -208,6 +208,10 @@ class SimTrace:
                   invariant is  delivered + dropped == 2 * (events - invalid)
     telemetry:    TelemetryFrames when the run was launched with
                   ``TelemetryConfig(enabled=True)``, else None
+    serve:        ``repro.serve.ServeReport`` when the run carried an
+                  inference-request stream (``ScenarioSpec.serve``), else
+                  None — serving reads committed snapshots only, so its
+                  presence never changes theta_hist (DESIGN.md §16)
     """
 
     theta_hist: np.ndarray
@@ -218,6 +222,7 @@ class SimTrace:
     events: int
     invalid: int = 0
     telemetry: Optional[TelemetryFrames] = None
+    serve: Optional[object] = None
 
 
 @partial(jax.jit, static_argnames=("conditions", "alpha", "batch",

@@ -343,6 +343,37 @@ def default_local_events(batch: int, n_shards: int) -> int:
     return _binomial_cap(2 * batch, n_shards, batch)
 
 
+def _sharded_setup(topo, n_shards, mesh, assignment, partition_seed):
+    """Shared preamble of the three sharded runners: resolve the mesh,
+    the shard assignment (greedy by default, validated when explicit)
+    and the graph partition.  Returns ``(mesh, P_, assignment, part)``.
+    """
+    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
+    P_ = mesh_shards(mesh)
+    if assignment is None:
+        assignment = greedy_partition(topo, P_, seed=partition_seed)
+    elif int(np.max(assignment)) >= P_:
+        raise ValueError(
+            f"assignment uses shard {int(np.max(assignment))} but the mesh "
+            f"has only {P_} devices (start the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
+            f"fake host devices)")
+    part = GraphPartition.build(topo, assignment, P_)
+    return mesh, P_, assignment, part
+
+
+def _local_capacities(batch: int, P_: int, local_batch) -> tuple:
+    """Per-shard static (event, update) capacities ``(E, U)`` — the
+    8-sigma defaults, or the lossless explicit-capacity override."""
+    if local_batch is None:
+        E = default_local_events(batch, P_)
+        U = default_local_batch(batch, P_)
+    else:                      # explicit capacity: lossless event selection
+        E = batch
+        U = max(1, min(local_batch, 2 * batch))
+    return E, min(U, 2 * E)
+
+
 def _scan_specs(P_spec, tree):
     return jax.tree_util.tree_map(lambda _: P_spec, tree)
 
@@ -522,17 +553,8 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
     or the lossy "bf16"/"int8" encodings with f32 accumulation); the
     telemetry ``halo_bytes`` column accounts the coded wire size.
     """
-    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
-    P_ = mesh_shards(mesh)
-    if assignment is None:
-        assignment = greedy_partition(topo, P_, seed=partition_seed)
-    elif int(np.max(assignment)) >= P_:
-        raise ValueError(
-            f"assignment uses shard {int(np.max(assignment))} but the mesh "
-            f"has only {P_} devices (start the process with "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
-            f"fake host devices)")
-    part = GraphPartition.build(topo, assignment, P_)
+    mesh, P_, assignment, part = _sharded_setup(
+        topo, n_shards, mesh, assignment, partition_seed)
 
     tabs = topo.tables
     n = topo.n
@@ -550,13 +572,7 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
         theta0=part.shard_rows(theta_sol), K0=part.shard_rows(K0),
         nbr_p=part.shard_rows(tabs.nbr_p), c=part.shard_rows(c),
         sol=part.shard_rows(theta_sol))
-    if local_batch is None:
-        E = default_local_events(batch, P_)
-        U = default_local_batch(batch, P_)
-    else:                      # explicit capacity: lossless event selection
-        E = batch
-        U = max(1, min(local_batch, 2 * batch))
-    U = min(U, 2 * E)
+    E, U = _local_capacities(batch, P_, local_batch)
 
     tel = telemetry_on(telemetry)
     codec = resolve_halo_codec(halo_codec)
@@ -768,17 +784,8 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
     ``[theta | K | L_own | L_nbr]`` payload rows, with one int8 scale per
     model/dual component.
     """
-    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
-    P_ = mesh_shards(mesh)
-    if assignment is None:
-        assignment = greedy_partition(topo, P_, seed=partition_seed)
-    elif int(np.max(assignment)) >= P_:
-        raise ValueError(
-            f"assignment uses shard {int(np.max(assignment))} but the mesh "
-            f"has only {P_} devices (start the process with "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
-            f"fake host devices)")
-    part = GraphPartition.build(topo, assignment, P_)
+    mesh, P_, assignment, part = _sharded_setup(
+        topo, n_shards, mesh, assignment, partition_seed)
 
     tabs = topo.tables
     record_every, n_rec = record_chunks(rounds, record_every)
@@ -817,13 +824,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         D=part.shard_rows(tabs.deg_w.astype(np.float32)),
         m_counts=part.shard_rows(m_counts),
         sx=part.shard_rows(sx))
-    if local_batch is None:
-        E = default_local_events(batch, P_)
-        U = default_local_batch(batch, P_)
-    else:                      # explicit capacity: lossless event selection
-        E = batch
-        U = max(1, min(local_batch, 2 * batch))
-    U = min(U, 2 * E)
+    E, U = _local_capacities(batch, P_, local_batch)
 
     tel = telemetry_on(telemetry)
     tel_args = ()
@@ -1094,18 +1095,9 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
     only the exchange volume shrinks.  ``rounds`` is first floored by the
     shared recording policy; segment boundaries land on record chunks.
     """
-    mesh = make_sim_mesh(n_shards) if mesh is None else mesh
-    P_ = mesh_shards(mesh)
-    if assignment is None:
-        assignment = greedy_partition(topo, P_, seed=partition_seed)
-    elif int(np.max(assignment)) >= P_:
-        raise ValueError(
-            f"assignment uses shard {int(np.max(assignment))} but the mesh "
-            f"has only {P_} devices (start the process with "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=<P> for "
-            f"fake host devices)")
+    mesh, P_, assignment, part = _sharded_setup(
+        topo, n_shards, mesh, assignment, partition_seed)
     owner = np.asarray(assignment, np.int32)
-    part = GraphPartition.build(topo, assignment, P_)
     full_cut = part.edge_cut
 
     tabs = topo.tables
@@ -1135,13 +1127,7 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
     live = jnp.asarray(part.shard_rows(live0))
     c_sh = jnp.asarray(part.shard_rows(c))
     sol_sh = jnp.asarray(part.shard_rows(theta_sol))
-    if local_batch is None:
-        E = default_local_events(batch, P_)
-        U = default_local_batch(batch, P_)
-    else:                      # explicit capacity: lossless event selection
-        E = batch
-        U = max(1, min(local_batch, 2 * batch))
-    U = min(U, 2 * E)
+    E, U = _local_capacities(batch, P_, local_batch)
 
     # segment schedule (record chunks per jitted call)
     can_recompact = (eta_graph > 0.0 and prune_eps is not None

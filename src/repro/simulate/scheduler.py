@@ -225,6 +225,70 @@ def stream_totals(stream: EventStream) -> tuple:
     return delivered, dropped, int((~valid).sum())
 
 
+class ServeStream(NamedTuple):
+    """A scenario's inference requests, materialized up front.
+
+    The second event stream of the personalization service (DESIGN.md
+    §16): request ``q`` asks for user ``user[q]``'s current personalized
+    model during round ``round[q]``.  Requests are *reads* — they never
+    touch model state, RNG, or the gossip event schedule — so the stream
+    is drawn host-side from its own generator, entirely independent of
+    :func:`precompute_event_stream`'s key schedule: a run with a serve
+    stream replays the bit-identical gossip trajectory of the serve-free
+    run (the acceptance property tests/test_serve_collab.py holds).
+
+    ``round`` is sorted ascending; a request in round t is served from the
+    first committed state snapshot covering t (the record chunk it falls
+    in — ``chunk_of_round``), the read/write-split granularity at which
+    the jitted scan publishes state (``repro.serve.store``).
+    """
+
+    user: np.ndarray     # (R,) int32 requested agent/user id
+    round: np.ndarray    # (R,) int32 arrival round, sorted ascending
+
+    @property
+    def n_requests(self) -> int:
+        """Total request count R."""
+        return int(self.user.shape[0])
+
+
+def precompute_serve_stream(n: int, rounds: int, rate: float,
+                            seed: int = 0) -> ServeStream:
+    """Draw ``rate`` requests/round for ``rounds`` rounds over ``n`` users.
+
+    Uniform arrival rounds (sorted) and uniform users, from a dedicated
+    ``numpy`` generator — deliberately not jax PRNG, so no accidental
+    coupling with the gossip key schedule is even possible.  ``rate`` may
+    be fractional; the total request count is ``round(rate * rounds)``.
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    n_req = int(round(rate * rounds))
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.integers(0, rounds, size=n_req)).astype(np.int32)
+    user = rng.integers(0, n, size=n_req).astype(np.int32)
+    return ServeStream(user=user, round=t)
+
+
+def serve_chunk_requests(serve: ServeStream, n_rec: int,
+                         record_every: int) -> list:
+    """Split a ServeStream into per-record-chunk (user, round) slices.
+
+    Chunk ``ci`` covers rounds ``[ci * record_every, (ci+1) * record_every)``
+    — exactly the rounds whose updates the engines commit in snapshot
+    ``ci`` — so every request is served from the snapshot of its own
+    chunk: it observes all deliveries of that chunk (post-update
+    visibility) and none of any later round.  Requests beyond the clamped
+    horizon (``record_chunks`` floors it) are dropped.  Returns a list of
+    ``n_rec`` (user, round) int32 array pairs.
+    """
+    edges = np.searchsorted(serve.round,
+                            np.arange(n_rec + 1) * record_every)
+    return [(serve.user[edges[ci]:edges[ci + 1]],
+             serve.round[edges[ci]:edges[ci + 1]])
+            for ci in range(n_rec)]
+
+
 @partial(jax.jit, static_argnames=("conditions", "batch", "rounds"))
 def _draw_stream(tabs, part_half, rates, keys, *,
                  conditions: NetworkConditions, batch: int, rounds: int):

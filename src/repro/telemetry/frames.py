@@ -38,6 +38,12 @@ class TelemetryFrames:
                      (sharded runs; None on one device)
     suppressed:      (n_rec,) cumulative deliveries voided by a pruned
                      receiver slot (joint runs; None otherwise)
+    serve_requests / serve_hits / serve_misses / serve_invalidations:
+                     (n_rec,) cumulative personalization-service counters
+                     (DESIGN.md §16) — requests served from each chunk's
+                     committed snapshot, mixed-model cache hits/misses,
+                     and cache entries invalidated by that chunk's
+                     model-update deliveries (None without a serve stream)
     """
 
     rounds: np.ndarray
@@ -52,6 +58,10 @@ class TelemetryFrames:
     halo_bytes: Optional[np.ndarray] = None
     overflow_per_shard: Optional[np.ndarray] = None
     suppressed: Optional[np.ndarray] = None
+    serve_requests: Optional[np.ndarray] = None
+    serve_hits: Optional[np.ndarray] = None
+    serve_misses: Optional[np.ndarray] = None
+    serve_invalidations: Optional[np.ndarray] = None
 
     @property
     def n_records(self) -> int:
@@ -89,6 +99,12 @@ class TelemetryFrames:
                 row["halo_bytes"] = int(self.halo_bytes[t])
             if self.suppressed is not None:
                 row["suppressed"] = int(self.suppressed[t])
+            if self.serve_requests is not None:
+                row["serve_requests"] = int(self.serve_requests[t])
+                row["serve_hits"] = int(self.serve_hits[t])
+                row["serve_misses"] = int(self.serve_misses[t])
+                row["serve_invalidations"] = \
+                    int(self.serve_invalidations[t])
             rows.append(row)
         if self.overflow_per_shard is not None and rows:
             rows[-1]["overflow_per_shard"] = [

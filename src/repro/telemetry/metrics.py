@@ -135,6 +135,64 @@ def stream_drop_causes(stream) -> tuple:
     return link, churn, part
 
 
+def stream_dirty_chunks(stream, n: int, n_rec: int,
+                        record_every: int) -> np.ndarray:
+    """(n_rec, n) bool: which agents' models changed in each record chunk.
+
+    An agent is *dirty* in a chunk when any event of the chunk delivered a
+    message to it — ``deliver_ji`` marks waker ``i`` a receiver,
+    ``deliver_ij`` marks neighbor ``j`` — which is exactly the condition
+    under which the engines scatter a new theta row (their ``got`` mask:
+    the deliver flags already fold churned-out endpoints).  This is the
+    cache-invalidation signal of the personalization service
+    (DESIGN.md §16): a served model cached before the chunk stays valid
+    iff its agent is clean.  For joint graph-learning runs with pruning
+    the set is conservative (a delivery voided by a pruned receiver slot
+    still marks its target dirty) — over-invalidation is always safe.
+    """
+    def _chunked(x):
+        return np.asarray(x).reshape(n_rec, record_every, -1)
+
+    i, j = _chunked(stream.i), _chunked(stream.j)
+    d_ij, d_ji = _chunked(stream.deliver_ij), _chunked(stream.deliver_ji)
+    dirty = np.zeros((n_rec, n), bool)
+    rows = np.repeat(np.arange(n_rec), record_every * i.shape[-1])
+    # scatter only the delivering events (duplicate (row, agent) targets
+    # are fine when every written value is True)
+    for recv, d in ((i, d_ji), (j, d_ij)):
+        hit = d.ravel()
+        dirty[rows[hit], recv.ravel()[hit]] = True
+    return dirty
+
+
+def stream_staleness_chunks(stream, n: int, n_rec: int,
+                            record_every: int) -> np.ndarray:
+    """(n_rec, n) int32 per-agent staleness at the end of each record chunk.
+
+    The host-side replay of :func:`staleness_step` over a materialized
+    stream: after round t (0-based), an agent that last absorbed an
+    update in round ``t0`` counts ``t - t0`` rounds of staleness, an
+    agent that never received counts ``t + 1``.  Bit-identical to the
+    in-scan counters the telemetry path accumulates (the serve driver
+    uses this so served-staleness reporting needs no telemetry opt-in).
+    """
+    # within a chunk the *last* receiving round decides; replay per round
+    i = np.asarray(stream.i).reshape(n_rec, record_every, -1)
+    j = np.asarray(stream.j).reshape(n_rec, record_every, -1)
+    d_ij = np.asarray(stream.deliver_ij).reshape(n_rec, record_every, -1)
+    d_ji = np.asarray(stream.deliver_ji).reshape(n_rec, record_every, -1)
+    last = np.full(n, -1, np.int64)
+    out = np.empty((n_rec, n), np.int32)
+    for ci in range(n_rec):
+        for t in range(record_every):
+            g = ci * record_every + t
+            last[i[ci, t][d_ji[ci, t]]] = g
+            last[j[ci, t][d_ij[ci, t]]] = g
+        end = (ci + 1) * record_every - 1
+        out[ci] = np.where(last >= 0, end - last, end + 1).astype(np.int32)
+    return out
+
+
 def stream_chunk_totals(stream, n_rec: int, record_every: int) -> dict:
     """Cumulative per-record-chunk accounting of an EventStream.
 

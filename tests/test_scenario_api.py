@@ -1,0 +1,156 @@
+"""Unified scenario API (``ScenarioSpec`` / ``run_scenario``): bit-for-bit
+parity with the six undeprecated engine entry points across every
+algo x sharding cell, deprecation of the legacy wrappers, and spec
+validation."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.simulate as sim
+from repro.core.losses import pad_datasets, solitary_mean
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            random_geometric_topology, run_scenario)
+from repro.simulate import engines as engines_mod
+from repro.simulate import partition as partition_mod
+
+COND = NetworkConditions(drop_prob=0.15, stale_prob=0.2)
+RUN_KW = dict(rounds=40, batch=8, seed=3, record_every=10)
+JOINT_KW = dict(eta_graph=0.3, lam=1.0, graph_every=5, prune_eps=1e-3)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    n = 60
+    topo = random_geometric_topology(n, k=4, seed=0)
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal((int(rng.integers(1, 8)), 3))
+          for _ in range(n)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    sol = np.asarray(solitary_mean(data), np.float32)
+    c = np.full(n, 0.8, np.float32)
+    return topo, data, sol, c
+
+
+def _spec(problem, algo, sharded):
+    topo, data, sol, c = problem
+    kw = dict(algo=algo, topology=topo, conditions=COND, sharded=sharded,
+              **RUN_KW)
+    if algo == "cl":
+        return ScenarioSpec(data=data, mu=0.1, rho=1.0, theta_sol=sol, **kw)
+    kw.update(theta_sol=sol, c=c, alpha=0.9)
+    if algo == "joint":
+        kw.update(JOINT_KW)
+    return ScenarioSpec(**kw)
+
+
+def _legacy(problem, algo, sharded, runner):
+    """Run the undeprecated implementation for one parity cell."""
+    topo, data, sol, c = problem
+    if algo == "cl":
+        return runner(topo, data, 0.1, 1.0, COND, theta_sol=sol, **RUN_KW)
+    if algo == "joint":
+        return runner(topo, sol, c, 0.9, COND, **RUN_KW, **JOINT_KW)
+    return runner(topo, sol, c, 0.9, COND, **RUN_KW)
+
+
+CELLS = [
+    ("mp", False, engines_mod.run_mp_scenario),
+    ("cl", False, engines_mod.run_cl_scenario),
+    ("joint", False, engines_mod.run_joint_scenario),
+    ("mp", True, partition_mod.run_mp_scenario_sharded),
+    ("cl", True, partition_mod.run_cl_scenario_sharded),
+    ("joint", True, partition_mod.run_joint_scenario_sharded),
+]
+
+
+class TestSpecParity:
+    @pytest.mark.parametrize("algo,sharded,runner",
+                             CELLS, ids=lambda v: str(v))
+    def test_bit_for_bit(self, problem, algo, sharded, runner):
+        """Acceptance: run_scenario(spec) reproduces every legacy entry
+        point exactly (maxerr 0.0) — the spec path is pure dispatch."""
+        ref = _legacy(problem, algo, sharded, runner)
+        tr = run_scenario(_spec(problem, algo, sharded))
+        assert type(tr) is type(ref)
+        assert np.array_equal(tr.theta_hist, ref.theta_hist)
+        assert (tr.delivered, tr.dropped, tr.events, tr.invalid) \
+            == (ref.delivered, ref.dropped, ref.events, ref.invalid)
+        if algo == "joint":
+            assert np.array_equal(tr.final_w, ref.final_w)
+            assert np.array_equal(tr.final_live, ref.final_live)
+
+
+class TestLegacyWrappers:
+    @pytest.mark.parametrize("name", [
+        "run_mp_scenario", "run_cl_scenario", "run_joint_scenario",
+        "run_mp_scenario_sharded", "run_cl_scenario_sharded",
+        "run_joint_scenario_sharded"])
+    def test_package_name_is_deprecated_wrapper(self, problem, name):
+        """The package-level names warn and reproduce the spec path."""
+        algo = ("cl" if "cl" in name else
+                "joint" if "joint" in name else "mp")
+        sharded = name.endswith("_sharded")
+        wrapper = getattr(sim, name)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            tr = _legacy(problem, algo, sharded, wrapper)
+        assert any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+        ref = run_scenario(_spec(problem, algo, sharded))
+        assert np.array_equal(tr.theta_hist, ref.theta_hist)
+
+    def test_undeprecated_impls_do_not_warn(self, problem):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            _legacy(problem, "mp", False, engines_mod.run_mp_scenario)
+        assert not any(issubclass(w.category, DeprecationWarning)
+                       for w in caught)
+
+
+class TestSpecValidation:
+    def test_unknown_algo(self, problem):
+        topo = problem[0]
+        with pytest.raises(ValueError, match="algo"):
+            ScenarioSpec(algo="sgd", topology=topo, conditions=COND,
+                         rounds=10, batch=4)
+
+    def test_mp_rejects_stream_override(self, problem):
+        topo, data, sol, c = problem
+        fake = object()  # rejected before it is ever inspected
+        with pytest.raises(ValueError, match="inline"):
+            ScenarioSpec(algo="mp", topology=topo, conditions=COND,
+                         rounds=10, batch=4, theta_sol=sol, c=c,
+                         stream=fake)
+
+    def test_missing_payload(self, problem):
+        topo = problem[0]
+        spec = ScenarioSpec(algo="cl", topology=topo, conditions=COND,
+                            rounds=10, batch=4)
+        with pytest.raises(ValueError, match="requires ScenarioSpec.data"):
+            run_scenario(spec)
+
+    def test_run_scenario_sweep(self, problem):
+        """experiments.run_scenario_sweep: cartesian grid over spec fields,
+        each cell a plain run_scenario of the replaced spec."""
+        from repro.experiments import run_scenario_sweep
+        spec = _spec(problem, "mp", False)
+        res = run_scenario_sweep(spec, seed=[0, 1], alpha=[0.5, 0.9])
+        assert res.n_trials == 4
+        assert res.cells[0] == {"seed": 0, "alpha": 0.5}
+        direct = run_scenario(dataclasses.replace(spec, seed=0, alpha=0.5))
+        assert np.array_equal(res.traces[0].theta_hist, direct.theta_hist)
+        with pytest.raises(ValueError, match="no field"):
+            run_scenario_sweep(spec, not_a_field=[1])
+
+    def test_replace_sweeps_seeds(self, problem):
+        """Frozen spec + dataclasses.replace is the sweep idiom: different
+        seeds give different trajectories, same seed reproduces."""
+        spec = _spec(problem, "mp", False)
+        a = run_scenario(spec)
+        b = run_scenario(dataclasses.replace(spec, seed=spec.seed + 1))
+        a2 = run_scenario(spec)
+        assert not np.array_equal(a.theta_hist, b.theta_hist)
+        assert np.array_equal(a.theta_hist, a2.theta_hist)

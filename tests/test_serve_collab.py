@@ -1,0 +1,242 @@
+"""Gossip-backed personalization service (DESIGN.md §16): serving never
+perturbs the gossip trajectory, cache invalidation tracks the engines'
+model-update deliveries exactly, reads are never-torn snapshots, and the
+sharded store routes bit-for-bit like the single-device one."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (AgentStateStore, CollabServeEngine,
+                         ShardedAgentStateStore)
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            precompute_event_stream, precompute_serve_stream,
+                            random_geometric_topology, run_scenario,
+                            serve_chunk_requests)
+from repro.telemetry import TelemetryConfig
+from repro.telemetry.metrics import (stream_dirty_chunks,
+                                     stream_staleness_chunks)
+
+N, P_DIM = 80, 3
+COND = NetworkConditions(drop_prob=0.2, churn_rate=0.01)
+RUN_KW = dict(rounds=60, batch=8, seed=7, record_every=10)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    topo = random_geometric_topology(N, k=4, seed=0)
+    rng = np.random.default_rng(0)
+    theta_sol = rng.normal(size=(N, P_DIM)).astype(np.float32)
+    c = np.full(N, 0.8, np.float32)
+    return topo, theta_sol, c
+
+
+def _spec(problem, **over):
+    topo, theta_sol, c = problem
+    kw = dict(algo="mp", topology=topo, theta_sol=theta_sol, c=c,
+              alpha=0.9, conditions=COND, **RUN_KW)
+    kw.update(over)
+    return ScenarioSpec(**kw)
+
+
+@pytest.fixture(scope="module")
+def base_trace(problem):
+    return run_scenario(_spec(problem))
+
+
+@pytest.fixture(scope="module")
+def chunk_info(problem):
+    """The stream-derived per-chunk dirty sets and staleness counters."""
+    topo = problem[0]
+    n_rec, re_ = 6, 10
+    stream = precompute_event_stream(
+        topo.device_tables(), jnp.asarray(topo.partition_halves()),
+        COND, RUN_KW["batch"], RUN_KW["seed"], n_rec * re_)
+    dirty = stream_dirty_chunks(stream, N, n_rec, re_)
+    stal = stream_staleness_chunks(stream, N, n_rec, re_)
+    return dirty, stal
+
+
+class TestServingLeavesGossipUntouched:
+    def test_single_device_bit_for_bit(self, problem, base_trace):
+        """Acceptance: interleaving an inference-request stream leaves the
+        gossip trajectory bit-for-bit identical to the serve-free run."""
+        serve = precompute_serve_stream(N, RUN_KW["rounds"], rate=4.0,
+                                        seed=5)
+        tr = run_scenario(_spec(problem, serve=serve))
+        assert np.array_equal(tr.theta_hist, base_trace.theta_hist)
+        assert tr.serve is not None
+        assert tr.serve.requests == serve.n_requests
+        assert base_trace.serve is None
+
+    def test_sharded_bit_for_bit(self, problem, base_trace):
+        serve = precompute_serve_stream(N, RUN_KW["rounds"], rate=4.0,
+                                        seed=5)
+        tr = run_scenario(_spec(problem, sharded=True, serve=serve))
+        assert np.array_equal(tr.theta_hist, base_trace.theta_hist)
+        # and the sharded service serves identical staleness per request
+        tr1 = run_scenario(_spec(problem, serve=serve))
+        assert np.array_equal(tr.serve.served_staleness,
+                              tr1.serve.served_staleness)
+        assert tr.serve.requests == tr1.serve.requests
+
+
+class TestDirtySetMatchesEngineScatter:
+    def test_clean_rows_frozen_between_snapshots(self, base_trace,
+                                                 chunk_info):
+        """The invalidation signal is exactly the engines' update scatter:
+        between consecutive snapshots, rows outside a chunk's dirty set
+        are bit-identical — which is what makes a cache hit sound."""
+        dirty, _ = chunk_info
+        hist = base_trace.theta_hist
+        changed_somewhere = False
+        for ci in range(1, hist.shape[0]):
+            clean = ~dirty[ci]
+            assert np.array_equal(hist[ci][clean], hist[ci - 1][clean])
+            changed_somewhere |= not np.array_equal(hist[ci], hist[ci - 1])
+        assert changed_somewhere  # the test has teeth
+
+    def test_request_after_delivery_sees_post_update_model(self, base_trace,
+                                                           chunk_info):
+        """Invalidation semantics: a user served before and after a chunk
+        that rewrote its model must see the old row, then the new row."""
+        dirty, stal = chunk_info
+        hist = base_trace.theta_hist
+        # a user whose model the second chunk rewrote to a new value
+        cands = np.where(dirty[1]
+                         & ~(hist[1] == hist[0]).all(axis=-1))[0]
+        assert cands.size
+        u = int(cands[0])
+        store = AgentStateStore(N, P_DIM)
+        eng = CollabServeEngine(store, N, P_DIM, batch_size=4)
+        eng.commit(10, hist[0], stal[0], dirty[0])
+        pred0, _ = eng.serve([u])
+        eng.commit(20, hist[1], stal[1], dirty[1])   # invalidates u
+        pred1, _ = eng.serve([u])
+        assert np.isclose(pred0[0], hist[0, u].sum(), rtol=1e-5)
+        assert np.isclose(pred1[0], hist[1, u].sum(), rtol=1e-5)
+        assert pred0[0] != pred1[0]
+        assert eng.cache.invalidations >= 1
+
+    def test_cache_hit_staleness_is_exact(self, base_trace, chunk_info):
+        """A clean agent's cached row stays valid across commits, but its
+        staleness keeps aging — hits must serve the aged value
+        bit-identically to a fresh store read."""
+        dirty, stal = chunk_info
+        hist = base_trace.theta_hist
+        clean = np.where(~dirty[1])[0]
+        assert clean.size
+        users = clean[:8]
+        eng = CollabServeEngine(AgentStateStore(N, P_DIM), N, P_DIM)
+        eng.commit(10, hist[0], stal[0], dirty[0])
+        eng.serve(users)                              # all misses: cached
+        eng.commit(20, hist[1], stal[1], dirty[1])    # users stay clean
+        _, served = eng.serve(users)                  # all hits
+        assert eng.cache.hits == users.size
+        assert np.array_equal(served, stal[1][users])
+
+
+class TestSnapshotConsistency:
+    def test_same_round_race_never_tears(self, base_trace, chunk_info):
+        """A reader holding a snapshot sees all-old rows even if a commit
+        lands mid-read; the next read sees all-new rows — never a mix."""
+        _, stal = chunk_info
+        hist = base_trace.theta_hist
+        store = AgentStateStore(N, P_DIM)
+        store.commit(10, hist[0], stal[0])
+        held = store.snapshot()                 # reader grabs the tuple
+        store.commit(20, hist[1], stal[1])      # writer races past it
+        assert np.array_equal(held.theta, hist[0])
+        assert held.round == 10
+        after = store.read_rows(np.arange(N))
+        assert np.array_equal(after.theta, hist[1])
+        assert after.round == 20
+
+    def test_batched_read_is_one_snapshot(self, base_trace, chunk_info):
+        """read_rows gathers every row from a single committed tuple."""
+        _, stal = chunk_info
+        hist = base_trace.theta_hist
+        store = AgentStateStore(N, P_DIM)
+        store.commit(10, hist[0], stal[0])
+        got = store.read_rows([3, 3, 7])
+        assert np.array_equal(got.theta[0], got.theta[1])
+        assert np.array_equal(got.theta, hist[0][[3, 3, 7]])
+
+
+class TestShardedReadRouting:
+    def test_matches_single_device_bit_for_bit(self, base_trace,
+                                               chunk_info):
+        dirty, stal = chunk_info
+        hist = base_trace.theta_hist
+        rng = np.random.default_rng(1)
+        owner = rng.integers(0, 4, N).astype(np.int32)
+        local_pos = np.zeros(N, np.int32)
+        for q in range(4):
+            idx = np.where(owner == q)[0]
+            local_pos[idx] = np.arange(idx.size)
+        single = AgentStateStore(N, P_DIM)
+        sharded = ShardedAgentStateStore(owner, local_pos, P_DIM, 4)
+        for ci in range(hist.shape[0]):
+            single.commit((ci + 1) * 10, hist[ci], stal[ci])
+            sharded.commit((ci + 1) * 10, hist[ci], stal[ci])
+            users = rng.integers(0, N, 32)
+            a = single.read_rows(users)
+            b = sharded.read_rows(users)
+            assert np.array_equal(a.theta, b.theta)
+            assert np.array_equal(a.staleness, b.staleness)
+            assert a.round == b.round
+
+
+class TestTelemetryIntegration:
+    def test_staleness_replay_matches_in_scan_counters(self, problem,
+                                                       chunk_info):
+        """stream_staleness_chunks is the host replay of the in-scan
+        staleness counters — bit-identical, so served staleness needs no
+        telemetry opt-in."""
+        _, stal = chunk_info
+        tr = run_scenario(_spec(problem,
+                                telemetry=TelemetryConfig(enabled=True)))
+        assert np.array_equal(tr.telemetry.staleness, stal)
+
+    def test_serve_counters_reach_frames(self, problem):
+        serve = precompute_serve_stream(N, RUN_KW["rounds"], rate=4.0,
+                                        seed=5)
+        tr = run_scenario(_spec(problem, serve=serve,
+                                telemetry=TelemetryConfig(enabled=True)))
+        tel = tr.telemetry
+        assert tel.serve_requests is not None
+        assert tel.serve_requests[-1] == tr.serve.requests
+        assert tel.serve_hits[-1] == tr.serve.hits
+        assert tel.serve_misses[-1] == tr.serve.misses
+        assert tel.serve_invalidations[-1] == tr.serve.invalidations
+        row = tel.summarize()[-1]
+        assert row["serve_requests"] == tr.serve.requests
+        assert row["serve_hits"] + row["serve_misses"] \
+            == row["serve_requests"]
+        # counters are cumulative
+        assert (np.diff(tel.serve_requests) >= 0).all()
+
+
+class TestServeStream:
+    def test_chunk_assignment_boundaries(self):
+        serve = precompute_serve_stream(N, 40, rate=3.0, seed=0)
+        chunks = serve_chunk_requests(serve, 4, 10)
+        assert len(chunks) == 4
+        total = sum(u.size for u, _ in chunks)
+        assert total == serve.n_requests
+        for ci, (users, rounds) in enumerate(chunks):
+            assert (rounds >= ci * 10).all()
+            assert (rounds < (ci + 1) * 10).all()
+            assert (users >= 0).all() and (users < N).all()
+
+    def test_rng_independent_of_event_stream(self):
+        """The request stream draws from its own numpy generator — same
+        seed, different horizons never touch the gossip key schedule."""
+        a = precompute_serve_stream(N, 40, rate=3.0, seed=0)
+        b = precompute_serve_stream(N, 40, rate=3.0, seed=0)
+        assert np.array_equal(a.user, b.user)
+        assert np.array_equal(a.round, b.round)
+        c = precompute_serve_stream(N, 40, rate=3.0, seed=1)
+        assert not np.array_equal(a.user, c.user)

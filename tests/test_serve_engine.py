@@ -86,6 +86,38 @@ def test_eos_frees_slot_early_and_next_request_is_clean(model_and_params):
     assert not any(s.active for s in eng.slots)
 
 
+def test_exhausted_flag_on_tick_budget(model_and_params):
+    """A run that hits max_ticks with work in flight must say so: the
+    partial result dict used to be indistinguishable from a completed
+    drain — ``engine.exhausted`` now flags it."""
+    model, params = model_and_params
+    cfg = ServeConfig(batch_size=1, cache_len=64, max_new_tokens=8,
+                      temperature=0.0)
+    prompts = _prompts(2)
+
+    eng = Engine(model, params, cfg)
+    for p in prompts:
+        eng.submit(p)
+    partial = eng.run(max_ticks=3)   # < 8 ticks: request 0 still decoding
+    assert eng.exhausted
+    assert partial == {}             # nothing finished yet
+    assert any(s.active for s in eng.slots) or eng._pending
+
+    # resuming the same engine drains the backlog and clears the flag
+    results = eng.run()
+    assert not eng.exhausted
+    assert len(results) == len(prompts)
+    assert not any(s.active for s in eng.slots)
+    assert not eng._pending
+
+    # a clean full run never sets the flag
+    eng2 = Engine(model, params, cfg)
+    rid = eng2.submit(prompts[0])
+    out = eng2.run()
+    assert not eng2.exhausted
+    assert len(out[rid]) == cfg.max_new_tokens
+
+
 def test_eos_on_first_decoded_token(model_and_params):
     """EOS as the very first decode-step token: one-token completion after
     the prefill sample, slot still recycles for the queued request."""
