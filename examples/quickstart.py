@@ -68,9 +68,10 @@ def backends_and_sweeps():
     # auto backend: fused XLA on CPU/GPU, Pallas compiled on TPU
     auto = synchronous(g, sol, conf, alpha=0.9, steps=300)
     # explicit override: validate the Pallas kernel via interpret mode
+    # repro-lint: disable=RPL005  demo opts in to validate the kernel on CPU
+    pallas_cpu = ReproBackend.using(mix="pallas", interpret=True)
     kern = synchronous(g, sol, conf, alpha=0.9, steps=300,
-                       backend=ReproBackend.using(mix="pallas",
-                                                  interpret=True))
+                       backend=pallas_cpu)
     print(f" |auto - pallas(interpret)| = "
           f"{float(np.abs(np.asarray(auto) - np.asarray(kern)).max()):.2e}")
 

@@ -145,11 +145,12 @@ def _primal_quadratic(state: ADMMState, l, nbr_idx, nbr_w, deg_count, D,
         w, live, state.Z_own[l][idx], state.Z_nbr[l][idx],
         state.L_own[l][idx], state.L_nbr[l][idx], D[l], m_l, sx, mu, rho,
         backend)
-    # pads scatter theta_l onto position l, which is overwritten right after
+    # scatter: last-write-wins — pad slots collide on row l and are
+    # overwritten by the unconditional .at[l].set immediately below
     row = state.T[l].at[jnp.where(live, idx, l)].set(
         jnp.where(live[:, None], theta_js, theta_l[None]))
-    row = row.at[l].set(theta_l)
-    return state.T.at[l].set(row)
+    row = row.at[l].set(theta_l)  # scatter: unique target (scalar index l)
+    return state.T.at[l].set(row)  # scatter: unique target (scalar index l)
 
 
 def _primal_subgrad(state: ADMMState, l, W, D, mask, mu, rho,
@@ -179,7 +180,7 @@ def _primal_subgrad(state: ADMMState, l, W, D, mask, mu, rho,
     # keep non-live entries untouched
     live = mask[l][:, None] | (jnp.arange(row.shape[0]) == l)[:, None]
     row = jnp.where(live, row, state.T[l])
-    return state.T.at[l].set(row)
+    return state.T.at[l].set(row)  # scatter: unique target (scalar index l)
 
 
 # ---------------------------------------------------------------------------
@@ -194,8 +195,10 @@ def _edge_zl_update(state: ADMMState, i, j, rho) -> ADMMState:
     z_i = 0.5 * ((L_own[i, j] + L_nbr[j, i]) / rho + T[i, i] + T[j, i])
     # Z for model j on edge e: owned by j as Z_own[j,i], by i as Z_nbr[i,j]
     z_j = 0.5 * ((L_own[j, i] + L_nbr[i, j]) / rho + T[j, j] + T[i, j])
+    # scatter: unique targets — (i, j) and (j, i) are distinct cells of one
+    # undirected edge i != j
     Z_own = Z_own.at[i, j].set(z_i).at[j, i].set(z_j)
-    Z_nbr = Z_nbr.at[i, j].set(z_j).at[j, i].set(z_i)
+    Z_nbr = Z_nbr.at[i, j].set(z_j).at[j, i].set(z_i)  # scatter: unique targets
     # dual updates
     L_own = L_own.at[i, j].add(rho * (T[i, i] - z_i))
     L_own = L_own.at[j, i].add(rho * (T[j, j] - z_j))

@@ -209,7 +209,7 @@ def knn_graph_from_similarity(sim: np.ndarray, k: int) -> Graph:
     W = np.zeros((n, n))
     idx = np.argsort(-s, axis=1)[:, :k]
     rows = np.repeat(np.arange(n), k)
-    W[rows, idx.ravel()] = 1.0
+    W[rows, idx.ravel()] = 1.0  # scatter: idempotent (every value is 1.0)
     W = np.maximum(W, W.T)
     return Graph(W)
 
@@ -239,8 +239,8 @@ def ring_graph(n: int, weight: float = 1.0) -> Graph:
     """Ring over n agents — default small-agent-count graph at TPU scale."""
     W = np.zeros((n, n))
     for i in range(n):
-        W[i, (i + 1) % n] = weight
-        W[(i + 1) % n, i] = weight
+        W[i, (i + 1) % n] = weight  # scatter: unique target per iteration
+        W[(i + 1) % n, i] = weight  # scatter: unique target per iteration
     return Graph(W)
 
 

@@ -137,6 +137,7 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
         nbrs = T[l][nbr_idx[l]]                   # (k_max, p) gathered slots
         agg = neighbor_aggregate(nbr_p[l], nbrs, backend)  # (p,)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
+        # scatter: unique target — single scalar (tgt, l) cell
         return T.at[tgt, l].set(new, mode="drop")
 
     def step(carry, key):
@@ -151,8 +152,8 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
         ti = jnp.where(valid, i, n)
         tj = jnp.where(valid, j, n)
         # communication step: exchange current self-models
-        T = T.at[ti, j].set(T[j, j], mode="drop")
-        T = T.at[tj, i].set(T[i, i], mode="drop")
+        T = T.at[ti, j].set(T[j, j], mode="drop")  # scatter: unique target
+        T = T.at[tj, i].set(T[i, i], mode="drop")  # scatter: unique target
         # update step for both endpoints
         T = local_update(T, i, ti)
         T = local_update(T, j, tj)
@@ -163,8 +164,7 @@ def _async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, theta_sol, c, alpha,
         T, hist = jax.lax.scan(step, T0, keys)
         return T, hist
 
-    # chunked recording; callers normalize (steps, record_every) through
-    # core.sparse.record_chunks, so the division here is exact
+    # repro-lint: disable=RPL007  callers normalize via core.sparse.record_chunks
     n_rec = steps // record_every
 
     def outer(T, key):

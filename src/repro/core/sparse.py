@@ -137,9 +137,10 @@ def tables_from_adjacency(nbr_lists: Sequence[np.ndarray],
     order = np.lexsort((src, dst))
     block_start = np.concatenate([[0], np.cumsum(deg_count)[:-1]])
     rank = np.empty(len(src), np.int64)
+    # scatter: unique targets (order is a permutation)
     rank[order] = np.arange(len(src)) - block_start[dst[order]]
     rev = np.zeros((n, k_max), np.int32)
-    rev[src, slot] = rank
+    rev[src, slot] = rank  # scatter: unique targets
     for i in range(n):                   # pads copy the last real slot's rev
         rev[i, deg_count[i]:] = rev[i, deg_count[i] - 1]
 

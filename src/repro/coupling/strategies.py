@@ -191,7 +191,8 @@ def consensus_mean_tree(params, cfg: CouplingConfig):
     """Uniform average over the agent axis (Eq. 2 baseline)."""
     def mix(leaf):
         return jnp.broadcast_to(
-            jnp.mean(leaf.astype(cfg.mix_dtype), axis=0, keepdims=True),
+            jnp.mean(leaf.astype(cfg.mix_dtype), axis=0, keepdims=True,
+                     dtype=jnp.float32),
             leaf.shape).astype(leaf.dtype)
     return _per_leaf(mix, params)
 
@@ -206,11 +207,12 @@ def laplacian_pull_tree(params, state: CouplingState, cfg: CouplingConfig,
     with the local-loss optimizer step this is decentralized SGD on Q_CL.
     """
     W = state.W.astype(cfg.mix_dtype)
-    deg = W.sum(axis=1)
+    deg = W.sum(axis=1, dtype=jnp.float32)
 
     def mix(leaf):
         lf = leaf.astype(cfg.mix_dtype)
-        nbr = jnp.einsum("ab,b...->a...", W, lf)
+        nbr = jnp.einsum("ab,b...->a...", W, lf,
+                         preferred_element_type=jnp.float32)
         grad = 2.0 * (deg.reshape((-1,) + (1,) * (leaf.ndim - 1)) * lf - nbr)
         return (lf - lr * grad).astype(leaf.dtype)
 

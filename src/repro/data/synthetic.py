@@ -97,7 +97,7 @@ def linear_classification_problem(n: int = 100, p: int = 50,
             m = m_per_agent[i]
             x = rng.uniform(-1, 1, (m, p))
             y = np.sign(x @ targets[i])
-            y[y == 0] = 1.0
+            y[y == 0] = 1.0  # scatter: unique targets (boolean mask)
             flip = rng.uniform(size=m) < label_noise
             y = np.where(flip, -y, y)
             xs.append(x)

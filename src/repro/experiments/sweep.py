@@ -439,6 +439,7 @@ def _admm_primal_all(T, Z_own, Z_nbr, L_own, L_nbr, W, mask, D, m, sx,
         primal(w, live, zo, zn, lo, ln, D_l, m_l, sx_l, mu, rho))(
             W, mask, Z_own, Z_nbr, L_own, L_nbr, D, m, sx)
     T = jnp.where(mask[:, :, None], theta_js, T)
+    # scatter: unique targets (diagonal cells)
     return T.at[jnp.arange(n), jnp.arange(n)].set(theta_l)
 
 

@@ -163,17 +163,20 @@ def gossip_round_step(theta, Ke, got_ever, msg, tgt_row, enc, k_old,
     enc_s = enc[order]
     is_last = jnp.concatenate(
         [enc_s[1:] != enc_s[:-1], jnp.ones((1,), bool)])
+    # scatter: unique targets (order is a permutation of 0..m-1)
     keep = jnp.zeros((m,), bool).at[order].set(is_last) & (tgt_row < n)
     payload = jnp.concatenate([msg, ids.astype(Ke.dtype)[:, None]], axis=1)
+    # scatter: winner dedup upstream — keep selects exactly one event per enc
     Ke = Ke.at[jnp.where(keep, enc, nk)].set(payload, mode="drop")
     enc_c = jnp.minimum(enc, nk - 1)
     row_c = jnp.minimum(tgt_row, n - 1)
     first = keep & ~got_ever[row_c]
     frow = jnp.where(first, tgt_row, n)
+    # scatter: idempotent — every write to row r is theta_base[r]
     theta = theta.at[frow].set(theta_base[row_c], mode="drop")
     delta = jnp.where(keep, a_w[enc_c], 0.0)[:, None] * (msg - k_old)
     theta = theta.at[jnp.where(keep, tgt_row, n)].add(delta, mode="drop")
-    got_ever = got_ever.at[frow].set(True, mode="drop")
+    got_ever = got_ever.at[frow].set(True, mode="drop")  # scatter: idempotent
     return theta, Ke, got_ever, keep
 
 

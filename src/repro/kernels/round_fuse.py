@@ -184,8 +184,11 @@ def round_step_xla(theta, Ke, got_ever, msg, tgt_row, enc, k_old,
     half = m // 2
     ids = jnp.arange(m, dtype=Ke.dtype)               # exact in f32: m < 2^24
     payload = jnp.concatenate([msg, ids[:, None]], axis=1)
+    # scatter: winner dedup downstream — the id column records which
+    # duplicate landed; `keep` (below) reads it back, so any scatter order
+    # yields a consistent winner
     Ke = Ke.at[enc[:half]].set(payload[:half], mode="drop")
-    Ke = Ke.at[enc[half:]].set(payload[half:], mode="drop")
+    Ke = Ke.at[enc[half:]].set(payload[half:], mode="drop")  # scatter: winner dedup
     enc_c = jnp.minimum(enc, nk - 1)
     keep = (tgt_row < n) & (Ke[enc_c, p] == ids)
     row_c = jnp.minimum(tgt_row, n - 1)
@@ -195,10 +198,14 @@ def round_step_xla(theta, Ke, got_ever, msg, tgt_row, enc, k_old,
     def _warm(got_ever):
         first = keep & ~got_ever[row_c]
         frow = jnp.where(first, tgt_row, n)
+        # scatter: winner dedup downstream — first_w reads back which
+        # duplicate first-receipt event landed in fid
         fid = jnp.zeros((n,), Ke.dtype).at[frow].set(ids, mode="drop")
         first_w = first & (fid[row_c] == ids)
-        base_corr = jnp.where(first_w, 1.0, 0.0)[:, None] \
-            * (theta_base[row_c] - theta[row_c])
+        base_corr = jnp.where(first_w, 1.0, 0.0)[:, None] * (
+            theta_base[row_c] - theta[row_c]
+        )
+        # scatter: idempotent (every value is True)
         return delta + base_corr, got_ever.at[frow].set(True, mode="drop")
 
     def _steady(got_ever):
@@ -400,10 +407,12 @@ def cl_edge_step(theta, K, Z_own, Z_nbr, L_own, L_nbr,
     lo_new = l_own + rho * (theta_own - z_own)
     ln_new = l_nbr + rho * (k_own - z_nbr)
     rowu = jnp.where(got, upd, n)
+    # scatter: unique targets — each event side writes its own (agent, slot)
+    # cell; a slot belongs to one edge and each edge fires once per round
     Z_own = Z_own.at[rowu, own_s].set(z_own, mode="drop")
-    Z_nbr = Z_nbr.at[rowu, own_s].set(z_nbr, mode="drop")
-    L_own = L_own.at[rowu, own_s].set(lo_new, mode="drop")
-    L_nbr = L_nbr.at[rowu, own_s].set(ln_new, mode="drop")
+    Z_nbr = Z_nbr.at[rowu, own_s].set(z_nbr, mode="drop")  # scatter: unique targets
+    L_own = L_own.at[rowu, own_s].set(lo_new, mode="drop")  # scatter: unique targets
+    L_nbr = L_nbr.at[rowu, own_s].set(ln_new, mode="drop")  # scatter: unique targets
     return Z_own, Z_nbr, L_own, L_nbr
 
 

@@ -37,7 +37,7 @@ def _kernel(idx_ref, w_ref, b_ref, sol_ref, table_ref, out_ref, *, k: int):
         for s in range(k):                       # k_max static, unrolled
             nbr = table_ref[pl.ds(idx_ref[r, s], 1), :].astype(jnp.float32)
             acc = acc + w_ref[r, s] * nbr
-        out_ref[pl.ds(r, 1), :] = acc.astype(out_ref.dtype)
+        out_ref[pl.ds(r, 1), :] = acc.astype(out_ref.dtype)  # scatter: unique targets
         return 0
 
     jax.lax.fori_loop(0, bn, row, 0)

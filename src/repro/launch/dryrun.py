@@ -354,6 +354,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, schedule: str,
     for k, v in ex.items():
         if k.startswith("coll/"):
             _, kind, field = k.split("/")
+            # repro-lint: disable=RPL002  dict write, not an array scatter
             coll.setdefault(kind, {})[field] = v
     rec["collectives"] = coll
     A = n_agents_of(mesh)

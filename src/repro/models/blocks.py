@@ -100,6 +100,9 @@ def moe_apply(cfg: ModelConfig, p: Dict, x):
         # gather tokens from the replicated activation: shard-local dispatch.
         src = jnp.full((E * C + 1,), T, jnp.int32)  # T = "no token" sentinel
         write_slot = jnp.where(keep, slot, E * C)   # dropped -> spill slot
+        # scatter: unique targets — kept (token, choice) pairs own distinct
+        # capacity slots; all dropped pairs collide only on the spill slot
+        # E*C, which the [:E*C] slice below discards
         src = src.at[write_slot.reshape(-1)].set(jnp.arange(T * k) // k)
         src = src[:E * C]
         xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
@@ -200,8 +203,8 @@ def attn_apply_seq(cfg: ModelConfig, kind: str, p: Dict, x, ctx: Ctx):
         # token at absolute position p lives in slot p % Sc (ring semantics;
         # identity when Sc >= S). Keep the last `take` tokens.
         ps = jnp.arange(S - take, S)
-        kc = kc.at[:, ps % Sc].set(xk[:, S - take:])
-        vc = vc.at[:, ps % Sc].set(xv[:, S - take:])
+        kc = kc.at[:, ps % Sc].set(xk[:, S - take:])  # scatter: unique targets
+        vc = vc.at[:, ps % Sc].set(xv[:, S - take:])  # scatter: unique targets
         cache = {"k": kc, "v": vc}
     return y, cache
 
@@ -229,8 +232,8 @@ def attn_apply_dec(cfg: ModelConfig, kind: str, p: Dict, x, cache: Dict,
     else:
         slot = jnp.mod(pos, Sc) if ctx.ring else pos
         slot = jnp.broadcast_to(slot, (B,))
-        kc = cache["k"].at[jnp.arange(B), slot].set(xk[:, 0])
-        vc = cache["v"].at[jnp.arange(B), slot].set(xv[:, 0])
+        kc = cache["k"].at[jnp.arange(B), slot].set(xk[:, 0])  # scatter: unique targets
+        vc = cache["v"].at[jnp.arange(B), slot].set(xv[:, 0])  # scatter: unique targets
     o = decode_attention(xq[:, 0], kc, vc, pos, window=window, ring=ctx.ring)
     y = o.reshape(B, cfg.n_heads * cfg.hd) @ p["wo"]
     return y, {"k": kc, "v": vc}

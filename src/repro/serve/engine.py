@@ -30,6 +30,8 @@ from repro.serve.store import MixedModelCache, ServeReport
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Decode-serving knobs: batch geometry, sampling, cache layout."""
+
     batch_size: int = 4
     cache_len: int = 256
     max_new_tokens: int = 64
@@ -40,6 +42,7 @@ class ServeConfig:
 
 
 def sample_token(logits, key, temperature: float):
+    """Greedy argmax at temperature 0, else categorical sampling."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
@@ -99,12 +102,14 @@ class Engine:
     # -- public API ----------------------------------------------------------
 
     def submit(self, prompt_tokens) -> int:
+        """Queue a prompt; returns the request id."""
         rid = self._next_id
         self._next_id += 1
         self._pending.append((rid, np.asarray(prompt_tokens, np.int32)))
         return rid
 
     def result(self, rid: int) -> Optional[List[int]]:
+        """Decoded tokens for a finished request id (None if pending)."""
         return self._results.get(rid)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:

@@ -132,8 +132,8 @@ class ShardedAgentStateStore:
             mask = self.owner == q
             blk = np.zeros((self.shard_size, self.p), np.float32)
             stl = np.zeros(self.shard_size, np.int32)
-            blk[self.local_pos[mask]] = theta[mask]
-            stl[self.local_pos[mask]] = staleness[mask]
+            blk[self.local_pos[mask]] = theta[mask]  # scatter: unique targets
+            stl[self.local_pos[mask]] = staleness[mask]  # scatter: unique targets
             self._stores[q].commit(round_, blk, stl)
 
     def snapshot_round(self) -> int:
@@ -150,8 +150,8 @@ class ShardedAgentStateStore:
         for q in np.unique(shard):
             sel = shard == q
             snap = self._stores[q].snapshot()
-            theta[sel] = snap.theta[pos[sel]]
-            stale[sel] = snap.staleness[pos[sel]]
+            theta[sel] = snap.theta[pos[sel]]  # scatter: unique targets (boolean mask)
+            stale[sel] = snap.staleness[pos[sel]]  # scatter: unique targets
             round_ = max(round_, snap.round)
         return CommittedState(round_, theta, stale)
 
@@ -212,10 +212,12 @@ class MixedModelCache:
     def fill(self, users, theta_rows, staleness_rows, round_: int) -> None:
         """Insert freshly-read rows for the given users (marks them valid)."""
         users = np.asarray(users, np.int64)
+        # scatter: idempotent — duplicate users in one batch carry identical
+        # rows read from the same committed snapshot
         self.theta[users] = theta_rows
         self.last_update[users] = int(round_) - np.asarray(
-            staleness_rows, np.int64)
-        self.valid[users] = True
+            staleness_rows, np.int64)  # scatter: idempotent
+        self.valid[users] = True  # scatter: idempotent (every value is True)
 
 
 @dataclasses.dataclass

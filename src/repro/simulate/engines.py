@@ -83,7 +83,7 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
     def local_update(theta, K, l, tgt):
         agg = neighbor_aggregate(nbr_p[l], K[l], backend)
         new = (alpha * agg + abar * c[l] * theta_sol[l]) / (alpha + abar * c[l])
-        return theta.at[tgt].set(new, mode="drop")
+        return theta.at[tgt].set(new, mode="drop")  # scatter: unique targets
 
     def step(carry, key):
         theta, K = carry
@@ -96,8 +96,8 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
         ti = jnp.where(valid, i, n)
         tj = jnp.where(valid, j, n)
         # communication step: exchange current self-models
-        K = K.at[ti, s].set(theta[j], mode="drop")
-        K = K.at[tj, r].set(theta[i], mode="drop")
+        K = K.at[ti, s].set(theta[j], mode="drop")  # scatter: unique targets
+        K = K.at[tj, r].set(theta[i], mode="drop")  # scatter: unique targets
         # update step for both endpoints
         theta = local_update(theta, K, i, ti)
         theta = local_update(theta, K, j, tj)
@@ -108,8 +108,7 @@ def _sparse_async_scan(nbr_idx, nbr_p, slot_cdf, deg_count, rev_slot,
         (theta, K), hist = jax.lax.scan(step, (theta0, K0), keys)
         return theta, K, hist
 
-    # chunked recording; callers normalize (steps, record_every) through
-    # core.sparse.record_chunks, so the division here is exact
+    # repro-lint: disable=RPL007  callers normalize via core.sparse.record_chunks
     n_rec = steps // record_every
 
     def outer(carry, key):
@@ -336,8 +335,11 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
             # undelivered messages scatter out of bounds -> dropped by XLA
             row_j = jnp.where(ev.deliver_ij, ev.j, n)
             row_i = jnp.where(ev.deliver_ji, ev.i, n)
+            # scatter: last-write-wins — a repeated edge in one batch lands
+            # the batch-order winner; kernels/round_fuse.round_step dedups
+            # to the same winner so both paths agree bit-for-bit
             K = K.at[row_j, ev.r].set(msg_i, mode="drop")
-            K = K.at[row_i, ev.s].set(msg_j, mode="drop")
+            K = K.at[row_i, ev.s].set(msg_j, mode="drop")  # scatter: last-write-wins
 
             # --- update: endpoints that received a message recompute
             # Eq. (6) via the shared per-shard step
@@ -345,6 +347,8 @@ def _scenario_scan(tabs, part_half, rates, theta_sol, c, carry0, keys, ts, *,
             # partitioned engine applies to local rows)
             new = batched_model_update(tabs.nbr_p[upd], K[upd], c[upd],
                                        theta_sol[upd], alpha)
+            # scatter: idempotent — duplicate agents in upd recompute the
+            # same row from the same post-communication K
             theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
 
         delivered = delivered + jnp.sum(ev.deliver_ij) + jnp.sum(ev.deliver_ji)
@@ -527,8 +531,9 @@ def _sparse_primal_quadratic(st: SparseADMMState, l, nbr_w, deg_count, D,
     theta_l, theta_js = quadratic_primal_core(
         w, live, st.Z_own[l], st.Z_nbr[l], st.L_own[l], st.L_nbr[l],
         D[l], m_l, sx, mu, rho, backend)
+    # scatter: unique targets (scalar index l)
     K = st.K.at[l].set(jnp.where(live[:, None], theta_js, st.K[l]))
-    theta = st.theta.at[l].set(theta_l)
+    theta = st.theta.at[l].set(theta_l)  # scatter: unique target (scalar index l)
     return SparseADMMState(theta, K, st.Z_own, st.Z_nbr, st.L_own, st.L_nbr)
 
 
@@ -539,8 +544,10 @@ def _sparse_edge_zl(st: SparseADMMState, i, s, j, r, rho) -> SparseADMMState:
                  + st.theta[i] + st.K[j, r])
     z_j = 0.5 * ((st.L_own[j, r] + st.L_nbr[i, s]) / rho
                  + st.theta[j] + st.K[i, s])
+    # scatter: unique targets — (i, s) and (j, r) are the two directed
+    # slots of one edge, distinct cells by construction
     Z_own = st.Z_own.at[i, s].set(z_i).at[j, r].set(z_j)
-    Z_nbr = st.Z_nbr.at[i, s].set(z_j).at[j, r].set(z_i)
+    Z_nbr = st.Z_nbr.at[i, s].set(z_j).at[j, r].set(z_i)  # scatter: unique targets
     L_own = st.L_own.at[i, s].add(rho * (st.theta[i] - z_i))
     L_own = L_own.at[j, r].add(rho * (st.theta[j] - z_j))
     L_nbr = st.L_nbr.at[i, s].add(rho * (st.K[i, s] - z_j))
@@ -550,6 +557,8 @@ def _sparse_edge_zl(st: SparseADMMState, i, s, j, r, rho) -> SparseADMMState:
 
 @dataclasses.dataclass
 class SparseCLTrace:
+    """Recorded sparse CL-ADMM trajectory (models, comms, final state)."""
+
     theta_hist: np.ndarray
     comms_hist: np.ndarray
     final: SparseADMMState
@@ -670,8 +679,10 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
             mu, rho, backend)
         new_K = jnp.where(live_rows[:, :, None], theta_js, st.K[upd])
         rowu = jnp.where(got, upd, n)
+        # scatter: idempotent — duplicate agents in upd derive identical
+        # rows from the same round-start Z/L state
         theta = st.theta.at[rowu].set(new_theta, mode="drop")
-        K = st.K.at[rowu].set(new_K, mode="drop")
+        K = st.K.at[rowu].set(new_K, mode="drop")  # scatter: idempotent
 
         # --- publish: post-primal models, round-start duals
         pub = (theta, K, st.L_own, st.L_nbr)
@@ -860,14 +871,18 @@ def _joint_scenario_scan(w0, live0, theta0, K0, c, theta_sol, ev, ts, *,
             ok_ij, ok_ji = ev_t.deliver_ij, ev_t.deliver_ji
         row_j = jnp.where(ok_ij, ev_t.j, n)
         row_i = jnp.where(ok_ji, ev_t.i, n)
+        # scatter: last-write-wins — a repeated edge in one batch lands the
+        # batch-order winner (same policy as the scenario engine above)
         K = K.at[row_j, ev_t.r].set(msg_i, mode="drop")
-        K = K.at[row_i, ev_t.s].set(msg_j, mode="drop")
+        K = K.at[row_i, ev_t.s].set(msg_j, mode="drop")  # scatter: last-write-wins
 
         # --- update: Eq. (6) under the current learned weights
         upd = jnp.concatenate([ev_t.i, ev_t.j])
         got = jnp.concatenate([ok_ji, ok_ij])
         new = batched_model_update(w[upd], K[upd], c[upd], theta_sol[upd],
                                    alpha, backend)
+        # scatter: idempotent — duplicate agents in upd recompute the same
+        # row from the same post-communication K
         theta = theta.at[jnp.where(got, upd, n)].set(new, mode="drop")
 
         # --- graph step (compiled out entirely at rate 0)

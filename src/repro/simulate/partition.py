@@ -128,8 +128,8 @@ def greedy_partition(topo: SparseTopology, n_shards: int, seed: int = 0,
         else:                       # no placed neighbor: least-loaded shard
             score = np.where(open_, -sizes.astype(np.float64), -np.inf)
         s = int(np.argmax(score))
-        assign[v] = s
-        sizes[s] += 1
+        assign[v] = s  # scatter: unique target (scalar vertex id)
+        sizes[s] += 1  # scatter: unique target (scalar shard id)
     # refinement tolerates ~6% imbalance so moves stay possible when every
     # shard sits exactly at cap (the LDG pass always ends there)
     refine_cap = cap + max(1, cap // 16)
@@ -141,9 +141,9 @@ def greedy_partition(topo: SparseTopology, n_shards: int, seed: int = 0,
             cur = assign[v]
             t = int(np.argmax(cnt))
             if t != cur and cnt[t] > cnt[cur] and sizes[t] < refine_cap:
-                assign[v] = t
-                sizes[t] += 1
-                sizes[cur] -= 1
+                assign[v] = t  # scatter: unique target (scalar vertex id)
+                sizes[t] += 1  # scatter: unique target (scalar shard id)
+                sizes[cur] -= 1  # scatter: unique target (scalar shard id)
                 moved = True
         if not moved:
             break
@@ -208,10 +208,12 @@ class GraphPartition:
 
     @property
     def halo_size(self) -> int:     # H (max over shards, 0 if no cut)
+        """Per-shard halo slot count H (max over shards; 0 if no cut)."""
         return self.halo_src_shard.shape[1]
 
     @property
     def boundary_size(self) -> int:  # B
+        """Per-shard boundary slot count B (rows other shards read)."""
         return self.bnd_pos.shape[1]
 
     @classmethod
@@ -241,8 +243,9 @@ class GraphPartition:
         local_pos = np.empty(n, np.int32)
         starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         local_pos[by_shard] = (np.arange(n) - starts[owner[by_shard]]) \
-            .astype(np.int32)
+            .astype(np.int32)  # scatter: unique targets (by_shard is a permutation)
         local_ids = np.full((P_, m), -1, np.int32)
+        # scatter: unique targets ((owner, local_pos) pairs are distinct)
         local_ids[owner, local_pos] = np.arange(n, dtype=np.int32)
         perm_slot = owner.astype(np.int64) * m + local_pos
 
@@ -255,7 +258,7 @@ class GraphPartition:
         # live=None candidate tables this is exactly "local agents with any
         # cross edge".
         is_bnd = np.zeros(n, bool)
-        is_bnd[dst[cross]] = True
+        is_bnd[dst[cross]] = True  # scatter: idempotent (every value is True)
         bnd_lists = [np.where(is_bnd & (owner == q))[0] for q in range(P_)]
         B = max((len(b) for b in bnd_lists), default=0)
         bnd_pos = np.zeros((P_, B), np.int32)
@@ -271,10 +274,11 @@ class GraphPartition:
         halo_src_shard = np.zeros((P_, H), np.int32)
         halo_src_pos = np.zeros((P_, H), np.int32)
         fetch = np.full((P_, n), m + H, np.int32)
-        fetch[owner, np.arange(n)] = local_pos
+        fetch[owner, np.arange(n)] = local_pos  # scatter: unique targets
         for q, hl in enumerate(halo_lists):
             halo_src_shard[q, :len(hl)] = owner[hl]
             halo_src_pos[q, :len(hl)] = bnd_rank[hl]
+            # scatter: unique targets (hl lists distinct halo agents)
             fetch[q, hl] = m + np.arange(len(hl), dtype=np.int32)
 
         return cls(n=n, n_shards=P_, shard_size=m, owner=owner,
@@ -289,7 +293,7 @@ class GraphPartition:
         x = np.asarray(x)
         ids = self.local_ids.reshape(-1)
         out = x[np.maximum(ids, 0)]
-        out[ids < 0] = 0
+        out[ids < 0] = 0  # scatter: unique targets (boolean mask)
         return out
 
     def unshard_rows(self, y):
@@ -473,8 +477,10 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
             msg_j = jnp.where(st_ji[:, None], ext_prev[f_j], ext[f_j])
             row_j = jnp.where(d_ij & (f_j < m), f_j, m)
             row_i = jnp.where(d_ji & (f_i < m), f_i, m)
+            # scatter: last-write-wins — a repeated edge in one batch lands
+            # the batch-order winner (mirrors the dense scenario engine)
             K = K.at[row_j, r].set(msg_i, mode="drop")
-            K = K.at[row_i, s].set(msg_j, mode="drop")
+            K = K.at[row_i, s].set(msg_j, mode="drop")  # scatter: last-write-wins
 
             # --- update: compact local endpoints, shared Eq. (6) step
             f_u = jnp.concatenate([f_i, f_j])
@@ -484,6 +490,8 @@ def _sharded_scenario_scan(mesh, stream, theta0, K0, nbr_p, c, sol,
             lu_c = jnp.minimum(lu, m - 1)
             new = batched_model_update(nbr_p_blk[lu_c], K[lu_c], c_blk[lu_c],
                                        sol_blk[lu_c], alpha)
+            # scatter: idempotent — duplicate rows in lu recompute the same
+            # value from the same post-communication K
             theta = theta.at[jnp.where(lu < m, lu, m)].set(new, mode="drop")
             overflow += jnp.maximum(jnp.sum(got) - U, 0)
             if tel:
@@ -681,8 +689,10 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
                 Ln[lu_c], D_blk[lu_c], mc_blk[lu_c], sx_blk[lu_c], mu, rho)
             new_K = jnp.where(live_blk[lu_c][:, :, None], theta_js, K[lu_c])
             rowp = jnp.where(lu < m, lu, m)
+            # scatter: idempotent — duplicate rows in lu derive identical
+            # values from the same round-start Z/L state
             theta = theta.at[rowp].set(new_theta, mode="drop")
-            K = K.at[rowp].set(new_K, mode="drop")
+            K = K.at[rowp].set(new_K, mode="drop")  # scatter: idempotent
             overflow += jnp.maximum(jnp.sum(got) - U, 0)
 
             # --- publish + halo exchange (post-primal models, round-start
@@ -706,10 +716,13 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
                 theta[own_c], K[own_c, own_s], Lo[own_c, own_s],
                 Ln[own_c, own_s], th_pay, k_pay, lo_pay, ln_pay, rho)
             rowe = jnp.where(got, f_u, m)
+            # scatter: unique targets — each event side writes its own
+            # (row, slot) cell; a slot belongs to one edge and each edge
+            # fires once per round
             Zo = Zo.at[rowe, own_s].set(z_own, mode="drop")
-            Zn = Zn.at[rowe, own_s].set(z_nbr, mode="drop")
-            Lo = Lo.at[rowe, own_s].set(lo_new, mode="drop")
-            Ln = Ln.at[rowe, own_s].set(ln_new, mode="drop")
+            Zn = Zn.at[rowe, own_s].set(z_nbr, mode="drop")  # scatter: unique targets
+            Lo = Lo.at[rowe, own_s].set(lo_new, mode="drop")  # scatter: unique targets
+            Ln = Ln.at[rowe, own_s].set(ln_new, mode="drop")  # scatter: unique targets
             if tel:
                 stale, updates = tstate
                 stale = tmetrics.staleness_step(stale, got, f_u, m)
@@ -977,8 +990,10 @@ def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
             msg_j = jnp.where(st_ji[:, None], ext_prev[f_j], ext[f_j])
             row_j = jnp.where(ok_ij & (f_j < m), f_j, m)
             row_i = jnp.where(ok_ji & (f_i < m), f_i, m)
+            # scatter: last-write-wins — a repeated edge in one batch lands
+            # the batch-order winner (mirrors the dense scenario engine)
             K = K.at[row_j, r].set(msg_i, mode="drop")
-            K = K.at[row_i, s].set(msg_j, mode="drop")
+            K = K.at[row_i, s].set(msg_j, mode="drop")  # scatter: last-write-wins
 
             # --- update: compact local endpoints, shared Eq. (6) step
             # under the current learned weights
@@ -989,6 +1004,8 @@ def _sharded_joint_scan(mesh, stream, ts, theta0, K0, theta_prev0, w0,
             lu_c = jnp.minimum(lu, m - 1)
             new = batched_model_update(w[lu_c], K[lu_c], c_blk[lu_c],
                                        sol_blk[lu_c], alpha, backend)
+            # scatter: idempotent — duplicate rows in lu recompute the same
+            # value from the same post-communication K
             theta = theta.at[jnp.where(lu < m, lu, m)].set(new, mode="drop")
             overflow += jnp.maximum(jnp.sum(got) - U, 0)
 
@@ -1132,8 +1149,12 @@ def run_joint_scenario_sharded(topo: SparseTopology, theta_sol, c,
     # segment schedule (record chunks per jitted call)
     can_recompact = (eta_graph > 0.0 and prune_eps is not None
                      and recompact_every is not None)
-    seg_rec = n_rec if not can_recompact else \
-        max(1, min(n_rec, recompact_every // record_every))
+    if can_recompact:
+        # repro-lint: disable=RPL007  n_rec already record_chunks-normalized
+        seg = recompact_every // record_every
+        seg_rec = max(1, min(n_rec, seg))
+    else:
+        seg_rec = n_rec
     cross_at_compact = _live_cross_edges(tabs, owner, live0)
 
     tel = telemetry_on(telemetry)

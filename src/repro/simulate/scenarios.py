@@ -16,6 +16,8 @@ from .scheduler import NetworkConditions
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
+    """A named fault profile: rounds -> NetworkConditions factory."""
+
     name: str
     description: str
     make_conditions: Callable[[int], NetworkConditions]
@@ -62,6 +64,7 @@ SCENARIOS: Dict[str, Scenario] = {
 
 
 def get_scenario(name: str) -> Scenario:
+    """Look up a scenario by name (KeyError lists the registry)."""
     try:
         return SCENARIOS[name]
     except KeyError:
@@ -70,4 +73,5 @@ def get_scenario(name: str) -> Scenario:
 
 
 def list_scenarios() -> List[str]:
+    """Sorted names of the registered fault scenarios."""
     return sorted(SCENARIOS)

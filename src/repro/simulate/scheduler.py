@@ -56,6 +56,7 @@ class NetworkConditions:
 
     @property
     def has_partition(self) -> bool:
+        """Whether a partition window [start, end) is configured."""
         return 0 <= self.partition_start < self.partition_end
 
 

@@ -35,17 +35,21 @@ class SparseTopology:
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.tables.n
 
     @property
     def k_max(self) -> int:
+        """Padded neighbor-slot count (max degree)."""
         return self.tables.k_max
 
     @property
     def n_edges(self) -> int:
+        """Number of undirected edges."""
         return int(self.tables.deg_count.sum()) // 2
 
     def device_tables(self) -> DeviceTables:
+        """The neighbor tables as device arrays (jnp)."""
         return to_device(self.tables)
 
     def state_bytes(self, p: int) -> int:
@@ -66,6 +70,7 @@ class SparseTopology:
     @classmethod
     def from_graph(cls, graph: Graph,
                    groups: Optional[np.ndarray] = None) -> "SparseTopology":
+        """Wrap a dense ``Graph`` via the shared padded-table constructor."""
         tabs = padded_neighbor_tables(graph)
         if groups is None:
             groups = (np.arange(graph.n) * 2 >= graph.n).astype(np.int32)
@@ -133,7 +138,7 @@ def random_geometric_topology(n: int, k: int = 8,
                         cand.append(order[starts[x * g + y]:ends[x * g + y]])
             cand = np.concatenate(cand)
             d2 = ((pts[mine][:, None, :] - pts[cand][None, :, :]) ** 2).sum(-1)
-            d2[cand[None, :] == mine[:, None]] = np.inf
+            d2[cand[None, :] == mine[:, None]] = np.inf  # scatter: unique targets
             kk = min(k, len(cand) - 1)
             if kk <= 0:
                 # lone point in an empty neighborhood: link to nearest overall

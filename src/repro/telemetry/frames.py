@@ -103,8 +103,7 @@ class TelemetryFrames:
                 row["serve_requests"] = int(self.serve_requests[t])
                 row["serve_hits"] = int(self.serve_hits[t])
                 row["serve_misses"] = int(self.serve_misses[t])
-                row["serve_invalidations"] = \
-                    int(self.serve_invalidations[t])
+                row["serve_invalidations"] = int(self.serve_invalidations[t])
             rows.append(row)
         if self.overflow_per_shard is not None and rows:
             rows[-1]["overflow_per_shard"] = [

@@ -90,6 +90,7 @@ def staleness_step(stale, got, rows, n_rows: int):
     contain out-of-range padding (scattered with mode="drop"), matching
     exactly the engines' own theta-update scatter condition.
     """
+    # scatter: idempotent — every delivered row writes True
     recv = jnp.zeros((n_rows,), bool).at[
         jnp.where(got, rows, n_rows)].set(True, mode="drop")
     return jnp.where(recv, 0, stale + 1).astype(jnp.int32)
@@ -157,10 +158,10 @@ def stream_dirty_chunks(stream, n: int, n_rec: int,
     d_ij, d_ji = _chunked(stream.deliver_ij), _chunked(stream.deliver_ji)
     dirty = np.zeros((n_rec, n), bool)
     rows = np.repeat(np.arange(n_rec), record_every * i.shape[-1])
-    # scatter only the delivering events (duplicate (row, agent) targets
-    # are fine when every written value is True)
+    # scatter only the delivering events
     for recv, d in ((i, d_ji), (j, d_ij)):
         hit = d.ravel()
+        # scatter: idempotent — duplicate (row, agent) targets all write True
         dirty[rows[hit], recv.ravel()[hit]] = True
     return dirty
 
@@ -186,8 +187,8 @@ def stream_staleness_chunks(stream, n: int, n_rec: int,
     for ci in range(n_rec):
         for t in range(record_every):
             g = ci * record_every + t
-            last[i[ci, t][d_ji[ci, t]]] = g
-            last[j[ci, t][d_ij[ci, t]]] = g
+            last[i[ci, t][d_ji[ci, t]]] = g  # scatter: idempotent
+            last[j[ci, t][d_ij[ci, t]]] = g  # scatter: idempotent
         end = (ci + 1) * record_every - 1
         out[ci] = np.where(last >= 0, end - last, end + 1).astype(np.int32)
     return out

@@ -21,6 +21,7 @@ def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
+        # repro-lint: disable=RPL002  dict write keyed by tree path
         flat[key] = np.asarray(leaf)
     return flat
 

@@ -1,0 +1,588 @@
+"""repro-lint framework tests: per-rule fixtures + waiver semantics.
+
+Each rule gets at least one true-positive fixture, one clean negative,
+and one waived-positive; waivers without a justification string must
+leave the finding unwaived and add an RPL000 finding.  Fixtures run
+through :func:`tools.lint.lint_source` with virtual repo-relative paths
+so per-rule path scoping (tests/ vs src/) is exercised too.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.lint import lint_source  # noqa: E402
+
+
+def run(src, rel="src/repro/mod.py", select=None):
+    return lint_source(textwrap.dedent(src), rel, select)
+
+
+def codes(findings, unwaived_only=True):
+    return [f.code for f in findings if not (unwaived_only and f.waived)]
+
+
+# ---------------------------------------------------------------------------
+# waiver machinery (RPL000)
+# ---------------------------------------------------------------------------
+
+
+def test_waiver_requires_justification():
+    src = """
+    import numpy as np
+
+    def f(x, idx, mask, v):
+        x[idx[mask]] = v  # repro-lint: disable=RPL002
+        return x
+    """
+    out = run(src)
+    # the waiver is inert AND reported: RPL002 stays unwaived, RPL000 fires
+    assert sorted(codes(out)) == ["RPL000", "RPL002"]
+
+
+def test_waiver_with_justification_waives():
+    src = """
+    import numpy as np
+
+    def f(x, idx, mask, v):
+        x[idx[mask]] = v  # repro-lint: disable=RPL002  index is a permutation
+        return x
+    """
+    out = run(src)
+    assert codes(out) == []
+    waived = [f for f in out if f.waived]
+    assert [f.code for f in waived] == ["RPL002"]
+    assert waived[0].justification == "index is a permutation"
+
+
+def test_waiver_standalone_comment_covers_next_line():
+    src = """
+    import numpy as np
+
+    def f(x, idx, mask, v):
+        # repro-lint: disable=RPL002  upstream dedup guarantees uniqueness
+        x[idx[mask]] = v
+        return x
+    """
+    assert codes(run(src)) == []
+
+
+def test_waiver_covers_only_its_rule():
+    src = """
+    import numpy as np
+
+    def f(x, idx, mask, v):
+        x[idx[mask]] = v  # repro-lint: disable=RPL001  wrong rule cited
+        return x
+    """
+    assert codes(run(src)) == ["RPL002"]
+
+
+def test_syntax_error_reports_rpl000():
+    out = lint_source("def broken(:\n", "src/repro/bad.py")
+    assert codes(out) == ["RPL000"]
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — concrete kernel imports outside kernels/
+# ---------------------------------------------------------------------------
+
+
+def test_rpl001_flags_concrete_import():
+    src = "from repro.kernels.graph_mix import dense_mix_reference\n"
+    assert codes(run(src, "src/repro/core/x.py")) == ["RPL001"]
+
+
+def test_rpl001_dispatch_import_clean():
+    src = "from repro.kernels import resolve, ReproBackend\n"
+    assert codes(run(src, "src/repro/core/x.py")) == []
+
+
+def test_rpl001_inside_kernels_exempt():
+    src = "from repro.kernels.graph_mix import dense_mix_reference\n"
+    assert codes(run(src, "src/repro/kernels/other.py")) == []
+
+
+def test_rpl001_tests_exempt():
+    src = "from repro.kernels.round_fuse import round_step\n"
+    assert codes(run(src, "tests/test_x.py")) == []
+
+
+def test_rpl001_waived():
+    src = ("from repro.kernels.sparse_mix import sparse_gather_mix"
+           "  # repro-lint: disable=RPL001  doc example, not dispatch\n")
+    assert codes(run(src, "src/repro/core/x.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — duplicate-capable scatters need a winner-policy marker
+# ---------------------------------------------------------------------------
+
+
+def test_rpl002_flags_at_set_with_array_index():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, idx, v):
+        return x.at[idx].set(v)
+    """
+    assert codes(run(src)) == ["RPL002"]
+
+
+def test_rpl002_marker_silences():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, idx, v):
+        return x.at[idx].set(v)  # scatter: last-write-wins
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_marker_block_above_counts():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, idx, v):
+        # scatter: idempotent — every written value is identical
+        # (second comment line directly above the statement)
+        y = x.at[idx].set(v)
+        return y
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_add_scatter_clean():
+    # .add is order-independent: no marker needed
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, idx, v):
+        return x.at[idx].add(v)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_scalar_loop_index_clean():
+    src = """
+    import numpy as np
+
+    def f(x, vals):
+        for i in range(len(vals)):
+            x[i] = vals[i]
+        return x
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_numpy_fancy_assign_flagged():
+    src = """
+    import numpy as np
+
+    def f(x, rows, v):
+        idx = np.asarray(rows)
+        x[idx] = v
+        return x
+    """
+    assert codes(run(src)) == ["RPL002"]
+
+
+def test_rpl002_bare_name_index_not_flagged():
+    # the numpy branch fires only on *computed* indexes: a bare-name
+    # subscript is indistinguishable from a dict write (d[key] = v), so
+    # it stays out of scope by design
+    src = """
+    def f(d, key, v):
+        d[key] = v
+        return d
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_numpy_augmented_fancy_assign_flagged():
+    # numpy += silently drops duplicate targets — the worst offender
+    src = """
+    import numpy as np
+
+    def f(x, rows, v):
+        idx = np.asarray(rows)
+        x[idx] += v
+        return x
+    """
+    assert codes(run(src)) == ["RPL002"]
+
+
+def test_rpl002_slice_assign_clean():
+    src = """
+    import numpy as np
+
+    def f(x, v):
+        x[2:5] = v
+        return x
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl002_waived():
+    src = """
+    import numpy as np
+
+    def f(x, idx, mask, v):
+        x[idx[mask]] = v  # repro-lint: disable=RPL002  idx unique by contract
+        return x
+    """
+    assert codes(run(src)) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — host nondeterminism in traced scopes
+# ---------------------------------------------------------------------------
+
+
+def test_rpl003_np_random_in_jit():
+    src = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        return x + np.random.rand()
+    """
+    assert codes(run(src)) == ["RPL003"]
+
+
+def test_rpl003_time_in_scan_body():
+    src = """
+    import time
+    import jax
+
+    def run(xs):
+        def body(carry, x):
+            return carry + x * time.time(), None
+        return jax.lax.scan(body, 0.0, xs)
+    """
+    assert codes(run(src)) == ["RPL003"]
+
+
+def test_rpl003_reachable_through_helper():
+    src = """
+    import jax
+    import numpy as np
+
+    def helper(x):
+        return x * np.random.rand()
+
+    @jax.jit
+    def f(x):
+        return helper(x)
+    """
+    assert codes(run(src)) == ["RPL003"]
+
+
+def test_rpl003_host_side_random_clean():
+    # nondeterminism outside any traced scope is fine (host setup code)
+    src = """
+    import numpy as np
+
+    def make_data(n):
+        return np.random.default_rng(0).normal(size=n)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl003_jax_random_in_jit_clean():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(key, x):
+        return x + jax.random.normal(key, x.shape)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl003_waived():
+    src = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        # repro-lint: disable=RPL003  traced once at compile time, constant
+        return x + np.random.rand()
+    """
+    assert codes(run(src)) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — low-precision reductions need an f32 accumulator
+# ---------------------------------------------------------------------------
+
+
+def test_rpl004_bf16_sum_flagged():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        y = x.astype(jnp.bfloat16)
+        return jnp.sum(y)
+    """
+    assert codes(run(src)) == ["RPL004"]
+
+
+def test_rpl004_dtype_kwarg_clean():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        y = x.astype(jnp.bfloat16)
+        return jnp.sum(y, dtype=jnp.float32)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl004_preferred_element_type_clean():
+    src = """
+    import jax.numpy as jnp
+
+    def f(a, b):
+        al = a.astype(jnp.bfloat16)
+        return jnp.einsum("ij,jk->ik", al, b,
+                          preferred_element_type=jnp.float32)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl004_config_dtype_taints():
+    # *_dtype config knobs may resolve to bf16 at runtime — still flagged
+    src = """
+    import jax.numpy as jnp
+
+    def f(x, cfg):
+        y = x.astype(cfg.mix_dtype)
+        return y.mean(axis=0)
+    """
+    assert codes(run(src)) == ["RPL004"]
+
+
+def test_rpl004_f32_sum_clean():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        return jnp.sum(x.astype(jnp.float32))
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl004_tests_exempt():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        return jnp.sum(x.astype(jnp.bfloat16))
+    """
+    assert codes(run(src, "tests/test_x.py")) == []
+
+
+def test_rpl004_waived():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        y = x.astype(jnp.bfloat16)
+        return jnp.sum(y)  # repro-lint: disable=RPL004  tolerance-tested
+    """
+    assert codes(run(src)) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — interpret=True stays out of production
+# ---------------------------------------------------------------------------
+
+
+def test_rpl005_param_default_flagged():
+    src = """
+    def kernel(x, *, interpret=True):
+        return x
+    """
+    assert codes(run(src)) == ["RPL005"]
+
+
+def test_rpl005_call_site_flagged():
+    src = """
+    def g(pallas_call, x):
+        return pallas_call(x, interpret=True)
+    """
+    assert codes(run(src)) == ["RPL005"]
+
+
+def test_rpl005_false_default_clean():
+    src = """
+    def kernel(x, *, interpret=False):
+        return x
+
+    def g(x):
+        return kernel(x, interpret=bool(x.size == 0))
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl005_tests_and_benchmarks_exempt():
+    src = """
+    def g(pallas_call, x):
+        return pallas_call(x, interpret=True)
+    """
+    assert codes(run(src, "tests/test_x.py")) == []
+    assert codes(run(src, "benchmarks/bench_x.py")) == []
+
+
+def test_rpl005_waived():
+    src = """
+    def g(pallas_call, x):
+        return pallas_call(x, interpret=True)  # repro-lint: disable=RPL005  doc
+    """
+    assert codes(run(src, "examples/demo.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — collectives must see their shard_map binding
+# ---------------------------------------------------------------------------
+
+
+def test_rpl006_unbound_collective_flagged():
+    src = """
+    import jax
+
+    def f(x):
+        return jax.lax.psum(x, "agents")
+    """
+    assert codes(run(src)) == ["RPL006"]
+
+
+def test_rpl006_bound_by_module_shard_map_clean():
+    src = """
+    import jax
+    from jax.experimental.shard_map import shard_map
+
+    def body(x):
+        return jax.lax.psum(x, "agents")
+
+    def run(mesh, specs, x):
+        return shard_map(body, mesh=mesh, in_specs=specs,
+                         out_specs=specs)(x)
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl006_docstring_contract_clean():
+    src = '''
+    import jax
+
+    def halo(x):
+        """Exchange halos.  Must be called inside a ``shard_map``."""
+        return jax.lax.ppermute(x, "agents", [(0, 1)])
+    '''
+    assert codes(run(src)) == []
+
+
+def test_rpl006_waived():
+    src = """
+    import jax
+
+    def f(x):
+        return jax.lax.psum(x, "agents")  # repro-lint: disable=RPL006  bound by caller
+    """
+    assert codes(run(src)) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — chunked recording goes through record_chunks
+# ---------------------------------------------------------------------------
+
+
+def test_rpl007_raw_division_flagged():
+    src = """
+    def run(steps, record_every):
+        n_rec = steps // record_every
+        return n_rec
+    """
+    assert codes(run(src)) == ["RPL007"]
+
+
+def test_rpl007_record_chunks_impl_exempt():
+    src = """
+    def record_chunks(steps, record_every):
+        record_every = max(1, min(record_every, steps))
+        n_rec = steps // record_every
+        return record_every, n_rec
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl007_other_division_clean():
+    src = """
+    def halve(n):
+        return n // 2
+    """
+    assert codes(run(src)) == []
+
+
+def test_rpl007_waived():
+    src = """
+    def run(steps, record_every):
+        n_rec = steps // record_every  # repro-lint: disable=RPL007  normalized upstream
+        return n_rec
+    """
+    assert codes(run(src)) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI: repo-wide run is clean, JSON report shape
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.lint", *args],
+        cwd=REPO, capture_output=True, text=True)
+
+
+def test_cli_repo_clean():
+    """The repo's own tree must lint clean — the CI gate in one test."""
+    res = _run_cli("src", "tests", "benchmarks", "examples")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_json_format():
+    res = _run_cli("src/repro/telemetry", "--format", "json")
+    assert res.returncode == 0, res.stdout + res.stderr
+    report = json.loads(res.stdout)
+    assert set(report) == {"findings", "counts"}
+    c = report["counts"]
+    assert c["unwaived"] == 0
+    assert c["total"] == c["waived"]
+    for f in report["findings"]:
+        assert {"code", "path", "line", "col", "message",
+                "waived", "justification"} <= set(f)
+
+
+def test_cli_select_unknown_rule_is_usage_error():
+    res = _run_cli("src/repro/telemetry", "--select", "RPL999")
+    assert res.returncode == 2
+
+
+def test_cli_list_rules():
+    res = _run_cli("--list-rules")
+    assert res.returncode == 0
+    for code in ("RPL001", "RPL002", "RPL003", "RPL004",
+                 "RPL005", "RPL006", "RPL007"):
+        assert code in res.stdout

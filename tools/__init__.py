@@ -1,0 +1,1 @@
+"""Repo tooling: repro-lint (tools.lint), README executor, trace reports."""

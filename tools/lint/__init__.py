@@ -1,0 +1,30 @@
+"""repro-lint: AST-based invariant checks for determinism, dispatch, and
+sharding rules (DESIGN.md §17).
+
+The repo's bit-for-bit parity anchors only hold because of a handful of
+coding invariants — deterministic duplicate-target scatters, no host state
+inside jitted scans, f32 accumulation around bf16/int8 wire formats,
+dispatch-registry discipline, shard_map axis-name binding, shared record
+chunking.  Each rule here encodes one of them as enforceable lint with a
+stable code (RPL001...); violations that are intentional carry an inline
+waiver with a mandatory justification::
+
+    python -m tools.lint src tests benchmarks examples
+    python -m tools.lint --format json src
+
+Waiver syntax (same line as the finding, or the line directly above)::
+
+    theta = theta.at[idx].set(new)  # repro-lint: disable=RPL002  <why>
+
+Rules live in :mod:`tools.lint.rules` (one module per rule); the engine —
+file walking, waiver parsing, finding model — in :mod:`tools.lint.core`.
+"""
+
+from tools.lint.core import (  # noqa: F401
+    Finding,
+    Rule,
+    all_rules,
+    lint_paths,
+    lint_source,
+)
+from tools.lint import rules  # noqa: F401  (registers the RPL rules)

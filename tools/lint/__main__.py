@@ -1,0 +1,85 @@
+"""CLI: ``python -m tools.lint [paths...] [--format text|json] ...``.
+
+Exit status 0 when every finding is waived (with justification), 1 when
+any unwaived finding remains, 2 on usage errors.  ``--format json`` emits
+a machine-readable report (rule code, path:line, waiver status) so CI and
+future PRs can gate on finding deltas the way the bench lanes gate on
+``BENCH_*.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from tools.lint.core import all_rules, lint_paths
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def main(argv=None) -> int:
+    """Run the linter; returns the process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST invariant checks (DESIGN.md §17)")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories (default: %(default)s)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run (e.g. RPL001)")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print waived findings in text mode")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.code}  {rule.name}: {rule.summary}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",")]
+        known = {r.code for r in all_rules()}
+        bad = sorted(set(select) - known)
+        if bad:
+            print(f"unknown rule code(s): {', '.join(bad)}",
+                  file=sys.stderr)
+            return 2
+
+    findings = lint_paths(args.paths, select)
+    unwaived = [f for f in findings if not f.waived]
+    waived = [f for f in findings if f.waived]
+
+    if args.format == "json":
+        per_rule = {}
+        for f in findings:
+            row = per_rule.setdefault(f.code, {"total": 0, "waived": 0})
+            row["total"] += 1
+            row["waived"] += int(f.waived)
+        print(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "counts": {
+                "total": len(findings),
+                "waived": len(waived),
+                "unwaived": len(unwaived),
+                "per_rule": per_rule,
+            },
+        }, indent=2, sort_keys=True))
+        return 1 if unwaived else 0
+
+    shown = findings if args.show_waived else unwaived
+    for f in sorted(shown, key=lambda f: (f.path, f.line, f.col)):
+        print(f.format())
+    if unwaived:
+        print(f"\n{len(unwaived)} unwaived finding(s) "
+              f"({len(waived)} waived)", file=sys.stderr)
+        return 1
+    print(f"repro-lint: clean ({len(waived)} waived finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

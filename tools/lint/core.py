@@ -1,0 +1,264 @@
+"""Engine of repro-lint: finding model, rule registry, waivers, file walker.
+
+Stdlib-only by design — the CI static-analysis lane runs the linter without
+installing any dependency.  Rules receive a :class:`FileContext` (parsed
+AST + raw source + comment map) and yield :class:`Finding` objects; the
+engine then applies inline waivers and decides the exit status.
+
+Waiver syntax (``# repro-lint: disable=RPL002[,RPL004]  <justification>``):
+the justification string is mandatory — a waiver without one does not
+suppress anything and is itself reported as ``RPL000``.  A trailing waiver
+covers findings on its own line; a standalone waiver comment covers the
+line directly below it.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: Reserved code for engine-level problems (broken waivers, parse errors).
+BAD_WAIVER = "RPL000"
+
+WAIVER_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)"
+    r"[ \t]*(.*)$")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at a precise source location."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    justification: Optional[str] = None
+
+    def format(self) -> str:
+        """Human-readable one-liner (``path:line:col: CODE message``)."""
+        tag = "  [waived: %s]" % self.justification if self.waived else ""
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"{self.code} {self.message}{tag}"
+
+    def to_json(self) -> dict:
+        """JSON-ready dict (the ``--format json`` row)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Waiver:
+    """One parsed ``# repro-lint: disable=...`` comment."""
+
+    codes: Tuple[str, ...]
+    justification: str
+    line: int
+    standalone: bool
+
+    def covers(self, line: int) -> bool:
+        """Whether a finding on ``line`` is in this waiver's scope."""
+        return line == self.line or (self.standalone
+                                     and line == self.line + 1)
+
+
+class Rule:
+    """Base class: one registered invariant check.
+
+    Subclasses set ``code`` (stable RPLnnn identifier), ``name`` (short
+    slug) and ``summary`` (one-line invariant statement), may narrow
+    ``applies`` (path-part scoping), and implement ``check``.
+    """
+
+    code = "RPL000"
+    name = "base"
+    summary = ""
+
+    def applies(self, parts: Tuple[str, ...]) -> bool:
+        """Whether the rule runs on a file with these relative path parts."""
+        return True
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        """Yield findings for one parsed file."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule to the global registry."""
+    inst = cls()
+    if inst.code in _REGISTRY:
+        raise ValueError(f"duplicate rule code {inst.code}")
+    _REGISTRY[inst.code] = inst
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    """Registered rules, sorted by code."""
+    return [_REGISTRY[c] for c in sorted(_REGISTRY)]
+
+
+def dotted_name(node) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class FileContext:
+    """Parsed source of one file, shared by every rule that runs on it.
+
+    ``rel`` is the repo-relative path (display + scoping); ``parts`` its
+    path segments.  ``comments`` maps line -> (text, standalone) for every
+    comment token; built with :mod:`tokenize` so strings containing ``#``
+    never masquerade as comments.
+    """
+
+    def __init__(self, rel: str, text: str):
+        self.rel = str(rel).replace("\\", "/")
+        self.parts = tuple(p for p in self.rel.split("/") if p)
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text)
+        self.comments: Dict[int, Tuple[str, bool]] = {}
+        for tok in _tokens(text):
+            if tok.type == tokenize.COMMENT:
+                line = tok.start[0]
+                before = self.lines[line - 1][: tok.start[1]]
+                self.comments[line] = (tok.string, not before.strip())
+
+    def finding(self, code: str, node, message: str) -> Finding:
+        """Finding anchored at an AST node (or a bare line number)."""
+        line = getattr(node, "lineno", node if isinstance(node, int) else 1)
+        col = getattr(node, "col_offset", 0) + 1
+        return Finding(code, self.rel, line, col, message)
+
+    def comment_lines(self, pattern: str) -> set:
+        """Line numbers whose comment matches ``pattern`` (regex search)."""
+        rx = re.compile(pattern)
+        return {ln for ln, (txt, _) in self.comments.items()
+                if rx.search(txt)}
+
+    def has_marker(self, node, lines: set) -> bool:
+        """Whether a marker comment covers a statement: on any line of the
+        statement's span, or in the contiguous standalone-comment block
+        directly above it (so multi-line explanations still count)."""
+        end = getattr(node, "end_lineno", node.lineno)
+        if any(ln in lines for ln in range(node.lineno, end + 1)):
+            return True
+        ln = node.lineno - 1
+        while ln >= 1 and ln in self.comments and self.comments[ln][1]:
+            if ln in lines:
+                return True
+            ln -= 1
+        return False
+
+
+def _tokens(text: str):
+    try:
+        yield from tokenize.generate_tokens(io.StringIO(text).readline)
+    except (tokenize.TokenError, IndentationError):  # pragma: no cover
+        return
+
+
+def parse_waivers(ctx: FileContext) -> Tuple[List[Waiver], List[Finding]]:
+    """Extract waivers from a file's comments.
+
+    Returns (valid waivers, RPL000 findings for waivers missing their
+    mandatory justification string).
+    """
+    waivers: List[Waiver] = []
+    bad: List[Finding] = []
+    for line, (txt, standalone) in sorted(ctx.comments.items()):
+        m = WAIVER_RE.search(txt)
+        if not m:
+            continue
+        codes = tuple(c.strip() for c in m.group(1).split(","))
+        justification = m.group(2).strip(" \t-—:")
+        if not justification:
+            bad.append(Finding(
+                BAD_WAIVER, ctx.rel, line, 1,
+                f"waiver for {','.join(codes)} has no justification "
+                f"string (required: '# repro-lint: disable=<codes>  "
+                f"<why this is safe>')"))
+            continue
+        waivers.append(Waiver(codes, justification, line, standalone))
+    return waivers, bad
+
+
+def lint_source(text: str, rel: str = "src/repro/snippet.py",
+                select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one source string under a virtual repo-relative path.
+
+    The path drives per-rule scoping exactly as for on-disk files, so
+    fixture tests can probe scope rules.  Waivers are applied; waived
+    findings are returned with ``waived=True`` rather than dropped.
+    """
+    try:
+        ctx = FileContext(rel, text)
+    except SyntaxError as e:
+        return [Finding(BAD_WAIVER, str(rel), e.lineno or 1, 1,
+                        f"syntax error: {e.msg}")]
+    findings: List[Finding] = []
+    for rule in all_rules():
+        if select and rule.code not in select:
+            continue
+        if not rule.applies(ctx.parts):
+            continue
+        findings.extend(rule.check(ctx))
+    waivers, bad = parse_waivers(ctx)
+    for f in findings:
+        for w in waivers:
+            if f.code in w.codes and w.covers(f.line):
+                f.waived = True
+                f.justification = w.justification
+                break
+    findings.extend(bad)
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return findings
+
+
+def iter_python_files(paths: Sequence[str],
+                      root: Optional[pathlib.Path] = None):
+    """Yield (abs_path, repo_relative_path) for every .py file under paths."""
+    root = pathlib.Path.cwd() if root is None else pathlib.Path(root)
+    for p in paths:
+        base = pathlib.Path(p)
+        if not base.is_absolute():
+            base = root / base
+        if base.is_file():
+            files = [base]
+        else:
+            files = sorted(x for x in base.rglob("*.py")
+                           if "__pycache__" not in x.parts
+                           and not any(part.startswith(".")
+                                       for part in x.parts))
+        for f in files:
+            try:
+                rel = f.resolve().relative_to(root.resolve())
+            except ValueError:  # outside the root: display as given
+                rel = f
+            yield f, str(rel)
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Sequence[str]] = None,
+               root: Optional[pathlib.Path] = None) -> List[Finding]:
+    """Lint every Python file under the given paths."""
+    out: List[Finding] = []
+    for path, rel in iter_python_files(paths, root):
+        out.extend(lint_source(path.read_text(), rel, select))
+    return out

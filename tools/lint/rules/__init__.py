@@ -1,0 +1,31 @@
+"""The RPL rule set (one module per rule; importing registers them all).
+
+=======  ====================================================================
+Code     Invariant
+=======  ====================================================================
+RPL001   no concrete-kernel imports outside ``src/repro/kernels/``
+RPL002   duplicate-target ``.set``-style scatters carry a winner-policy
+         marker (``# scatter: <policy>``)
+RPL003   no host nondeterminism (np.random / random / time / datetime)
+         reachable inside jit- or scan-traced code
+RPL004   reductions/dots over bf16/int8 (or ``*_dtype``-configurable)
+         operands declare an f32 accumulator (``dtype=`` /
+         ``preferred_element_type=``)
+RPL005   no ``interpret=True`` defaults or call-sites outside tests and
+         benchmarks (auto-selection must never pick interpret mode)
+RPL006   collectives bind their axis name: lexically inside a shard_map
+         body, or under a documented must-run-inside-shard_map contract
+RPL007   no raw ``// record_every`` chunking — use
+         ``core.sparse.record_chunks``
+=======  ====================================================================
+"""
+
+from tools.lint.rules import (  # noqa: F401
+    rpl001_kernel_imports,
+    rpl002_scatter_policy,
+    rpl003_host_nondeterminism,
+    rpl004_mixed_precision,
+    rpl005_interpret_default,
+    rpl006_axis_binding,
+    rpl007_record_chunking,
+)

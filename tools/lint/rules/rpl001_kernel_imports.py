@@ -1,0 +1,63 @@
+"""RPL001: no concrete-kernel imports outside ``src/repro/kernels/``.
+
+Production call sites resolve kernels through ``kernels.dispatch`` (the
+PR 2 registry) so backend selection rules — platform auto, interpret
+opt-in, impl overrides — apply uniformly.  A direct import of a concrete
+kernel module bypasses every one of them.  Tests are exempt (they validate
+concrete kernels on purpose); ``tests/test_dispatch.py``'s architecture
+check delegates to this rule.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileContext, Rule, register
+
+#: Concrete kernel modules under src/repro/kernels/ (dispatch/ops/ref are
+#: the sanctioned indirection layers and stay importable).
+CONCRETE = frozenset(
+    {"graph_mix", "sparse_mix", "admm_update", "flash_attention",
+     "round_fuse", "sharded"})
+
+
+@register
+class KernelImports(Rule):
+    code = "RPL001"
+    name = "kernel-imports"
+    summary = ("concrete kernel modules are imported only inside "
+               "src/repro/kernels/ (everything else goes through "
+               "kernels.dispatch)")
+
+    def applies(self, parts):
+        return "kernels" not in parts and "tests" not in parts
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    seg = alias.name.split(".")
+                    if ("kernels" in seg
+                            and CONCRETE & set(seg[seg.index("kernels"):])):
+                        yield ctx.finding(
+                            self.code, node,
+                            f"direct concrete-kernel import "
+                            f"`import {alias.name}` — resolve through "
+                            f"repro.kernels.dispatch")
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                seg = mod.split(".") if mod else []
+                from_kernels = "kernels" in seg
+                if not from_kernels and not node.level:
+                    continue
+                if not from_kernels:
+                    continue  # relative import of a non-kernels module
+                tail = set(seg[seg.index("kernels") + 1:])
+                names = {a.name for a in node.names}
+                hit = (tail & CONCRETE) or (not tail and names & CONCRETE)
+                if hit:
+                    yield ctx.finding(
+                        self.code, node,
+                        f"direct concrete-kernel import `from {mod or '.'} "
+                        f"import {', '.join(sorted(names))}` — resolve "
+                        f"through repro.kernels.dispatch")

@@ -1,0 +1,160 @@
+"""RPL002: duplicate-target ``.set``-style scatters need a winner-policy
+marker.
+
+When a scatter's index array can name the same target twice, the surviving
+value is backend/implementation-defined (jax ``.at[].set``) or silently
+last-write-wins / duplicate-dropping (numpy fancy assignment, ``x[i] += v``).
+This class shipped real bugs twice: the PR 7 ``round_step`` winner dedup
+exists because duplicate (row, slot) scatters resolved differently across
+backends, and PR 8's ``stream_dirty_chunks`` clobbered True writes under
+duplicate targets.  Commutative scatters (``.at[].add/max/min``) are
+order-independent and exempt.
+
+Any potentially-duplicate ``.set``/assignment scatter must carry a marker
+comment — on a line of the statement or directly above it — naming the
+policy that makes it deterministic::
+
+    # scatter: unique targets (rows of one partition block)
+    blk[local_pos[mask]] = theta[mask]
+
+The marker text is free-form but must be non-empty; typical policies are
+``unique targets``, ``idempotent (all writes equal)``,
+``last-write-wins (intended)``, ``winner dedup upstream``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileContext, Rule, register
+
+MARKER = r"#\s*scatter:\s*\S"
+
+#: jax .at[...] methods with order-dependent duplicate semantics.  add/
+#: max/min/mul are commutative and therefore deterministic under dups.
+NONCOMMUTATIVE = frozenset({"set"})
+
+
+def _scalar_names(func) -> set:
+    """Names provably scalar inside ``func``: range/enumerate loop indices
+    and names bound to integer constants."""
+    out = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.For) and isinstance(node.iter, ast.Call):
+            f = node.iter.func
+            fname = f.id if isinstance(f, ast.Name) else getattr(f, "attr", "")
+            tgt = node.target
+            if fname == "range" and isinstance(tgt, ast.Name):
+                out.add(tgt.id)
+            elif fname == "enumerate" and isinstance(tgt, ast.Tuple) \
+                    and tgt.elts and isinstance(tgt.elts[0], ast.Name):
+                out.add(tgt.elts[0].id)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, int):
+            out.add(node.targets[0].id)
+    return out
+
+
+def _maybe_dup(e, scalars: set) -> bool:
+    """Whether an index expression can address the same target twice."""
+    if e is None or isinstance(e, ast.Constant):
+        return False
+    if isinstance(e, ast.Slice):
+        return False  # a slice enumerates distinct positions
+    if isinstance(e, ast.Name):
+        return e.id not in scalars
+    if isinstance(e, ast.UnaryOp):
+        return _maybe_dup(e.operand, scalars)
+    if isinstance(e, ast.BinOp):
+        return (_maybe_dup(e.left, scalars)
+                or _maybe_dup(e.right, scalars))
+    if isinstance(e, ast.Tuple):
+        return any(_maybe_dup(x, scalars) for x in e.elts)
+    return True  # Call / Subscript / Attribute / Compare / ...
+
+
+def _array_tainted_names(func) -> set:
+    """Names assigned from array-producing expressions (calls, comparisons,
+    subscripts) within ``func`` — candidates for fancy-index scatters."""
+    out = set()
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not isinstance(node.value,
+                          (ast.Call, ast.Compare, ast.Subscript, ast.BinOp,
+                           ast.BoolOp)):
+            continue
+        for tgt in node.targets:
+            elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+            out.update(e.id for e in elts if isinstance(e, ast.Name))
+    return out
+
+
+def _index_is_computed(e, tainted: set) -> bool:
+    """Numpy-branch gate: the index is itself an array expression (call /
+    subscript / comparison) or a name assigned from one."""
+    if isinstance(e, (ast.Call, ast.Subscript, ast.Compare, ast.BoolOp)):
+        return True
+    if isinstance(e, ast.Name):
+        return e.id in tainted
+    if isinstance(e, (ast.Tuple, ast.BinOp)):
+        kids = e.elts if isinstance(e, ast.Tuple) else [e.left, e.right]
+        return any(_index_is_computed(k, tainted) for k in kids)
+    return False
+
+
+def _at_scatter(call: ast.Call):
+    """(index, method) when ``call`` is ``<x>.at[index].<method>(...)``."""
+    f = call.func
+    if not (isinstance(f, ast.Attribute) and isinstance(f.value,
+                                                        ast.Subscript)):
+        return None
+    sub = f.value
+    if isinstance(sub.value, ast.Attribute) and sub.value.attr == "at":
+        return sub.slice, f.attr
+    return None
+
+
+@register
+class ScatterPolicy(Rule):
+    code = "RPL002"
+    name = "scatter-winner-policy"
+    summary = ("duplicate-target .set scatters and fancy-index assignments "
+               "carry an explicit '# scatter: <policy>' marker")
+
+    def applies(self, parts):
+        return "tests" not in parts
+
+    def check(self, ctx: FileContext):
+        markers = ctx.comment_lines(MARKER)
+        scalars = _scalar_names(ctx.tree)
+        tainted = _array_tainted_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            hit = None
+            if isinstance(node, ast.Call):
+                at = _at_scatter(node)
+                if at and at[1] in NONCOMMUTATIVE \
+                        and _maybe_dup(at[0], scalars):
+                    hit = f".at[...].{at[1]}() scatter"
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = (node.targets if isinstance(node, ast.Assign)
+                        else [node.target])
+                for tgt in tgts:
+                    if isinstance(tgt, ast.Subscript) \
+                            and _index_is_computed(tgt.slice, tainted) \
+                            and _maybe_dup(tgt.slice, scalars):
+                        hit = ("fancy-index augmented assignment "
+                               "(numpy += drops duplicate targets)"
+                               if isinstance(node, ast.AugAssign)
+                               else "fancy-index assignment")
+                        break
+            if hit is None:
+                continue
+            if not ctx.has_marker(node, markers):
+                yield ctx.finding(
+                    self.code, node,
+                    f"{hit} whose index may carry duplicate targets "
+                    f"has no winner-policy marker "
+                    f"('# scatter: <policy>')")

@@ -1,0 +1,160 @@
+"""RPL003: no host nondeterminism reachable inside jit/scan-traced code.
+
+``np.random`` / ``random`` / ``time`` / ``datetime`` calls inside a traced
+function execute once at trace time and bake a single draw into the
+compiled program — the scan replays a constant, silently breaking the
+RNG-schedule parity the engines are anchored on (and differing between a
+cached and a fresh compilation).  Traced randomness must come from
+``jax.random`` keys threaded through the carry; timestamps belong on the
+host side of the chunk loop.
+
+Traced scope = functions decorated with ``jax.jit`` (directly or through
+``functools.partial``), functions passed to ``jax.jit(...)`` /
+``lax.scan(...)``, and anything they call by name in the same module
+(one-level module-local reachability).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileContext, Rule, dotted_name, register
+
+#: Module roots whose use inside traced code is nondeterministic.
+BAD_MODULES = {"random", "time", "datetime"}
+#: Names commonly imported *from* those modules.
+BAD_FROM = {"random": {"*"}, "time": {"*"}, "datetime": {"*"},
+            "numpy.random": {"*"}}
+
+
+def _is_jit_expr(e) -> bool:
+    d = dotted_name(e)
+    if d and d.split(".")[-1] == "jit":
+        return True
+    if isinstance(e, ast.Call):
+        f = dotted_name(e.func)
+        if f and f.split(".")[-1] == "jit":
+            return True
+        if f and f.split(".")[-1] == "partial":
+            return any(_is_jit_expr(a) for a in e.args)
+    return False
+
+
+def _collect_aliases(tree):
+    """(numpy aliases, bad-module aliases, names imported from bad mods)."""
+    np_alias, bad_alias, bad_names = set(), set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                if a.name == "numpy" or a.name.startswith("numpy."):
+                    np_alias.add(bound)
+                    if a.name.startswith("numpy.random"):
+                        bad_alias.add(bound)
+                if a.name.split(".")[0] in BAD_MODULES:
+                    bad_alias.add(bound)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            mod = node.module
+            if mod == "numpy":
+                for a in node.names:
+                    if a.name == "random":
+                        bad_alias.add(a.asname or a.name)
+            elif mod in BAD_MODULES or mod == "numpy.random":
+                for a in node.names:
+                    bad_names.add(a.asname or a.name)
+    return np_alias, bad_alias, bad_names
+
+
+def _traced_roots(tree):
+    """Function defs / lambdas that enter a trace, plus traced call names."""
+    names, nodes = set(), []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_expr(d) for d in node.decorator_list):
+                names.add(node.name)
+        elif isinstance(node, ast.Call):
+            f = dotted_name(node.func)
+            tail = f.split(".")[-1] if f else ""
+            if tail in {"jit", "scan"} and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    nodes.append(arg)
+                elif isinstance(arg, ast.Call):
+                    for a in [arg.func] + list(arg.args):
+                        if isinstance(a, ast.Name):
+                            names.add(a.id)
+    return names, nodes
+
+
+def _functions_by_name(tree):
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+@register
+class HostNondeterminism(Rule):
+    code = "RPL003"
+    name = "host-nondeterminism"
+    summary = ("np.random/random/time/datetime never execute inside "
+               "jit- or lax.scan-traced code (jax.random keys only)")
+
+    def check(self, ctx: FileContext):
+        np_alias, bad_alias, bad_names = _collect_aliases(ctx.tree)
+        root_names, root_nodes = _traced_roots(ctx.tree)
+        by_name = _functions_by_name(ctx.tree)
+
+        # module-local reachability: traced functions mark their callees
+        marked = set()
+        frontier = list(root_names)
+        while frontier:
+            name = frontier.pop()
+            if name in marked or name not in by_name:
+                marked.add(name)
+                continue
+            marked.add(name)
+            for fn in by_name[name]:
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call) \
+                            and isinstance(node.func, ast.Name) \
+                            and node.func.id not in marked:
+                        frontier.append(node.func.id)
+
+        traced = [fn for name in marked for fn in by_name.get(name, [])]
+        traced.extend(root_nodes)
+
+        reported = set()
+        for fn in traced:
+            for node in ast.walk(fn):
+                bad = self._bad_use(node, np_alias, bad_alias, bad_names)
+                if bad is None:
+                    continue
+                key = (node.lineno, node.col_offset)
+                if key in reported:
+                    continue
+                reported.add(key)
+                yield ctx.finding(
+                    self.code, node,
+                    f"host nondeterminism `{bad}` reachable inside "
+                    f"jit/scan-traced code — thread a jax.random key "
+                    f"through the carry instead")
+
+    @staticmethod
+    def _bad_use(node, np_alias, bad_alias, bad_names):
+        if isinstance(node, ast.Attribute):
+            d = dotted_name(node)
+            if not d:
+                return None
+            seg = d.split(".")
+            if seg[0] in bad_alias:
+                return d
+            if seg[0] in np_alias and len(seg) > 1 and seg[1] == "random":
+                return d
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in bad_names:
+                return node.id
+        return None

@@ -1,0 +1,103 @@
+"""RPL004: reductions over low-precision operands declare f32 accumulation.
+
+The halo codecs (``launch/sim_mesh.py``), the coupling wire formats
+(``coupling/strategies.py``) and the bf16 optimizer moments ship bf16/int8
+payloads — but every *reduction* over them (sum / mean / dot / einsum /
+matmul) must accumulate in float32, or the results drift with operand
+order and shard count, breaking the bit-for-bit parity anchors.  The rule
+flags reduction calls whose operands are low-precision tainted — cast via
+``.astype(bfloat16 / float16 / int8)`` or via a ``*_dtype`` configuration
+knob (which may be set to bf16 by callers) — without an explicit
+``dtype=`` / ``preferred_element_type=`` accumulator.
+
+jnp reductions accept ``dtype=``; dots/einsums take
+``preferred_element_type=`` (see kernels/graph_mix.py for the idiom).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.lint.core import FileContext, Rule, dotted_name, register
+
+REDUCERS = frozenset(
+    {"sum", "mean", "dot", "matmul", "einsum", "tensordot", "vdot", "prod",
+     "dot_general"})
+
+#: dtype expressions that (may) denote a sub-f32 wire format: concrete
+#: low-precision dtypes, or a ``*_dtype`` config attribute that callers can
+#: set to one.
+LOWPREC_RE = re.compile(
+    r"(bfloat16|float16|int8|int4|float8|\w+_dtype\b)")
+
+ACC_KWARGS = {"dtype", "preferred_element_type"}
+
+
+def _is_lowprec_cast(call: ast.Call) -> bool:
+    """``<x>.astype(<lowprec>)`` or ``asarray(x, <lowprec>)``."""
+    f = call.func
+    name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", "")
+    if name == "astype" and call.args:
+        return bool(LOWPREC_RE.search(ast.unparse(call.args[0])))
+    if name in {"asarray", "array", "full", "zeros", "ones"}:
+        for a in list(call.args[1:]) + [k.value for k in call.keywords
+                                        if k.arg == "dtype"]:
+            if LOWPREC_RE.search(ast.unparse(a)):
+                return True
+    return False
+
+
+def _tainted_names(tree) -> set:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and _is_lowprec_cast(node.value):
+            for tgt in node.targets:
+                elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                out.update(e.id for e in elts if isinstance(e, ast.Name))
+    return out
+
+
+def _expr_tainted(e, tainted: set) -> bool:
+    for node in ast.walk(e):
+        if isinstance(node, ast.Name) and node.id in tainted:
+            return True
+        if isinstance(node, ast.Call) and _is_lowprec_cast(node):
+            return True
+    return False
+
+
+@register
+class MixedPrecision(Rule):
+    code = "RPL004"
+    name = "f32-accumulation"
+    summary = ("reductions/dots over bf16/int8 (or *_dtype-configurable) "
+               "operands pass dtype=/preferred_element_type= for f32 "
+               "accumulation")
+
+    def applies(self, parts):
+        return "tests" not in parts
+
+    def check(self, ctx: FileContext):
+        tainted = _tainted_names(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not isinstance(f, ast.Attribute) or f.attr not in REDUCERS:
+                continue
+            if any(k.arg in ACC_KWARGS for k in node.keywords):
+                continue
+            root = dotted_name(f.value)
+            if root in {"np", "numpy", "jnp", "jax.numpy", "jax.lax", "lax",
+                        "math"}:
+                operands = list(node.args)
+            else:
+                operands = [f.value] + list(node.args)
+            if any(_expr_tainted(o, tainted) for o in operands):
+                yield ctx.finding(
+                    self.code, node,
+                    f"`{f.attr}` reduction over a low-precision-tainted "
+                    f"operand without an explicit f32 accumulator "
+                    f"(dtype=/preferred_element_type=jnp.float32)")

@@ -1,0 +1,59 @@
+"""RPL005: ``interpret=True`` never appears outside tests and benchmarks.
+
+Pallas interpret mode is a validation device (orders of magnitude slower
+than compiled; semantics subtly different around scatter collisions).  The
+dispatch registry must never auto-select it, and no production default or
+call-site may hard-code it — interpret is an explicit per-run opt-in
+(``ReproBackend(interpret=True)`` / ``REPRO_PALLAS_INTERPRET=1``).  The
+rule flags both ``def f(..., interpret=True)`` defaults and
+``fn(..., interpret=True)`` call-sites; tests and benchmarks (which
+validate kernels off-TPU on purpose) are exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileContext, Rule, register
+
+
+def _true_const(e) -> bool:
+    return isinstance(e, ast.Constant) and e.value is True
+
+
+@register
+class InterpretDefault(Rule):
+    code = "RPL005"
+    name = "no-interpret-default"
+    summary = ("interpret=True appears only in tests/benchmarks — "
+               "production resolves interpret via the explicit opt-in")
+
+    def applies(self, parts):
+        return "tests" not in parts and "benchmarks" not in parts
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                a = node.args
+                params = a.args + a.kwonlyargs
+                defaults = (
+                    [None] * (len(a.args) - len(a.defaults))
+                    + list(a.defaults) + list(a.kw_defaults))
+                for param, default in zip(params, defaults):
+                    if param.arg == "interpret" and default is not None \
+                            and _true_const(default):
+                        yield ctx.finding(
+                            self.code, node,
+                            "parameter default interpret=True — interpret "
+                            "mode must be an explicit opt-in (default "
+                            "False)")
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and _true_const(kw.value):
+                        yield ctx.finding(
+                            self.code, kw.value,
+                            "call-site interpret=True outside tests/"
+                            "benchmarks — pass the opt-in from the caller "
+                            "(ReproBackend(interpret=True) or "
+                            "REPRO_PALLAS_INTERPRET=1)")

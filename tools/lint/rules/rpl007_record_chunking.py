@@ -1,0 +1,53 @@
+"""RPL007: no raw ``// record_every`` chunking outside the shared policy.
+
+PR 4 fixed a silent zero-step-recording bug (``steps < record_every``
+made ``n_rec = 0``: the scan ran nothing and returned an empty history)
+by routing every chunking site through ``core.sparse.record_chunks``
+(clamp to ``[1, steps]``, floor to whole chunks).  A fresh
+``x // record_every`` reintroduces exactly that class unless its inputs
+are already normalized — sites downstream of a ``record_chunks`` call
+waive this rule with that justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import FileContext, Rule, register
+
+
+@register
+class RecordChunking(Rule):
+    code = "RPL007"
+    name = "record-chunking"
+    summary = ("chunked recording derives (record_every, n_rec) via "
+               "core.sparse.record_chunks, never a raw // record_every")
+
+    def applies(self, parts):
+        return "tests" not in parts
+
+    def check(self, ctx: FileContext):
+        # the policy function itself is the one sanctioned division site
+        exempt = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == "record_chunks":
+                exempt.update(
+                    (n.lineno, n.col_offset) for n in ast.walk(node)
+                    if hasattr(n, "lineno"))
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.FloorDiv)):
+                continue
+            if (node.lineno, node.col_offset) in exempt:
+                continue
+            names = {s.id if isinstance(s, ast.Name) else s.attr
+                     for s in (node.left, node.right)
+                     if isinstance(s, (ast.Name, ast.Attribute))}
+            if "record_every" in names:
+                yield ctx.finding(
+                    self.code, node,
+                    "raw `// record_every` chunking — derive "
+                    "(record_every, n_rec) through "
+                    "core.sparse.record_chunks (or waive citing the "
+                    "upstream normalization)")
