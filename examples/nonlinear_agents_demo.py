@@ -1,0 +1,59 @@
+"""Nonlinear personalized agents over the CL-ADMM substrate (DESIGN §18).
+
+Each agent holds a tiny MLP whose flat parameter row rides the engines'
+slot-row layout (models.flatten.ParamFlattener); the primal phase is B
+AdamW steps on the reduced local Lagrangian (core.primal.InexactPrimal)
+instead of the closed-form quadratic solve.  On federated_moons — one
+rotated/flipped two-moons task per cluster, unbalanced per-agent sample
+counts — collaboration beats purely-local training by a wide margin.
+
+Run:  PYTHONPATH=src python examples/nonlinear_agents_demo.py [--smoke]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.primal import InexactPrimal, flat_predictor, solitary_adamw
+from repro.data import federated_moons_problem, model_accuracy
+from repro.models import MLPAgent
+from repro.simulate import NetworkConditions, ScenarioSpec, run_scenario
+from repro.telemetry import TelemetryConfig
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small/fast settings (docs + CI lanes)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rounds, steps = (60, 100) if args.smoke else (300, 400)
+
+    topo, train, test_x, test_y = federated_moons_problem(n=24,
+                                                          seed=args.seed)
+    model = MLPAgent(in_dim=2, hidden=(8,))
+    predict = flat_predictor(model)
+
+    sol = solitary_adamw(train, loss="logistic", model=model, steps=steps,
+                         seed=args.seed)
+    acc_sol = model_accuracy(sol, predict, test_x, test_y)
+    print(f"purely-local AdamW accuracy: {float(acc_sol.mean()):.3f}")
+
+    tr = run_scenario(ScenarioSpec(
+        algo="cl", topology=topo, data=train, mu=0.5, rho=0.2,
+        conditions=NetworkConditions(), rounds=rounds, batch=12,
+        seed=args.seed, record_every=max(1, rounds // 3),
+        theta_sol=np.asarray(sol),
+        primal=InexactPrimal(loss="logistic", model=model, b_steps=10,
+                             lr=0.1),
+        telemetry=TelemetryConfig(enabled=True)))
+    acc = model_accuracy(tr.theta_hist[-1], predict, test_x, test_y)
+    obj = np.asarray(tr.telemetry.objective).sum(axis=1)
+    print(f"collaborative accuracy:      {float(acc.mean()):.3f} "
+          f"(+{100 * float(acc.mean() - acc_sol.mean()):.1f} points)")
+    print(f"Eq.7 objective (telemetry):  {obj[0]:.1f} -> {obj[-1]:.1f}")
+    assert float(acc.mean()) > float(acc_sol.mean())
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,10 @@ from .graph import (Graph, gaussian_kernel_graph, angular_kernel_graph,
                     random_geometric_graph)
 from .losses import (AgentData, pad_datasets, quadratic_loss, hinge_loss,
                      logistic_loss, solitary_mean, solitary_gd,
-                     confidences_from_counts, total_loss, LOSSES)
+                     confidences_from_counts, total_loss, LOSSES,
+                     masked_sum, guarded_loss)
+from .primal import (ExactQuadraticPrimal, InexactPrimal, flat_predictor,
+                     solitary_adamw)
 from .model_propagation import (closed_form, synchronous, async_gossip,
                                 mp_objective, mp_mix_operator,
                                 label_propagation, AsyncTrace)

@@ -22,7 +22,11 @@ by the Z update (paper step 2).
 
 Primal step (paper step 1): exact closed form for the quadratic loss
 (block elimination — see ``_primal_quadratic``), K subgradient steps for
-hinge (§4.2: "ADMM is typically robust to approximate solutions").
+hinge (§4.2: "ADMM is typically robust to approximate solutions").  The
+scenario engines generalize the same robustness into a pluggable
+strategy — ``core.primal`` (DESIGN.md §18) solves the primal with B AdamW
+steps on the reduced Lagrangian, which is how nonlinear agent models ride
+the otherwise-unchanged ADMM substrate.
 """
 
 from __future__ import annotations

@@ -92,6 +92,61 @@ LOSSES = {"quadratic": quadratic_loss, "hinge": hinge_loss,
           "logistic": logistic_loss}
 
 
+def masked_sum(vals, mask):
+    """Sum ``vals`` over live rows with an exact-zero pad contribution.
+
+    The single ``where`` suffices for the *value*; it also zeroes the pad
+    rows' cotangent, so gradients through ``vals`` at pads are exactly 0
+    provided ``vals`` itself was computed from sanitized (finite) inputs —
+    pair with the input-side ``where`` as in :func:`guarded_loss`
+    (the double-where pattern, DESIGN.md §18).
+    """
+    return jnp.sum(jnp.where(mask > 0, vals, 0.0))
+
+
+def guarded_loss(loss: str, predict_fn=None):
+    """Build the guarded local loss ``l(theta; x, y, mask)`` the inexact
+    primal differentiates (DESIGN.md §18).
+
+    Unlike the closed-form sums above — whose pad rows are benign only
+    because ``pad_datasets`` zero-fills them — the returned callable
+    applies the double-where pattern: pad rows of ``x``/``y`` are replaced
+    with zeros *before* the model runs and the per-sample losses are
+    masked *after*, so padding contributes an exactly-zero value AND
+    gradient even if a caller feeds non-finite garbage in the pad slots.
+
+    ``predict_fn(theta, x) -> (m,)`` scores a batch with the flat
+    parameter row (e.g. a ``ParamFlattener``-backed MLP); ``None`` means
+    the linear model ``x @ theta`` for hinge/logistic and mean estimation
+    (``theta`` is the model itself) for quadratic.
+    """
+    if loss == "quadratic":
+        if predict_fn is not None:
+            raise ValueError("quadratic loss is mean estimation — theta is "
+                             "the model; it takes no predict_fn")
+
+        def quadratic(theta, x, y, mask):
+            """Guarded ``sum_j mask_j ||theta - x_j||^2``."""
+            xs = jnp.where(mask[:, None] > 0, x, 0.0)
+            r = theta[None, :] - xs
+            return masked_sum(jnp.sum(r * r, axis=-1), mask)
+        return quadratic
+    if loss not in ("hinge", "logistic"):
+        raise ValueError(f"unknown loss {loss!r}; one of {tuple(LOSSES)}")
+    hinge = loss == "hinge"
+
+    def margin_loss(theta, x, y, mask):
+        """Guarded hinge / logistic loss of ``predict_fn`` scores."""
+        xs = jnp.where(mask[:, None] > 0, x, 0.0)
+        ys = jnp.where(mask > 0, y, 0.0)
+        f = xs @ theta if predict_fn is None else predict_fn(theta, xs)
+        z = ys * f
+        vals = jnp.maximum(0.0, 1.0 - z) if hinge \
+            else jnp.logaddexp(0.0, -z)
+        return masked_sum(vals, mask)
+    return margin_loss
+
+
 def total_loss(loss_fn, theta_all, data: AgentData):
     """Sum_i L_i(theta_i) for per-agent parameters theta_all (n, p)."""
     per_agent = jax.vmap(loss_fn)(theta_all, data.x, data.y, data.mask)

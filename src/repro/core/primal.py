@@ -1,0 +1,193 @@
+"""Pluggable CL-ADMM primal solvers (DESIGN.md §18).
+
+The paper's ADMM derivation (§4.2) never requires the primal phase to be
+solved exactly — only approximately.  This module makes the primal step
+of the CL engines a *strategy*:
+
+* :class:`ExactQuadraticPrimal` — the historical closed-form block
+  elimination for the quadratic loss (``core.sparse.batched_admm_primal``
+  unchanged; the default, and the bit-anchor for everything else);
+* :class:`InexactPrimal` — B AdamW steps on the reduced local Lagrangian
+  (the ``admm_primal_inexact`` dispatch op), supporting arbitrary
+  differentiable losses and nonlinear agent models whose parameters ride
+  the flat slot-row layout via ``models.flatten.ParamFlattener``.
+
+Both are frozen (hashable) dataclasses so they travel through ``jax.jit``
+static arguments of the scenario scans; everything traced (loss
+callables, optimizer config) is resolved *at trace time* inside
+``solve_batch``.  The contract every solver implements:
+
+    solve_batch(w_rows (R, k), live_rows (R, k), z_own, z_nbr, l_own,
+                l_nbr (R, k, p), D_rows (R,), m_rows (R,), sx_rows (R, q),
+                xym, theta_rows (R, p), mu, rho, backend)
+        -> (new_theta (R, p), theta_js (R, k, p))
+
+where ``xym`` is the tuple of per-row local data ``(x (R, m, q),
+y (R, m), mask (R, m))`` when ``needs_data`` is True and ``()``
+otherwise, and ``theta_rows`` is the rows' round-start models (the
+inexact solver's warm start).  The computation must be row-local — both
+the single-device scan and the shard_map'd partition engine call it on
+compacted row blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import AgentData, guarded_loss
+from repro.core.sparse import batched_admm_primal
+from repro.kernels.dispatch import resolve
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+_LOSS_NAMES = ("quadratic", "hinge", "logistic")
+
+
+def flat_predictor(model):
+    """``predict(theta_row (p,), x (m, q)) -> (m,)`` for a flattened agent
+    model — the glue between the engines' slot rows and the model's pytree
+    ``apply`` (used by the inexact primal, serving, and accuracy eval)."""
+    flat = model.flattener()
+
+    def predict(theta, xs):
+        return model.apply(flat.unflatten(theta), xs)
+    return predict
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactQuadraticPrimal:
+    """The paper's closed-form quadratic primal as a PrimalSolver.
+
+    Delegates to ``core.sparse.batched_admm_primal`` with the rows'
+    sufficient statistics (m_i, sum x) — the identical traced program the
+    engines ran before primal solvers were pluggable, so passing this
+    solver explicitly is bit-for-bit ``primal=None``.
+    """
+
+    needs_data: ClassVar[bool] = False
+
+    def solve_batch(self, w_rows, live_rows, z_own, z_nbr, l_own, l_nbr,
+                    D_rows, m_rows, sx_rows, xym, theta_rows, mu, rho,
+                    backend=None):
+        """Closed-form solve of the compacted rows (xym/theta unused)."""
+        return batched_admm_primal(w_rows, live_rows, z_own, z_nbr, l_own,
+                                   l_nbr, D_rows, m_rows, sx_rows, mu, rho,
+                                   backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class InexactPrimal:
+    """DiNNO-style inexact primal: ``b_steps`` AdamW steps per wake-up on
+    ``mu D_l loss(theta) + lambda-coupling + rho-consensus`` (the reduced
+    local Lagrangian — see ``kernels.ref.inexact_primal``).
+
+    ``model`` is a frozen agent model (``models.flatten.MLPAgent`` /
+    ``LoRAAgent``) whose flat parameter rows the engines consensus-couple,
+    or ``None`` for the flat linear/mean model (theta used directly).
+    ``b_steps=None`` selects the provable B -> inf fixed point and is
+    restricted to the quadratic loss with ``model=None`` — the
+    configuration whose trajectories reproduce the exact primal (the
+    anchor tests of tests/test_primal.py).
+    """
+
+    loss: str = "logistic"
+    model: Any = None
+    b_steps: Optional[int] = 8
+    lr: float = 0.05
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    needs_data: ClassVar[bool] = True
+
+    def __post_init__(self):
+        if self.loss not in _LOSS_NAMES:
+            raise ValueError(
+                f"unknown loss {self.loss!r}; one of {_LOSS_NAMES}")
+        if self.b_steps is None and (self.loss != "quadratic"
+                                     or self.model is not None):
+            raise ValueError(
+                "b_steps=None is the closed-form B->inf limit, provable "
+                "only for the quadratic loss with model=None")
+        if self.model is not None and self.loss == "quadratic":
+            raise ValueError("quadratic loss is mean estimation — it takes "
+                             "no model")
+
+    def opt_config(self) -> AdamWConfig:
+        """Per-row AdamW (no decay/clip — the Lagrangian already couples;
+        f32 moments keep the primal deterministic across backends)."""
+        return AdamWConfig(lr=self.lr, b1=self.b1, b2=self.b2, eps=self.eps,
+                           weight_decay=0.0, grad_clip=0.0,
+                           moment_dtype=jnp.float32)
+
+    def loss_fn(self):
+        """The guarded local loss ``l(theta; x, y, mask)`` (flat params)."""
+        if self.model is None:
+            return guarded_loss(self.loss)
+        return guarded_loss(self.loss, flat_predictor(self.model))
+
+    def batch_local_loss(self, theta_all, x, y, mask):
+        """(n,) guarded local losses — telemetry's Eq. 7 loss term."""
+        return jax.vmap(self.loss_fn())(theta_all, x, y, mask)
+
+    def solve_batch(self, w_rows, live_rows, z_own, z_nbr, l_own, l_nbr,
+                    D_rows, m_rows, sx_rows, xym, theta_rows, mu, rho,
+                    backend=None):
+        """vmap the rowwise ``admm_primal_inexact`` op over the compacted
+        rows (m_rows/sx_rows are the exact solver's sufficient statistics
+        — unused here except by the b_steps=None closed form, which
+        recomputes them row-locally from xym)."""
+        fn = resolve("admm_primal_inexact", backend)
+        loss_fn = self.loss_fn()
+        opt = self.opt_config()
+        b_steps = self.b_steps
+        x, y, mask = xym
+
+        def row(w, lv, zo, zn, lo, ln, d, xr, yr, mr, t0):
+            return fn(w, lv, zo, zn, lo, ln, d, xr, yr, mr, t0, mu, rho,
+                      loss_fn=loss_fn, b_steps=b_steps, opt=opt)
+        return jax.vmap(row)(w_rows, live_rows, z_own, z_nbr, l_own, l_nbr,
+                             D_rows, x, y, mask, theta_rows)
+
+
+def solitary_adamw(data: AgentData, *, loss: str = "logistic", model=None,
+                   steps: int = 200, opt: Optional[AdamWConfig] = None,
+                   seed: int = 0, theta0=None, init_scale: float = 1.0):
+    """Purely-local training: per-agent AdamW on the guarded local loss.
+
+    The "no collaboration" baseline of the ``federated_moons`` acceptance
+    experiment, and the ``theta_sol`` warm start nonlinear
+    ``run_cl_scenario`` runs need (solvers inherit the slot-row width from
+    it).  Returns the (n, p) flat parameter rows after ``steps`` updates.
+    """
+    if opt is None:
+        opt = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                          moment_dtype=jnp.float32)
+    if model is None:
+        loss_fn = guarded_loss(loss)
+    else:
+        loss_fn = guarded_loss(loss, flat_predictor(model))
+    n = data.n
+    if theta0 is None:
+        if model is None:
+            theta0 = jnp.zeros((n, data.x.shape[-1]), jnp.float32)
+        else:
+            flat = model.flattener()
+            keys = jax.random.split(jax.random.PRNGKey(seed), n)
+            theta0 = jax.vmap(
+                lambda k: flat.flatten(model.init(k, init_scale)))(keys)
+    grad = jax.vmap(jax.grad(loss_fn))
+
+    @jax.jit
+    def run(th0, x, y, mask):
+        def step(carry, _):
+            th, st = carry
+            th, st, _ = adamw_update(grad(th, x, y, mask), st, th, opt)
+            return (th, st), None
+        (th, _), _ = jax.lax.scan(step, (th0, adamw_init(th0, opt)), None,
+                                  length=steps)
+        return th
+    return run(theta0, data.x, data.y, data.mask)

@@ -329,6 +329,12 @@ def batched_admm_primal(w_rows, live_rows, z_own_rows, z_nbr_rows,
 
     Dispatched through "admm_primal": row-wise implementations are vmapped;
     ``*_sharded`` implementations consume the stacked rows directly.
+
+    This closed form is also one PrimalSolver among several: the engines'
+    ``primal=None`` default calls it directly, and
+    ``core.primal.ExactQuadraticPrimal`` delegates here verbatim, while
+    ``core.primal.InexactPrimal`` replaces it with B AdamW steps for
+    nonquadratic losses / nonlinear agent models (DESIGN.md §18).
     """
     if backend is None:
         from repro.kernels.dispatch import _env_default

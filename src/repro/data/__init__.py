@@ -3,9 +3,11 @@
 from .synthetic import (PersonalizedLMConfig, personalized_token_stream,
                         make_lm_batches, mean_estimation_problem,
                         linear_classification_problem, accuracy,
+                        federated_moons_problem, model_accuracy,
                         delay_pattern, undelay_pattern)
 
 __all__ = ["PersonalizedLMConfig", "personalized_token_stream",
            "make_lm_batches", "mean_estimation_problem",
-           "linear_classification_problem", "accuracy", "delay_pattern",
+           "linear_classification_problem", "accuracy",
+           "federated_moons_problem", "model_accuracy", "delay_pattern",
            "undelay_pattern"]

@@ -119,6 +119,84 @@ def accuracy(theta_all, data: AgentData) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Nonlinear personalized boundaries — federated two moons (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+def federated_moons_problem(n: int = 24, n_clusters: int = 2,
+                            m_lo: int = 3, m_hi: int = 8,
+                            noise: float = 0.15, n_test: int = 256,
+                            seed: int = 0, k_intra: int = 4,
+                            k_inter: int = 1):
+    """Per-cluster nonlinear decision boundaries for the inexact-primal
+    acceptance run (ISSUE 10): tiny local samples of a two-moons boundary
+    that only collaboration can resolve.
+
+    Each cluster owns a transformed copy of the two-moons problem —
+    cluster ``c``'s points are rotated by ``pi c / n_clusters`` about the
+    moons' centroid, and odd clusters additionally flip their labels —
+    and every agent draws just ``m_i ~ U{m_lo..m_hi}`` training points
+    from its cluster's distribution: far too few to learn the nonlinear
+    boundary alone, plenty in aggregate per cluster.  The
+    planted-partition topology (intra-cluster ring + random links,
+    ``k_inter`` cross-cluster noise links per agent) gives the CL-ADMM
+    consensus the right neighbors to pool with — while the label flips
+    make naive *global* averaging actively harmful, the personalization
+    regime of the paper.
+
+    Returns ``(topo, train, test_x, test_y)``: a SparseTopology, the
+    padded train AgentData (labels in {-1, +1} for the margin losses),
+    and per-agent test sets ``test_x (n, n_test, 2)`` /
+    ``test_y (n, n_test)`` drawn from each agent's own cluster.
+    """
+    from repro.simulate.topology import planted_partition_topology
+
+    rng = np.random.default_rng(seed)
+    topo = planted_partition_topology(n, n_clusters=n_clusters,
+                                      k_intra=k_intra, k_inter=k_inter,
+                                      seed=seed)
+    center = np.array([0.5, 0.25])
+
+    def sample(ci, m, sub_seed):
+        pts, labels = two_moons(m, noise=noise, seed=sub_seed)
+        ang = np.pi * ci / n_clusters
+        rot = np.array([[np.cos(ang), -np.sin(ang)],
+                        [np.sin(ang), np.cos(ang)]])
+        pts = (pts - center) @ rot.T
+        y = np.where(labels == 0, 1.0, -1.0)
+        return pts, (-y if ci % 2 else y)
+
+    m_i = rng.integers(m_lo, m_hi + 1, n)
+    xs, ys, tx, ty = [], [], [], []
+    for i in range(n):
+        ci = int(topo.groups[i])
+        pts, y = sample(ci, int(m_i[i]), int(rng.integers(2 ** 31)))
+        xs.append(pts)
+        ys.append(y)
+        pts_t, y_t = sample(ci, n_test, int(rng.integers(2 ** 31)))
+        tx.append(pts_t)
+        ty.append(y_t)
+    return (topo, pad_datasets(xs, ys),
+            np.stack(tx).astype(np.float32), np.stack(ty).astype(np.float32))
+
+
+def model_accuracy(theta_all, predict_fn, x, y) -> np.ndarray:
+    """Per-agent accuracy of flat-row models under a score function.
+
+    The nonlinear counterpart of :func:`accuracy`:
+    ``predict_fn(theta (p,), x (m, q)) -> (m,)`` scores whose sign is the
+    predicted ±1 label (e.g. ``core.primal.flat_predictor(model)``).
+    theta_all (n, p), x (n, m, q), y (n, m) -> (n,) accuracies.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    scores = np.asarray(jax.vmap(predict_fn)(
+        jnp.asarray(theta_all, jnp.float32), jnp.asarray(x, jnp.float32)))
+    return (np.sign(scores) == np.sign(np.asarray(y))).mean(axis=1)
+
+
+# ---------------------------------------------------------------------------
 # Personalized LM streams
 # ---------------------------------------------------------------------------
 

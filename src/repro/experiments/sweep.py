@@ -541,3 +541,19 @@ def run_scenario_sweep(base, **axes: Sequence) -> ScenarioSweepResult:
     specs = tuple(dataclasses.replace(base, **cell) for cell in cells)
     return ScenarioSweepResult(cells, specs,
                                tuple(run_scenario(s) for s in specs))
+
+
+def inexact_primal_axis(b_steps: Sequence[Optional[int]], **kw):
+    """A ``primal=`` axis for :func:`run_scenario_sweep`: one
+    ``core.primal.InexactPrimal`` per inner-step budget (``None`` = the
+    B -> inf closed form, the exact-engine anchor column — DESIGN.md §18).
+
+    Solvers are frozen/hashable, so cells along this axis share the
+    engines' jit cache per distinct solver config::
+
+        run_scenario_sweep(base, primal=inexact_primal_axis(
+            [1, 4, 16, None], loss="quadratic", lr=0.2))
+    """
+    from repro.core.primal import InexactPrimal
+
+    return tuple(InexactPrimal(b_steps=b, **kw) for b in b_steps)

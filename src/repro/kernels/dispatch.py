@@ -422,6 +422,25 @@ def _admm_primal_xla_sharded(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
 
 
 # ---------------------------------------------------------------------------
+# admm_primal_inexact — B AdamW steps on the reduced local Lagrangian
+# (DiNNO-style inexact primal for arbitrary differentiable losses,
+# DESIGN.md §18).  Canonical rowwise signature:
+#   (w (k,), live (k,) bool, z_own (k, p), z_nbr (k, p), l_own (k, p),
+#    l_nbr (k, p), D_l, x (m, q), y (m,), mask (m,), theta0 (p,), mu, rho,
+#    *, loss_fn, b_steps, opt) -> (theta_l (p,), theta_js (k, p))
+# loss_fn / b_steps / opt are trace-time constants supplied by the
+# PrimalSolver (core.primal.InexactPrimal), which vmaps the row op over
+# the round's compacted agent rows; b_steps=None is the provable B -> inf
+# fixed point (quadratic loss only — the exact quadratic_primal solve).
+# ---------------------------------------------------------------------------
+
+
+register("admm_primal_inexact", "reference")(ref.inexact_primal)
+# the reference is already a fused scan of AdamW steps; CPU/GPU reuse it
+register("admm_primal_inexact", "xla")(ref.inexact_primal)
+
+
+# ---------------------------------------------------------------------------
 # admm_edge — fused CL-ADMM Z + dual update for a batch of edges
 # (paper §4.2 steps 2-3): 8 inputs (E, p), rho kw-only -> 6 outputs (E, p)
 # ---------------------------------------------------------------------------

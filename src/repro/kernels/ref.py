@@ -7,6 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.optim.adamw import adamw_init, adamw_update
+
 NEG_INF = -1e30
 
 
@@ -66,6 +68,77 @@ def quadratic_primal(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s,
     theta_l = rhs / a
     theta_js = (w[:, None] * theta_l[None, :] + b) / denom[:, None]
     return theta_l, theta_js
+
+
+def inexact_primal(w, live, z_own_s, z_nbr_s, l_own_s, l_nbr_s, D_l,
+                   x, y, mask, theta0, mu, rho, *, loss_fn, b_steps, opt):
+    """Inexact CL-ADMM primal: ``b_steps`` AdamW steps on the *reduced*
+    local Lagrangian (DiNNO-style; DESIGN.md §18), one agent's slot row.
+
+    The neighbor copies are eliminated in closed form each step — the
+    slot terms are quadratic in ``theta_js``, whose inner argmin is
+    ``theta_js(theta) = (w theta + rho z_nbr - l_nbr) / (w + rho)`` — so
+    the objective seen by the optimizer is
+
+        F(theta) = mu D_l loss_fn(theta; x, y, mask)
+                 + sum_live [ l_own (theta - z_own)
+                              + rho/2 ||theta - z_own||^2 ]
+                 + sum_live [ w/2 ||theta - theta_js||^2
+                              + l_nbr (theta_js - z_nbr)
+                              + rho/2 ||theta_js - z_nbr||^2 ].
+
+    By the envelope theorem the eliminated copies contribute their partial
+    gradient only through the explicit theta terms, and for the quadratic
+    loss dF/dtheta = a theta - rhs with exactly the (a, rhs) of
+    :func:`quadratic_primal` — the unique minimizer of F IS the exact
+    block-elimination solve.  ``b_steps=None`` therefore evaluates that
+    B -> inf fixed point in closed form (callers gate it to the quadratic
+    loss, where the limit is provable); a finite ``b_steps`` runs AdamW
+    from the warm start ``theta0`` (the agent's current model).
+
+    w: (k,) edge weights (0 at pads); live: (k,) bool; z/l slices: (k, p);
+    D_l scalar; x (m, q), y (m,), mask (m,) the agent's padded local data;
+    theta0: (p,) warm start; loss_fn(theta, x, y, mask) -> scalar (a
+    guarded ``core.losses`` loss); opt: AdamWConfig.  Returns
+    (theta_l (p,), theta_js (k, p)) — dead slots of theta_js carry the
+    same don't-care values as :func:`quadratic_primal` (the engines
+    overwrite them under the live mask).
+    """
+    if b_steps is None:
+        m_l = jnp.sum(mask)
+        sx = jnp.sum(x * mask[:, None], axis=0)
+        return quadratic_primal(w, live, z_own_s, z_nbr_s, l_own_s,
+                                l_nbr_s, D_l, m_l, sx, mu, rho)
+
+    b = rho * z_nbr_s - l_nbr_s                               # (k, p)
+    denom = jnp.where(live, w + rho, 1.0)                     # (k,)
+
+    def theta_js_of(theta):
+        return (w[:, None] * theta[None, :] + b) / denom[:, None]
+
+    def objective(theta):
+        tjs = theta_js_of(theta)
+        d_own = theta[None, :] - z_own_s
+        d_js = theta[None, :] - tjs
+        d_nbr = tjs - z_nbr_s
+        slot = (jnp.sum(l_own_s * d_own, axis=-1)
+                + 0.5 * rho * jnp.sum(d_own * d_own, axis=-1)
+                + 0.5 * w * jnp.sum(d_js * d_js, axis=-1)
+                + jnp.sum(l_nbr_s * d_nbr, axis=-1)
+                + 0.5 * rho * jnp.sum(d_nbr * d_nbr, axis=-1))
+        return (mu * D_l * loss_fn(theta, x, y, mask)
+                + jnp.sum(jnp.where(live, slot, 0.0)))
+
+    grad = jax.grad(objective)
+
+    def step(carry, _):
+        theta, opt_state = carry
+        theta, opt_state, _ = adamw_update(grad(theta), opt_state, theta, opt)
+        return (theta, opt_state), None
+
+    (theta_l, _), _ = jax.lax.scan(
+        step, (theta0, adamw_init(theta0, opt)), None, length=b_steps)
+    return theta_l, theta_js_of(theta_l)
 
 
 def flash_attention(q, k, v, *, window: Optional[int] = None):

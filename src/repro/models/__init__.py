@@ -1,7 +1,9 @@
 """Model zoo: unified decoder engine over 6 architecture families."""
 
 from .common import ModelConfig, adapt_pspec, adapt_pspec_tree, cross_entropy
+from .flatten import LoRAAgent, MLPAgent, ParamFlattener
 from .model import Model, AGENT_AXES
 
 __all__ = ["ModelConfig", "Model", "AGENT_AXES", "adapt_pspec",
-           "adapt_pspec_tree", "cross_entropy"]
+           "adapt_pspec_tree", "cross_entropy", "ParamFlattener",
+           "MLPAgent", "LoRAAgent"]

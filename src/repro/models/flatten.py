@@ -1,0 +1,181 @@
+"""Flat slot-row parameter layout for neural agents (DESIGN.md §18).
+
+The collaborative engines treat every agent model as one f32 row of width
+p — the slot-row layout the ADMM state arrays, halo exchange, telemetry,
+and serving planes are all built on.  :class:`ParamFlattener` maps an
+arbitrary parameter pytree onto such a row (leaves concatenated in treedef
+order) and back, so small nonlinear models ride the existing CL-ADMM
+substrate unchanged: the engines consensus-couple the rows, and the
+inexact primal (``core.primal.InexactPrimal``) unflattens them per agent
+to evaluate the local loss.
+
+Two agent-model families cover the paper's "beyond linear" regime:
+
+* :class:`MLPAgent` — a tiny fully-trainable MLP (the ``federated_moons``
+  acceptance model);
+* :class:`LoRAAgent` — a frozen random-feature layer with a trainable
+  low-rank adapter + head, the LoRA-shaped parameterization where the
+  consensus rows hold only the adapter.
+
+Both are frozen dataclasses (hashable — they ride through ``jax.jit``
+static arguments inside :class:`~repro.core.primal.InexactPrimal`), so
+they hold no arrays: parameters come from ``init``, and the LoRA base
+weights are derived deterministically from ``base_seed`` at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ACTIVATIONS = {"tanh": jnp.tanh, "relu": jax.nn.relu}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamFlattener:
+    """Bijection between a fixed parameter pytree and a flat f32 row.
+
+    Built from a template pytree (shapes + treedef only — no arrays are
+    retained, so the flattener is hashable and jit-static).  ``flatten``
+    and ``unflatten`` are row-local jnp programs: used under ``vmap`` they
+    map an agent-stacked pytree to the (n, p) slot-row block and back.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+
+    @classmethod
+    def from_template(cls, tree) -> "ParamFlattener":
+        """Build from any pytree of arrays (values are ignored)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple(tuple(int(d) for d in np.shape(leaf))
+                       for leaf in leaves)
+        return cls(treedef, shapes)
+
+    @property
+    def dim(self) -> int:
+        """Total flat width p (the engines' model-row dimension)."""
+        return sum(int(np.prod(s, dtype=np.int64)) for s in self.shapes)
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree -> (dim,) f32 row (leaves in treedef order)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [jnp.reshape(leaf, (-1,)).astype(jnp.float32)
+             for leaf in leaves])
+
+    def unflatten(self, vec: jnp.ndarray):
+        """(dim,) row -> pytree with the template's structure and shapes."""
+        leaves = []
+        off = 0
+        for shape in self.shapes:
+            size = int(np.prod(shape, dtype=np.int64))
+            leaves.append(jnp.reshape(vec[off:off + size], shape))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPAgent:
+    """Tiny per-agent MLP ``R^in_dim -> R`` (scalar score head).
+
+    Parameters are a tuple of ``{"w", "b"}`` layer dicts; ``apply`` maps a
+    (m, in_dim) batch to (m,) scores whose sign is the predicted ±1 label.
+    """
+
+    in_dim: int
+    hidden: Tuple[int, ...] = (8,)
+    activation: str = "tanh"
+
+    def _dims(self) -> Tuple[Tuple[int, int], ...]:
+        sizes = (self.in_dim,) + tuple(self.hidden) + (1,)
+        return tuple(zip(sizes[:-1], sizes[1:]))
+
+    def init(self, key, scale: float = 1.0):
+        """Glorot-style random parameters for one agent."""
+        params = []
+        for fan_in, fan_out in self._dims():
+            key, kw = jax.random.split(key)
+            w = jax.random.normal(kw, (fan_in, fan_out), jnp.float32) \
+                * (scale / math.sqrt(fan_in))
+            params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+        return tuple(params)
+
+    def apply(self, params, x) -> jnp.ndarray:
+        """(m, in_dim) -> (m,) scores."""
+        act = _ACTIVATIONS[self.activation]
+        h = x
+        for layer in params[:-1]:
+            h = act(h @ layer["w"] + layer["b"])
+        out = h @ params[-1]["w"] + params[-1]["b"]
+        return out[..., 0]
+
+    def flattener(self) -> ParamFlattener:
+        """The slot-row layout of this architecture's parameters."""
+        template = tuple(
+            {"w": np.zeros((fi, fo), np.float32),
+             "b": np.zeros((fo,), np.float32)}
+            for fi, fo in self._dims())
+        return ParamFlattener.from_template(template)
+
+
+@functools.lru_cache(maxsize=None)
+def _lora_base(in_dim: int, width: int, base_seed: int):
+    """Frozen random-feature first layer shared by every LoRAAgent with the
+    same config (host-side RNG, derived once per config — never inside a
+    traced body)."""
+    rng = np.random.default_rng(base_seed)
+    w0 = rng.standard_normal((in_dim, width)) / math.sqrt(in_dim)
+    b0 = rng.uniform(-1.0, 1.0, width)
+    return (jnp.asarray(w0, jnp.float32), jnp.asarray(b0, jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAAgent:
+    """LoRA-shaped agent: frozen random-feature layer + trainable low-rank
+    adapter and linear head.
+
+    The effective first-layer weight is ``W0 + A @ B`` with frozen
+    ``W0 (in_dim, width)`` (derived from ``base_seed``) and trainable
+    ``A (in_dim, rank)``, ``B (rank, width)``; the consensus rows carry
+    only the adapter + head, so the flat dimension is
+    ``rank * (in_dim + width) + width + 1`` regardless of ``width``.
+    """
+
+    in_dim: int
+    width: int = 16
+    rank: int = 2
+    base_seed: int = 0
+    activation: str = "tanh"
+
+    def init(self, key, scale: float = 0.1):
+        """Adapter (A random, B zero — standard LoRA init) + head."""
+        ka, kh = jax.random.split(key)
+        a = jax.random.normal(ka, (self.in_dim, self.rank), jnp.float32) \
+            * (scale / math.sqrt(self.in_dim))
+        head = jax.random.normal(kh, (self.width,), jnp.float32) \
+            * (1.0 / math.sqrt(self.width))
+        return {"a": a, "b": jnp.zeros((self.rank, self.width), jnp.float32),
+                "head": head, "bias": jnp.zeros((), jnp.float32)}
+
+    def apply(self, params, x) -> jnp.ndarray:
+        """(m, in_dim) -> (m,) scores through the adapted frozen layer."""
+        w0, b0 = _lora_base(self.in_dim, self.width, self.base_seed)
+        act = _ACTIVATIONS[self.activation]
+        h = act(x @ (w0 + params["a"] @ params["b"]) + b0)
+        return h @ params["head"] + params["bias"]
+
+    def flattener(self) -> ParamFlattener:
+        """The slot-row layout of the trainable (adapter + head) leaves."""
+        template = {
+            "a": np.zeros((self.in_dim, self.rank), np.float32),
+            "b": np.zeros((self.rank, self.width), np.float32),
+            "head": np.zeros((self.width,), np.float32),
+            "bias": np.zeros((), np.float32)}
+        return ParamFlattener.from_template(template)

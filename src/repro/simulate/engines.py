@@ -631,10 +631,10 @@ def _reshape_stream(stream: EventStream, n_rec: int, record_every: int):
         stream._replace(active_frac=None))
 
 
-@partial(jax.jit, static_argnames=("mu", "rho", "backend", "tel"))
+@partial(jax.jit, static_argnames=("mu", "rho", "backend", "tel", "primal"))
 def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
-                      tel_args=(), *, mu: float, rho: float, backend=None,
-                      tel: bool = False):
+                      tel_args=(), xym=(), *, mu: float, rho: float,
+                      backend=None, tel: bool = False, primal=None):
     """Batched-event CL-ADMM rounds over a precomputed event stream.
 
     One round = one (record_every-chunked) EventStream slice of B wake-ups:
@@ -663,6 +663,12 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
     history; ``tel_args`` then carries the extra sufficient statistic
     (sxx,) the Eq. 7 objective needs.  At the default False the traced
     program is exactly the pre-telemetry scan.
+
+    ``primal`` (static) is a PrimalSolver (``core.primal``); ``None``
+    keeps the inline exact quadratic solve — the identical traced program
+    the scan ran before primal solvers were pluggable.  A data-hungry
+    solver (``primal.needs_data``) additionally receives the rows' padded
+    local datasets via ``xym = (x, y, mask)``.
     """
     n, k = nbr_w.shape
     edge_fn = resolve("cl_edge_step", backend)
@@ -673,10 +679,17 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
         upd = jnp.concatenate([ev_t.i, ev_t.j])                    # (2B,)
         got = jnp.concatenate([ev_t.deliver_ji, ev_t.deliver_ij])
         live_rows = jnp.arange(k)[None, :] < deg_count[upd][:, None]
-        new_theta, theta_js = batched_admm_primal(
-            nbr_w[upd], live_rows, st.Z_own[upd], st.Z_nbr[upd],
-            st.L_own[upd], st.L_nbr[upd], D[upd], m_counts[upd], sx[upd],
-            mu, rho, backend)
+        if primal is None:
+            new_theta, theta_js = batched_admm_primal(
+                nbr_w[upd], live_rows, st.Z_own[upd], st.Z_nbr[upd],
+                st.L_own[upd], st.L_nbr[upd], D[upd], m_counts[upd],
+                sx[upd], mu, rho, backend)
+        else:
+            xr = tuple(a[upd] for a in xym) if primal.needs_data else ()
+            new_theta, theta_js = primal.solve_batch(
+                nbr_w[upd], live_rows, st.Z_own[upd], st.Z_nbr[upd],
+                st.L_own[upd], st.L_nbr[upd], D[upd], m_counts[upd],
+                sx[upd], xr, st.theta[upd], mu, rho, backend)
         new_K = jnp.where(live_rows[:, :, None], theta_js, st.K[upd])
         rowu = jnp.where(got, upd, n)
         # scatter: idempotent — duplicate agents in upd derive identical
@@ -711,10 +724,16 @@ def _cl_scenario_scan(nbr_w, deg_count, D, m_counts, sx, state0, ev,
         carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
         st = carry[0]
         if tel:
-            (sxx,) = tel_args
             live = jnp.arange(k)[None, :] < deg_count[:, None]
-            obj = tmetrics.cl_local_objective(st.theta, st.K, nbr_w, live,
-                                              D, m_counts, sx, sxx, mu)
+            if primal is not None and primal.needs_data:
+                loss_vec = primal.batch_local_loss(st.theta, *xym)
+                obj = tmetrics.cl_local_objective_from_loss(
+                    st.theta, st.K, nbr_w, live, D, loss_vec, mu)
+            else:
+                (sxx,) = tel_args
+                obj = tmetrics.cl_local_objective(st.theta, st.K, nbr_w,
+                                                  live, D, m_counts, sx,
+                                                  sxx, mu)
             stale, updates = carry[2:]
             return carry, (st.theta, obj, stale, updates)
         return carry, st.theta
@@ -733,8 +752,8 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
                     theta_sol=None, state: Optional[SparseADMMState] = None,
                     stream: Optional[EventStream] = None,
                     backend: Optional[ReproBackend] = None,
-                    telemetry: Optional[TelemetryConfig] = None
-                    ) -> CLSimTrace:
+                    telemetry: Optional[TelemetryConfig] = None,
+                    primal=None) -> CLSimTrace:
     """Asynchronous CL-ADMM (paper §4.2) under a fault scenario.
 
     The same batched-event substrate as ``run_mp_scenario``: the fault
@@ -748,6 +767,14 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
     round is exactly ``batch`` ticks of ``sparse_async_admm`` (same primal,
     same edge update, collisions coalesced deterministically).  The horizon
     follows the shared recording policy (``core.sparse.record_chunks``).
+
+    ``primal`` selects the primal-phase solver (``core.primal``): ``None``
+    / ``ExactQuadraticPrimal()`` is the closed-form quadratic solve;
+    ``InexactPrimal(...)`` runs B AdamW steps on the local Lagrangian,
+    supporting nonlinear losses and flattened neural agents — then
+    ``theta_sol`` must carry the (n, p) flat parameter rows (e.g. from
+    ``core.primal.solitary_adamw``), which fix the slot-row width p
+    independently of the feature dimension of ``data.x``.
     """
     tabs = topo.device_tables()
     n = topo.n
@@ -773,16 +800,20 @@ def run_cl_scenario(topo: SparseTopology, data: AgentData, mu: float,
     x = jnp.asarray(data.x, jnp.float32)
     m_counts = jnp.sum(mask, axis=1)
     sx = jnp.sum(x * mask[:, :, None], axis=1)
+    needs_data = primal is not None and primal.needs_data
+    xym = (x, jnp.asarray(data.y, jnp.float32), mask) if needs_data else ()
     tel = telemetry_on(telemetry)
     tel_args = ()
-    if tel:
+    if tel and not needs_data:
+        # the quadratic objective's sufficient statistic; data-hungry
+        # solvers evaluate their loss directly from xym instead
         sxx = jnp.sum(mask * jnp.sum(x * x, axis=-1), axis=1)
         tel_args = (sxx,)
 
     ev = _reshape_stream(stream, n_rec, record_every)
     st, hist = _cl_scenario_scan(
         tabs.nbr_w, tabs.deg_count, D, m_counts, sx, state, ev, tel_args,
-        mu=mu, rho=rho, backend=backend, tel=tel)
+        xym, mu=mu, rho=rho, backend=backend, tel=tel, primal=primal)
     delivered, dropped, invalid = stream_totals(stream)
     active_hist = np.asarray(stream.active_frac).reshape(
         n_rec, record_every)[:, -1]

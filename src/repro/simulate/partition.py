@@ -622,15 +622,15 @@ def run_mp_scenario_sharded(topo: SparseTopology, theta_sol, c, alpha: float,
 @partial(jax.jit,
          static_argnames=("mesh", "mu", "rho", "k", "m", "H", "E", "U",
                           "n_rec", "record_every", "exchange", "codec",
-                          "tel"))
+                          "tel", "primal"))
 def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
                      nbr_w, deg_count, D, m_counts, sx,
                      fetch, bnd_pos, halo_src_shard, halo_src_pos,
-                     tel_args=(), *,
+                     tel_args=(), xym=(), *,
                      mu: float, rho: float, k: int, m: int, H: int, E: int,
                      U: int, n_rec: int, record_every: int, exchange: str,
                      codec: HaloCodec = HaloCodec("f32"),
-                     tel: bool = False):
+                     tel: bool = False, primal=None):
     """shard_map'd CL-ADMM rounds: the six ADMM state arrays are row-sharded
     (P * m leading axis); the event stream is replicated and replayed per
     shard exactly as the MP engine does.
@@ -641,13 +641,21 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
     its halo via one exchange per round, placed *between* the primal and
     edge phases (the edge half-step reads post-primal remote models).  The
     previous round's ext buffer serves the one-round-stale payloads.
+
+    ``primal`` (static) mirrors ``engines._cl_scenario_scan``: ``None``
+    keeps the inline exact quadratic solve; a data-hungry PrimalSolver
+    receives the rows' padded local data via the row-sharded ``xym``
+    blocks (the solve is row-local, so sharding it is free).
     """
     P_ = mesh_shards(mesh)
     batch = stream.i.shape[-1]
+    n_xym = 3 if (primal is not None and primal.needs_data) else 0
 
     def block_fn(ev, theta0_blk, K0_blk, Zo_blk, Zn_blk, Lo_blk, Ln_blk,
                  w_blk, degc_blk, D_blk, mc_blk, sx_blk,
-                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk, *tel_blks):
+                 fetch_blk, bnd_blk, hsrc_blk, hpos_blk, *extra_blks):
+        xym_blk = extra_blks[:n_xym]
+        tel_blks = extra_blks[n_xym:]
         fetch_q = fetch_blk[0]
         bnd = bnd_blk[0]
         hsrc, hpos = hsrc_blk[0], hpos_blk[0]
@@ -684,9 +692,17 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
             usel = jnp.nonzero(got, size=U, fill_value=2 * E)[0]
             lu = _take_padded(f_u, usel, m)
             lu_c = jnp.minimum(lu, m - 1)
-            new_theta, theta_js = batched_admm_primal(
-                w_blk[lu_c], live_blk[lu_c], Zo[lu_c], Zn[lu_c], Lo[lu_c],
-                Ln[lu_c], D_blk[lu_c], mc_blk[lu_c], sx_blk[lu_c], mu, rho)
+            if primal is None:
+                new_theta, theta_js = batched_admm_primal(
+                    w_blk[lu_c], live_blk[lu_c], Zo[lu_c], Zn[lu_c],
+                    Lo[lu_c], Ln[lu_c], D_blk[lu_c], mc_blk[lu_c],
+                    sx_blk[lu_c], mu, rho)
+            else:
+                xr = tuple(a[lu_c] for a in xym_blk)
+                new_theta, theta_js = primal.solve_batch(
+                    w_blk[lu_c], live_blk[lu_c], Zo[lu_c], Zn[lu_c],
+                    Lo[lu_c], Ln[lu_c], D_blk[lu_c], mc_blk[lu_c],
+                    sx_blk[lu_c], xr, theta[lu_c], mu, rho, None)
             new_K = jnp.where(live_blk[lu_c][:, :, None], theta_js, K[lu_c])
             rowp = jnp.where(lu < m, lu, m)
             # scatter: idempotent — duplicate rows in lu derive identical
@@ -733,10 +749,16 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
         def outer(carry, ev_blk):
             carry, _ = jax.lax.scan(round_fn, carry, ev_blk)
             if tel:
-                (sxx_blk,) = tel_blks
-                obj = tmetrics.cl_local_objective(
-                    carry[0], carry[1], w_blk, live_blk, D_blk, mc_blk,
-                    sx_blk, sxx_blk, mu)
+                if primal is not None and primal.needs_data:
+                    loss_vec = primal.batch_local_loss(carry[0], *xym_blk)
+                    obj = tmetrics.cl_local_objective_from_loss(
+                        carry[0], carry[1], w_blk, live_blk, D_blk,
+                        loss_vec, mu)
+                else:
+                    (sxx_blk,) = tel_blks
+                    obj = tmetrics.cl_local_objective(
+                        carry[0], carry[1], w_blk, live_blk, D_blk, mc_blk,
+                        sx_blk, sxx_blk, mu)
                 stale, updates = carry[8:]
                 return carry, (carry[0], obj, stale, updates[None])
             return carry, carry[0]
@@ -762,11 +784,11 @@ def _sharded_cl_scan(mesh, stream, theta0, K0, Zo0, Zn0, Lo0, Ln0,
     run = shard_map_1d(
         block_fn, mesh,
         in_specs=(_scan_specs(P(), ev_scan),) + (row,) * 11
-        + (per_shard,) * 4 + (row,) * len(tel_args),
+        + (per_shard,) * 4 + (row,) * n_xym + (row,) * len(tel_args),
         out_specs=out_specs)
     return run(ev_scan, theta0, K0, Zo0, Zn0, Lo0, Ln0, nbr_w, deg_count,
                D, m_counts, sx, fetch, bnd_pos, halo_src_shard,
-               halo_src_pos, *tel_args)
+               halo_src_pos, *xym, *tel_args)
 
 
 def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
@@ -780,8 +802,8 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
                             halo_codec="f32",
                             partition_seed: int = 0,
                             stream: Optional[EventStream] = None,
-                            telemetry: Optional[TelemetryConfig] = None
-                            ) -> ShardedSimTrace:
+                            telemetry: Optional[TelemetryConfig] = None,
+                            primal=None) -> ShardedSimTrace:
     """``simulate.engines.run_cl_scenario`` over a graph partitioned across
     the sim mesh.
 
@@ -796,6 +818,12 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
     ``halo_codec`` — here the codec covers the full stacked
     ``[theta | K | L_own | L_nbr]`` payload rows, with one int8 scale per
     model/dual component.
+
+    ``primal`` selects the primal-phase solver exactly as in
+    ``engines.run_cl_scenario`` (``core.primal``); the primal solve is
+    row-local, so the inexact solver shards the same way the exact one
+    does — the agents' padded local datasets are row-sharded alongside
+    the ADMM state.
     """
     mesh, P_, assignment, part = _sharded_setup(
         topo, n_shards, mesh, assignment, partition_seed)
@@ -825,6 +853,11 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
     x = jnp.asarray(data.x, jnp.float32)
     m_counts = np.asarray(jnp.sum(mask, axis=1))
     sx = np.asarray(jnp.sum(x * mask[:, :, None], axis=1))
+    needs_data = primal is not None and primal.needs_data
+    xym = ()
+    if needs_data:
+        xym = tuple(jnp.asarray(part.shard_rows(np.asarray(a)))
+                    for a in (x, jnp.asarray(data.y, jnp.float32), mask))
     sharded = dict(
         theta0=part.shard_rows(np.asarray(state0.theta)),
         K0=part.shard_rows(np.asarray(state0.K)),
@@ -841,7 +874,7 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
 
     tel = telemetry_on(telemetry)
     tel_args = ()
-    if tel:
+    if tel and not needs_data:
         sxx = np.asarray(jnp.sum(mask * jnp.sum(x * x, axis=-1), axis=1))
         tel_args = (jnp.asarray(part.shard_rows(sxx)),)
     codec = resolve_halo_codec(halo_codec)
@@ -850,9 +883,10 @@ def run_cl_scenario_sharded(topo: SparseTopology, data, mu: float,
         fetch=jnp.asarray(part.fetch), bnd_pos=jnp.asarray(part.bnd_pos),
         halo_src_shard=jnp.asarray(part.halo_src_shard),
         halo_src_pos=jnp.asarray(part.halo_src_pos), tel_args=tel_args,
+        xym=xym,
         mu=mu, rho=rho, k=topo.k_max, m=part.shard_size, H=part.halo_size,
         E=E, U=U, n_rec=n_rec, record_every=record_every,
-        exchange=exchange, codec=codec, tel=tel)
+        exchange=exchange, codec=codec, tel=tel, primal=primal)
     frames = None
     if tel:
         hist, theta, overflow, obj_h, stale_h, upd_h = outs

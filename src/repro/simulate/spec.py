@@ -47,7 +47,9 @@ class ScenarioSpec:
               batch, seed, record_every
     mp/joint: theta_sol (pure targets), c (confidence), alpha (Eq. 3 mix)
     cl:       data (AgentData), mu, rho (Eq. 7 / ADMM), state (warm ADMM
-              state; single-device only), theta_sol (warm start)
+              state; single-device only), theta_sol (warm start), primal
+              (PrimalSolver strategy — ``core.primal``; None = the exact
+              closed-form quadratic solve)
     joint:    eta_graph, lam, graph_every, prune_eps (DESIGN.md §13)
     events:   stream — precomputed EventStream override (cl/joint; the mp
               engine draws inline by the identical RNG schedule and
@@ -76,6 +78,7 @@ class ScenarioSpec:
     mu: Optional[float] = None
     rho: Optional[float] = None
     state: Any = None
+    primal: Any = None
     # joint graph-learning knobs
     eta_graph: float = 0.0
     lam: float = 1.0
@@ -108,6 +111,10 @@ class ScenarioSpec:
                 "algo='mp' draws its event stream inline (identical RNG "
                 "schedule); a stream override is only supported for "
                 "'cl'/'joint'")
+        if self.primal is not None and self.algo != "cl":
+            raise ValueError(
+                "primal solvers plug into the CL-ADMM engines only "
+                "(algo='cl')")
 
     def _require(self, **fields):
         for name, val in fields.items():
@@ -158,12 +165,13 @@ def run_scenario(spec: ScenarioSpec):
             trace = _partition.run_cl_scenario_sharded(
                 spec.topology, spec.data, spec.mu, spec.rho,
                 theta_sol=spec.theta_sol, stream=spec.stream,
-                **common, **shard_kw)
+                primal=spec.primal, **common, **shard_kw)
         else:
             trace = _engines.run_cl_scenario(
                 spec.topology, spec.data, spec.mu, spec.rho,
                 theta_sol=spec.theta_sol, state=spec.state,
-                stream=spec.stream, backend=spec.backend, **common)
+                stream=spec.stream, backend=spec.backend,
+                primal=spec.primal, **common)
     else:  # joint
         spec._require(theta_sol=spec.theta_sol, c=spec.c)
         joint_kw = dict(eta_graph=spec.eta_graph, lam=spec.lam,

@@ -81,6 +81,22 @@ def cl_local_objective(theta, K, nbr_w, live, D, m_counts, sx, sxx,
     return smooth + mu * D * loss
 
 
+def cl_local_objective_from_loss(theta, K, nbr_w, live, D, loss_vec,
+                                 mu: float):
+    """:func:`cl_local_objective` for arbitrary losses (DESIGN.md §18).
+
+    Nonlinear agents have no (m, sx, sxx) sufficient statistic, so the
+    engines evaluate ``loss_vec[i] = L_i(theta_i)`` directly (the inexact
+    primal's guarded loss, vmapped over agents) and only the consensus
+    term is computed here.  Row-local; shapes as in
+    :func:`cl_local_objective` with loss_vec (rows,) -> (rows,) float32.
+    """
+    d = theta[:, None, :] - K
+    wl = jnp.where(live, nbr_w, 0.0)
+    smooth = 0.5 * jnp.sum(wl * jnp.sum(d * d, axis=-1), axis=-1)
+    return smooth + mu * D * loss_vec
+
+
 def staleness_step(stale, got, rows, n_rows: int):
     """One round of per-agent staleness counters.
 

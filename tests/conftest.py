@@ -1,0 +1,29 @@
+"""Shared test configuration: deterministic hypothesis profiles.
+
+Hypothesis is an optional dev dependency (requirements-dev.txt): the suite
+must import cleanly without it (property tests guard with
+``pytest.importorskip``), so profile registration sits in a try/except.
+
+Profiles:
+
+* ``dev`` (default) — hypothesis defaults minus the deadline (jit
+  compilation makes first examples orders of magnitude slower than the
+  rest, so wall-clock deadlines only produce flaky failures).
+* ``ci`` — what the workflow selects via ``HYPOTHESIS_PROFILE=ci``:
+  derandomized (the same example sequence on every run, so a red CI lane
+  is reproducible locally by exporting the same variable) with a bounded
+  example count to keep the tier-1 lane fast.
+"""
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile("dev", deadline=None)
+    settings.register_profile(
+        "ci", deadline=None, derandomize=True, max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # pragma: no cover - exercised only without dev deps
+    pass

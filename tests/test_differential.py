@@ -1,0 +1,134 @@
+"""Differential test harness over ScenarioSpec (ISSUE: nonlinear primal).
+
+One invariant checker, two drivers: a pinned grid of cells that always
+runs (clean/faulty x exact/inexact x single/sharded), and a
+hypothesis-driven fuzzer (optional dev dep) that draws fault rates, RNG
+seeds, ADMM constants, and solver configs.  Invariants, per cell:
+
+* same-seed replay is bit-identical (theta history AND every counter);
+* message accounting: delivered + dropped == 2 * (events - invalid);
+* telemetry is observation-only — enabling it leaves theta bit-identical
+  to the anchor run;
+* exact-vs-inexact ordering: the B->inf quadratic configuration tracks
+  the exact engine to f32 rounding, and B=1 is never closer than B=128.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.losses import AgentData
+from repro.core.primal import ExactQuadraticPrimal, InexactPrimal
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            random_geometric_topology, run_scenario)
+from repro.telemetry import TelemetryConfig
+
+N, M, Q = 16, 6, 3   # one static shape -> every cell shares the jit cache
+
+
+def make_spec(data_seed=0, drop=0.0, stale=0.0, run_seed=0, mu=0.4,
+              rho=1.0, rounds=12, batch=6, **kw):
+    """One fuzzable scenario cell (fixed shapes, variable everything else)."""
+    rng = np.random.default_rng(data_seed)
+    topo = random_geometric_topology(N, k=4, seed=data_seed)
+    x = rng.standard_normal((N, M, Q)).astype(np.float32)
+    counts = rng.integers(1, M + 1, N)
+    mask = (np.arange(M)[None] < counts[:, None]).astype(np.float32)
+    data = AgentData(x=x, y=np.zeros((N, M), np.float32), mask=mask)
+    sol = (np.sum(x * mask[..., None], 1)
+           / np.maximum(counts, 1)[:, None]).astype(np.float32)
+    cfg = dict(algo="cl", topology=topo, data=data, mu=mu, rho=rho,
+               conditions=NetworkConditions(drop_prob=drop, stale_prob=stale),
+               rounds=rounds, batch=batch, seed=run_seed, record_every=4,
+               theta_sol=sol)
+    cfg.update(kw)
+    return ScenarioSpec(**cfg)
+
+
+def check_invariants(spec: ScenarioSpec):
+    """Run the cell twice (+ a telemetry twin) and assert the invariants."""
+    tr = run_scenario(spec)
+    assert tr.delivered + tr.dropped == 2 * (tr.events - tr.invalid)
+    assert np.isfinite(tr.theta_hist).all()
+    replay = run_scenario(spec)
+    assert np.array_equal(replay.theta_hist, tr.theta_hist)
+    assert (replay.delivered, replay.dropped, replay.invalid) == \
+        (tr.delivered, tr.dropped, tr.invalid)
+    import dataclasses
+    teled = run_scenario(dataclasses.replace(
+        spec, telemetry=TelemetryConfig(enabled=True)))
+    assert np.array_equal(teled.theta_hist, tr.theta_hist)
+    assert teled.telemetry is not None
+    return tr
+
+
+PRIMALS = {"none": None, "exact": ExactQuadraticPrimal(),
+           "b4": InexactPrimal(loss="quadratic", b_steps=4, lr=0.2),
+           "binf": InexactPrimal(loss="quadratic", b_steps=None)}
+
+
+class TestPinnedCells:
+    @pytest.mark.parametrize("primal", sorted(PRIMALS))
+    @pytest.mark.parametrize("drop,stale", [(0.0, 0.0), (0.25, 0.3)])
+    def test_invariants(self, primal, drop, stale):
+        check_invariants(make_spec(drop=drop, stale=stale,
+                                   primal=PRIMALS[primal]))
+
+    @pytest.mark.parametrize("primal", ["none", "binf"])
+    def test_invariants_sharded(self, primal):
+        check_invariants(make_spec(drop=0.2, primal=PRIMALS[primal],
+                                   sharded=True))
+
+    def test_exact_vs_inexact_ordering(self):
+        exact = run_scenario(make_spec(drop=0.2))
+        err = {}
+        for b in (None, 1, 128):
+            tr = run_scenario(make_spec(
+                drop=0.2,
+                primal=InexactPrimal(loss="quadratic", b_steps=b, lr=0.2)))
+            err[b] = float(np.abs(tr.theta_hist - exact.theta_hist).max())
+        assert err[None] <= 1e-5
+        assert err[128] <= err[1]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (optional dev dep; profiles in tests/conftest.py)
+# ---------------------------------------------------------------------------
+
+try:                                 # pinned cells above still run without
+    from hypothesis import given, settings, strategies as st
+except ImportError:                  # pragma: no cover - no-dev-deps envs
+    st = None
+
+if st is not None:
+    primal_st = st.one_of(
+        st.none(),
+        st.just(ExactQuadraticPrimal()),
+        st.builds(InexactPrimal, loss=st.just("quadratic"),
+                  b_steps=st.integers(1, 8),
+                  lr=st.sampled_from([0.05, 0.2])),
+        st.just(InexactPrimal(loss="quadratic", b_steps=None)))
+
+    class TestFuzzedCells:
+        @settings(max_examples=25, deadline=None)
+        @given(data_seed=st.integers(0, 2**16),
+               run_seed=st.integers(0, 2**16),
+               drop=st.floats(0.0, 0.5), stale=st.floats(0.0, 0.5),
+               mu=st.sampled_from([0.1, 0.4, 1.0]),
+               rho=st.sampled_from([0.5, 1.0]), primal=primal_st)
+        def test_invariants_hold_for_any_cell(self, data_seed, run_seed,
+                                              drop, stale, mu, rho, primal):
+            check_invariants(make_spec(
+                data_seed=data_seed, run_seed=run_seed, drop=drop,
+                stale=stale, mu=mu, rho=rho, primal=primal))
+
+        @settings(max_examples=10, deadline=None)
+        @given(data_seed=st.integers(0, 2**16),
+               run_seed=st.integers(0, 2**16), drop=st.floats(0.0, 0.4))
+        def test_b_inf_anchor_for_any_schedule(self, data_seed, run_seed,
+                                               drop):
+            exact = run_scenario(make_spec(data_seed=data_seed,
+                                           run_seed=run_seed, drop=drop))
+            inex = run_scenario(make_spec(
+                data_seed=data_seed, run_seed=run_seed, drop=drop,
+                primal=InexactPrimal(loss="quadratic", b_steps=None)))
+            assert np.abs(inex.theta_hist - exact.theta_hist).max() <= 1e-5

@@ -103,6 +103,27 @@ def _make_args(op, seed=0):
                 jnp.asarray(rng.integers(0, k, E), jnp.int32),
                 jnp.asarray(rng.uniform(size=E) < 0.4),
                 jnp.asarray(rng.uniform(size=E) < 0.7)), {"rho": 1.1}
+    if op == "admm_primal_inexact":
+        from repro.core.losses import guarded_loss
+        from repro.optim.adamw import AdamWConfig
+        k, p, m = 5, 6, 11
+        mask = (rng.uniform(size=m) < 0.7).astype(np.float32)
+        return (jnp.asarray(rng.uniform(0.1, 1, k), f32),
+                jnp.asarray(rng.uniform(size=k) < 0.7),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.asarray(rng.standard_normal((k, p)), f32),
+                jnp.float32(2.0),
+                jnp.asarray(rng.standard_normal((m, p)), f32),
+                jnp.asarray(rng.standard_normal(m), f32),
+                jnp.asarray(mask),
+                jnp.asarray(rng.standard_normal(p), f32),
+                0.3, 1.2), {"loss_fn": guarded_loss("quadratic"),
+                            "b_steps": 4,
+                            "opt": AdamWConfig(lr=0.1, weight_decay=0.0,
+                                               grad_clip=0.0,
+                                               moment_dtype=jnp.float32)}
     raise NotImplementedError(op)
 
 

@@ -1,0 +1,140 @@
+"""Padded-mask gradient hygiene (ISSUE satellite): under the inexact
+primal's per-batch ``guarded_loss``, pad slots contribute exactly zero
+value AND gradient — even when they hold non-finite garbage — and a
+scenario's trajectory is invariant to how wide its datasets are padded."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import (AgentData, LOSSES, guarded_loss, masked_sum,
+                               pad_datasets)
+from repro.core.primal import InexactPrimal, flat_predictor
+from repro.models import MLPAgent
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            random_geometric_topology, run_scenario)
+
+
+def poisoned_pad(x, y, counts, fill=np.nan):
+    """Padded (x, y, mask) whose pad slots hold ``fill`` garbage."""
+    n, m = x.shape[:2]
+    mask = (np.arange(m)[None] < np.asarray(counts)[:, None])
+    xg = np.where(mask[..., None], x, fill).astype(np.float32)
+    yg = np.where(mask, y, fill).astype(np.float32)
+    return (jnp.asarray(xg), jnp.asarray(yg),
+            jnp.asarray(mask, jnp.float32))
+
+
+@pytest.mark.parametrize("loss", ["quadratic", "hinge", "logistic"])
+@pytest.mark.parametrize("fill", [np.nan, np.inf])
+class TestGuardedLoss:
+    def test_pad_garbage_has_zero_value_and_gradient(self, loss, fill):
+        rng = np.random.default_rng(0)
+        m, q, m_i = 8, 3, 5
+        x = rng.standard_normal((1, m, q))
+        y = np.sign(rng.standard_normal((1, m))) + 0.0
+        theta = jnp.asarray(rng.standard_normal(q), jnp.float32)
+        xg, yg, mask = poisoned_pad(x, y, [m_i], fill)
+        xz, yz, _ = poisoned_pad(x, y, [m_i], 0.0)
+        fn = guarded_loss(loss)
+        val_g, grad_g = jax.value_and_grad(fn)(theta, xg[0], yg[0], mask[0])
+        val_z, grad_z = jax.value_and_grad(fn)(theta, xz[0], yz[0], mask[0])
+        assert np.isfinite(float(val_g)) and np.isfinite(
+            np.asarray(grad_g)).all()
+        # the double-where makes garbage pads indistinguishable from zeros
+        np.testing.assert_array_equal(np.asarray(val_g), np.asarray(val_z))
+        np.testing.assert_array_equal(np.asarray(grad_g),
+                                      np.asarray(grad_z))
+        # and the unpadded dataset agrees (pad slots contribute nothing)
+        val_u, grad_u = jax.value_and_grad(fn)(
+            theta, jnp.asarray(x[0, :m_i], jnp.float32),
+            jnp.asarray(y[0, :m_i], jnp.float32), jnp.ones(m_i))
+        np.testing.assert_allclose(np.asarray(val_g), np.asarray(val_u),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(grad_g), np.asarray(grad_u),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_legacy_losses_need_zero_filled_pads(self, loss, fill):
+        """The closed-form sums mask *after* the model: 0 * inf = nan, so
+        they rely on pad_datasets zero-fill — the regression guarded_loss
+        exists to close for the differentiating primal."""
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((1, 6, 3))
+        y = np.ones((1, 6))
+        xg, yg, mask = poisoned_pad(x, y, [4], fill)
+        theta = jnp.asarray(rng.standard_normal(3), jnp.float32)
+        legacy = float(LOSSES[loss](theta, xg[0], yg[0], mask[0]))
+        guarded = float(guarded_loss(loss)(theta, xg[0], yg[0], mask[0]))
+        assert not np.isfinite(legacy)
+        assert np.isfinite(guarded)
+
+
+class TestGuardedLossModels:
+    def test_masked_sum_zeroes_pad_cotangent(self):
+        vals = jnp.asarray([1.0, 2.0, 3.0])
+        mask = jnp.asarray([1.0, 0.0, 1.0])
+        grad = jax.grad(lambda v: masked_sum(v, mask))(vals)
+        np.testing.assert_array_equal(np.asarray(grad), [1.0, 0.0, 1.0])
+
+    def test_mlp_predictor_survives_poisoned_pads(self):
+        model = MLPAgent(in_dim=2, hidden=(4,))
+        flat = model.flattener()
+        theta = flat.flatten(model.init(jax.random.PRNGKey(0)))
+        rng = np.random.default_rng(2)
+        x = rng.standard_normal((1, 5, 2))
+        y = np.sign(rng.standard_normal((1, 5))) + 0.0
+        xg, yg, mask = poisoned_pad(x, y, [3])
+        fn = guarded_loss("logistic", flat_predictor(model))
+        val, grad = jax.value_and_grad(fn)(theta, xg[0], yg[0], mask[0])
+        assert np.isfinite(float(val))
+        assert np.isfinite(np.asarray(grad)).all()
+
+    def test_matches_legacy_on_clean_pads(self):
+        """On zero-filled pads (the pad_datasets contract) guarded and
+        legacy losses agree — guarding changes nothing but robustness."""
+        rng = np.random.default_rng(3)
+        data = pad_datasets(
+            [rng.standard_normal((m, 3)) for m in (2, 5, 1)],
+            [np.sign(rng.standard_normal(m)) for m in (2, 5, 1)])
+        theta = jnp.asarray(rng.standard_normal(3), jnp.float32)
+        for loss in ("quadratic", "hinge", "logistic"):
+            for i in range(3):
+                a = float(LOSSES[loss](theta, data.x[i], data.y[i],
+                                       data.mask[i]))
+                b = float(guarded_loss(loss)(theta, data.x[i], data.y[i],
+                                             data.mask[i]))
+                np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+class TestUnbalancedAgentsThroughPrimal:
+    def test_trajectory_invariant_to_padding_width(self):
+        """m_i-unbalanced agents: widening every dataset with extra
+        garbage pad columns leaves the inexact-primal scenario trajectory
+        bit-identical — the engines only ever see the masked samples."""
+        rng = np.random.default_rng(4)
+        n, m, q = 12, 5, 3
+        topo = random_geometric_topology(n, k=3, seed=0)
+        x = rng.standard_normal((n, m, q))
+        y = np.sign(rng.standard_normal((n, m))) + 0.0
+        counts = rng.integers(1, m + 1, n)
+        xg, yg, mask = poisoned_pad(x, y, counts, 0.0)
+        narrow = AgentData(x=xg, y=yg, mask=mask)
+        pad_x = np.concatenate(
+            [np.asarray(xg), np.full((n, 3, q), np.nan, np.float32)], 1)
+        pad_y = np.concatenate(
+            [np.asarray(yg), np.full((n, 3), np.inf, np.float32)], 1)
+        pad_m = np.concatenate(
+            [np.asarray(mask), np.zeros((n, 3), np.float32)], 1)
+        wide = AgentData(x=jnp.asarray(pad_x), y=jnp.asarray(pad_y),
+                         mask=jnp.asarray(pad_m))
+        sol = np.zeros((n, q), np.float32)
+        base = dict(algo="cl", topology=topo, mu=0.5, rho=1.0,
+                    conditions=NetworkConditions(drop_prob=0.2), rounds=15,
+                    batch=4, seed=2, record_every=5, theta_sol=sol,
+                    primal=InexactPrimal(loss="logistic", b_steps=6,
+                                         lr=0.1))
+        a = run_scenario(ScenarioSpec(**base, data=narrow))
+        b = run_scenario(ScenarioSpec(**base, data=wide))
+        assert np.isfinite(a.theta_hist).all()
+        np.testing.assert_array_equal(a.theta_hist, b.theta_hist)

@@ -1,0 +1,272 @@
+"""Pluggable CL-ADMM primal solvers (DESIGN.md §18): flattener bijection,
+the exact-solver and B->inf inexact anchors against the historical engine
+(single-device bitwise; 8-fake-device subprocess to f32 rounding), finite-B
+convergence ordering, and the federated_moons acceptance experiment where
+collaborative nonlinear training beats purely-local AdamW by >= 5 points."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.losses import pad_datasets, solitary_mean
+from repro.core.primal import (ExactQuadraticPrimal, InexactPrimal,
+                               flat_predictor, solitary_adamw)
+from repro.data import federated_moons_problem, model_accuracy
+from repro.kernels.dispatch import implementations
+from repro.models import LoRAAgent, MLPAgent, ParamFlattener
+from repro.models.flatten import _lora_base
+from repro.simulate import (NetworkConditions, ScenarioSpec,
+                            random_geometric_topology, run_scenario)
+from repro.telemetry import TelemetryConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def quadratic_problem(n=24, q=3, seed=0):
+    """Small mean-estimation instance with unbalanced per-agent counts."""
+    rng = np.random.default_rng(seed)
+    topo = random_geometric_topology(n, k=4, seed=seed)
+    xs = [rng.standard_normal((int(rng.integers(2, 9)), q))
+          for _ in range(n)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    sol = np.asarray(solitary_mean(data), np.float32)
+    return topo, data, sol
+
+
+def base_spec(topo, data, sol, **kw):
+    cfg = dict(algo="cl", topology=topo, data=data, mu=0.4, rho=1.0,
+               conditions=NetworkConditions(drop_prob=0.1, stale_prob=0.2),
+               rounds=30, batch=8, seed=3, record_every=10, theta_sol=sol)
+    cfg.update(kw)
+    return ScenarioSpec(**cfg)
+
+
+class TestParamFlattener:
+    def test_round_trip_is_bitwise(self):
+        rng = np.random.default_rng(0)
+        tree = {"a": rng.standard_normal((3, 4)).astype(np.float32),
+                "b": (rng.standard_normal(5).astype(np.float32),
+                      np.float32(rng.standard_normal()))}
+        flat = ParamFlattener.from_template(tree)
+        assert flat.dim == 3 * 4 + 5 + 1
+        vec = flat.flatten(tree)
+        assert vec.shape == (flat.dim,) and vec.dtype == np.float32
+        back = flat.unflatten(vec)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(flat.flatten(back)),
+                                      np.asarray(vec))
+
+    def test_mlp_agent_shapes_and_flat_apply(self):
+        model = MLPAgent(in_dim=2, hidden=(4,))
+        flat = model.flattener()
+        assert flat.dim == 2 * 4 + 4 + 4 * 1 + 1
+        params = model.init(jax.random.PRNGKey(0))
+        x = np.random.default_rng(1).standard_normal((7, 2)).astype(
+            np.float32)
+        scores = model.apply(params, x)
+        assert scores.shape == (7,)
+        pred = flat_predictor(model)
+        np.testing.assert_array_equal(
+            np.asarray(pred(flat.flatten(params), x)), np.asarray(scores))
+
+    def test_lora_agent_base_is_deterministic(self):
+        model = LoRAAgent(in_dim=3, width=8, rank=2, base_seed=5)
+        flat = model.flattener()
+        assert flat.dim == 2 * (3 + 8) + 8 + 1
+        w0, b0 = _lora_base(3, 8, 5)
+        w0b, b0b = _lora_base(3, 8, 5)
+        np.testing.assert_array_equal(np.asarray(w0), np.asarray(w0b))
+        assert not np.array_equal(np.asarray(w0),
+                                  np.asarray(_lora_base(3, 8, 6)[0]))
+        # standard LoRA init: B = 0, so two agents with different adapters
+        # but the same head start at the same function of the frozen layer
+        pa = model.init(jax.random.PRNGKey(0))
+        pb = dict(pa, a=model.init(jax.random.PRNGKey(9))["a"])
+        x = np.random.default_rng(2).standard_normal((5, 3)).astype(
+            np.float32)
+        np.testing.assert_array_equal(np.asarray(model.apply(pa, x)),
+                                      np.asarray(model.apply(pb, x)))
+
+    def test_inexact_primal_validates_config(self):
+        with pytest.raises(ValueError):
+            InexactPrimal(loss="absolute")
+        with pytest.raises(ValueError):
+            InexactPrimal(loss="logistic", b_steps=None)
+        with pytest.raises(ValueError):
+            InexactPrimal(loss="quadratic", model=MLPAgent(in_dim=2))
+        with pytest.raises(ValueError):
+            ScenarioSpec(algo="mp", topology=None,
+                         conditions=NetworkConditions(), rounds=1, batch=1,
+                         primal=ExactQuadraticPrimal())
+
+    def test_inexact_op_is_registered(self):
+        impls = implementations("admm_primal_inexact")
+        assert {"reference", "xla"} <= set(impls)
+
+
+class TestPrimalAnchors:
+    """The acceptance anchors: pluggable solvers vs the historical engine."""
+
+    @pytest.fixture(scope="class")
+    def runs(self):
+        topo, data, sol = quadratic_problem()
+        exact = run_scenario(base_spec(topo, data, sol))
+        return topo, data, sol, exact
+
+    def test_exact_solver_is_bitwise_primal_none(self, runs):
+        topo, data, sol, exact = runs
+        tr = run_scenario(base_spec(topo, data, sol,
+                                    primal=ExactQuadraticPrimal()))
+        assert np.array_equal(tr.theta_hist, exact.theta_hist)
+        assert (tr.delivered, tr.dropped, tr.invalid) == \
+            (exact.delivered, exact.dropped, exact.invalid)
+
+    def test_b_inf_quadratic_reproduces_exact(self, runs):
+        """The B->inf fixed point of the reduced Lagrangian IS the closed
+        form (envelope argument, kernels.ref.inexact_primal docstring) —
+        trajectories match to f32 rounding on the identical schedule."""
+        topo, data, sol, exact = runs
+        tr = run_scenario(base_spec(
+            topo, data, sol,
+            primal=InexactPrimal(loss="quadratic", b_steps=None)))
+        assert np.abs(tr.theta_hist - exact.theta_hist).max() <= 1e-5
+
+    def test_finite_b_converges_to_exact(self, runs):
+        """More inner AdamW steps -> closer to the exact primal (the
+        exact-vs-inexact ordering the differential harness also fuzzes)."""
+        topo, data, sol, exact = runs
+        errs = {}
+        for b in (1, 8, 128):
+            tr = run_scenario(base_spec(
+                topo, data, sol,
+                primal=InexactPrimal(loss="quadratic", b_steps=b, lr=0.2)))
+            errs[b] = float(np.abs(tr.theta_hist - exact.theta_hist).max())
+        assert errs[128] < errs[8] < errs[1]
+        assert errs[128] <= 1e-3
+        assert errs[1] > 1e-2      # B=1 is genuinely inexact, not a no-op
+
+    def test_telemetry_does_not_perturb_inexact_trajectory(self, runs):
+        """Telemetry-enabled nonlinear runs must leave theta bit-identical
+        (the metrics read the carry; the loss-based objective replaces the
+        sufficient-statistics path only outside the scan state)."""
+        topo, data, sol, _ = runs
+        primal = InexactPrimal(loss="quadratic", b_steps=4, lr=0.2)
+        plain = run_scenario(base_spec(topo, data, sol, primal=primal))
+        teled = run_scenario(base_spec(topo, data, sol, primal=primal,
+                                       telemetry=TelemetryConfig(
+                                           enabled=True)))
+        assert np.array_equal(plain.theta_hist, teled.theta_hist)
+        assert teled.telemetry is not None
+        assert np.isfinite(np.asarray(teled.telemetry.objective)).all()
+
+
+class TestFederatedMoons:
+    """ISSUE acceptance: per-cluster nonlinear decision boundaries where
+    collaboration beats purely-local training by >= 5 accuracy points."""
+
+    def test_problem_shapes(self):
+        topo, train, tx, ty = federated_moons_problem(n=12, n_clusters=2,
+                                                      n_test=32, seed=1)
+        assert topo.n == 12 and train.n == 12
+        assert tx.shape == (12, 32, 2) and ty.shape == (12, 32)
+        assert set(np.unique(ty).tolist()) == {-1.0, 1.0}
+        counts = np.asarray(train.counts)
+        assert counts.min() >= 3 and counts.max() <= 8
+
+    def test_collaboration_beats_local_by_5_points(self):
+        model = MLPAgent(in_dim=2, hidden=(8,))
+        pred = flat_predictor(model)
+        topo, train, tx, ty = federated_moons_problem(n=24, seed=0)
+        sol = solitary_adamw(train, loss="logistic", model=model,
+                             steps=400, seed=0)
+        acc_sol = float(model_accuracy(sol, pred, tx, ty).mean())
+        tr = run_scenario(ScenarioSpec(
+            algo="cl", topology=topo, data=train, mu=0.5, rho=0.2,
+            conditions=NetworkConditions(), rounds=300, batch=12, seed=0,
+            record_every=100, theta_sol=np.asarray(sol),
+            primal=InexactPrimal(loss="logistic", model=model,
+                                 b_steps=10, lr=0.1),
+            telemetry=TelemetryConfig(enabled=True)))
+        acc = float(model_accuracy(tr.theta_hist[-1], pred, tx, ty).mean())
+        # margin measured at ~+11 points (seeds 0-2); 5 is the ISSUE bar
+        assert acc - acc_sol >= 0.05, (acc, acc_sol)
+        # reported via telemetry frames: Eq. 7 objective decreases
+        obj = np.asarray(tr.telemetry.objective).sum(axis=1)
+        assert np.isfinite(obj).all() and obj[-1] < obj[0]
+
+
+# ---------------------------------------------------------------------------
+# 8-fake-device subprocess: the solver plug-ins under the real sharded mesh
+# (the XLA device-count flag must precede jax init, already done by pytest)
+# ---------------------------------------------------------------------------
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    assert jax.device_count() == 8
+    from repro.core.losses import pad_datasets, solitary_mean
+    from repro.core.primal import InexactPrimal, solitary_adamw
+    from repro.models import MLPAgent
+    from repro.data import federated_moons_problem
+    from repro.simulate import (NetworkConditions, ScenarioSpec,
+                                random_geometric_topology, run_scenario)
+
+    # quadratic B->inf anchor: sharded inexact == single-device exact
+    rng = np.random.default_rng(0)
+    n = 203                           # not divisible by 8
+    topo = random_geometric_topology(n, k=5, seed=0)
+    xs = [rng.standard_normal((int(rng.integers(1, 8)), 4))
+          for _ in range(n)]
+    data = pad_datasets(xs, [np.zeros(len(x)) for x in xs])
+    sol = np.asarray(solitary_mean(data), np.float32)
+    cond = NetworkConditions(drop_prob=0.1, stale_prob=0.3, churn_rate=0.01,
+                             straggler_frac=0.3, partition_start=5,
+                             partition_end=20)
+    base = dict(algo="cl", topology=topo, data=data, mu=0.1, rho=1.0,
+                conditions=cond, rounds=40, batch=32, seed=3,
+                record_every=10, theta_sol=sol)
+    exact = run_scenario(ScenarioSpec(**base))
+    sh = run_scenario(ScenarioSpec(
+        **base, sharded=True,
+        primal=InexactPrimal(loss="quadratic", b_steps=None)))
+    assert sh.n_shards == 8 and sh.overflow == 0
+    assert np.abs(sh.theta_hist - exact.theta_hist).max() <= 1e-5
+
+    # nonlinear MLP agents: sharded == single-device inexact trajectories
+    model = MLPAgent(in_dim=2, hidden=(4,))
+    topo2, train, _, _ = federated_moons_problem(n=24, seed=0)
+    sol2 = np.asarray(solitary_adamw(train, loss="logistic", model=model,
+                                     steps=50, seed=0))
+    base2 = dict(algo="cl", topology=topo2, data=train, mu=0.5, rho=0.5,
+                 conditions=NetworkConditions(drop_prob=0.1), rounds=30,
+                 batch=8, seed=1, record_every=10, theta_sol=sol2,
+                 primal=InexactPrimal(loss="logistic", model=model,
+                                      b_steps=4, lr=0.05))
+    single = run_scenario(ScenarioSpec(**base2))
+    shnl = run_scenario(ScenarioSpec(**base2, sharded=True))
+    assert shnl.overflow == 0
+    assert np.abs(shnl.theta_hist - single.theta_hist).max() <= 1e-5
+    assert np.isfinite(shnl.theta_hist).all()
+    print("PRIMAL-8DEV-OK")
+""")
+
+
+def test_eight_device_primal_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "PRIMAL-8DEV-OK" in out.stdout

@@ -119,3 +119,30 @@ def test_admm_sweep_matches_sync_admm():
                                            trc.theta_hist[-1],
                                            atol=1e-4, rtol=1e-4)
                 i += 1
+
+
+def test_inexact_primal_axis_sweeps_solver_configs():
+    """A primal= axis over inner-step budgets: the b_steps=None column is
+    the exact-engine anchor, finite columns are genuinely inexact."""
+    from repro.core.losses import pad_datasets
+    from repro.experiments import inexact_primal_axis, run_scenario_sweep
+    from repro.simulate import (NetworkConditions, ScenarioSpec,
+                                random_geometric_topology, run_scenario)
+
+    rng = np.random.default_rng(0)
+    n = 12
+    topo = random_geometric_topology(n, k=3, seed=0)
+    xs = [rng.standard_normal((4, 2)) for _ in range(n)]
+    data = pad_datasets(xs, [np.zeros(4)] * n)
+    sol = np.asarray(data.x.mean(axis=1), np.float32)
+    base = ScenarioSpec(algo="cl", topology=topo, data=data, mu=0.4,
+                        rho=1.0, conditions=NetworkConditions(), rounds=10,
+                        batch=4, seed=1, record_every=5, theta_sol=sol)
+    axis = inexact_primal_axis([2, None], loss="quadratic", lr=0.2)
+    res = run_scenario_sweep(base, primal=axis)
+    assert res.n_trials == 2
+    assert res.cells[0]["primal"].b_steps == 2
+    exact = run_scenario(base)
+    err_b2 = np.abs(res.traces[0].theta_hist - exact.theta_hist).max()
+    err_inf = np.abs(res.traces[1].theta_hist - exact.theta_hist).max()
+    assert err_inf <= 1e-5 < err_b2

@@ -1,0 +1,64 @@
+"""Enforce per-package coverage floors from a coverage.py JSON report.
+
+Stdlib-only (like tools/lint): the CI test lane runs pytest with
+``--cov … --cov-report=json:coverage.json`` and then gates on this
+script, which aggregates covered/total executable lines per configured
+package prefix and fails when any package is under its floor.
+
+    python tools/check_coverage.py coverage.json
+
+Floors live here (not in pytest.ini) so a local ``pytest`` run without
+pytest-cov installed is unaffected.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# package path prefix (as it appears in the report) -> minimum % covered
+FLOORS = {
+    "src/repro/optim": 85.0,
+    "src/repro/train": 85.0,
+}
+
+
+def package_rates(files: dict) -> dict:
+    """prefix -> (covered, total) aggregated over the report's files."""
+    totals = {prefix: [0, 0] for prefix in FLOORS}
+    for path, entry in files.items():
+        norm = path.replace("\\", "/")
+        for prefix in FLOORS:
+            if norm.startswith(prefix + "/") or norm == prefix:
+                s = entry["summary"]
+                totals[prefix][0] += s["covered_lines"]
+                totals[prefix][1] += s["num_statements"]
+    return totals
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="coverage.py JSON report path")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        files = json.load(f)["files"]
+
+    failures = 0
+    for prefix, (covered, total) in sorted(package_rates(files).items()):
+        floor = FLOORS[prefix]
+        if total == 0:
+            print(f"FAIL {prefix}: no measured files (report ran without "
+                  f"--cov for this package?)")
+            failures += 1
+            continue
+        pct = 100.0 * covered / total
+        status = "ok  " if pct >= floor else "FAIL"
+        print(f"{status} {prefix}: {pct:.1f}% ({covered}/{total} lines, "
+              f"floor {floor:.0f}%)")
+        failures += pct < floor
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
